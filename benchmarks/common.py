@@ -1,0 +1,67 @@
+"""Shared benchmark plumbing: dataset construction (paper §5.1.3 sliding
+window streams over RMAT / web-like / ER graphs, scaled to this container),
+timing helpers, CSV emission.
+
+Scale note: the paper runs 5M-80M edge graphs on a 64-core Xeon; this
+container is one CPU device, so the suite uses graphs of 10k-200k edges.
+Every TREND the paper reports (latency gap vs from-scratch, stability,
+throughput vs delta, batch-size sensitivity) is scale-free; absolute
+numbers are not comparable and are not claimed to be.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import events as ev
+from repro.graphs import generators as gen
+from repro.graphs import window as win
+
+
+@dataclasses.dataclass(frozen=True)
+class Dataset:
+    name: str
+    n: int
+    src: np.ndarray
+    dst: np.ndarray
+    w: np.ndarray
+    sources: np.ndarray   # top-3 in-degree vertices (PageRank proxy)
+
+
+def datasets(small: bool = False) -> list[Dataset]:
+    """web-Google-like, RMAT and wikipedia-growth-like streams (scaled)."""
+    out = []
+    scale = 11 if small else 13
+    n, s, d, w = gen.rmat(scale, edge_factor=8, seed=1)
+    out.append(Dataset("rmat", n, s, d, w, gen.top_in_degree_sources(n, d)))
+    n2 = 1 << (scale - 1)
+    m2 = n2 * 10
+    n2, s2, d2, w2 = gen.power_law_hubs(n2, m2, n_hubs=3, seed=2)
+    out.append(Dataset("webg", n2, s2, d2, w2,
+                       gen.top_in_degree_sources(n2, d2)))
+    return out
+
+
+def stream_for(ds: Dataset, *, window_frac: float, delta: float,
+               query_every: int, seed: int = 0) -> ev.EventLog:
+    window = max(1, int(len(ds.src) * window_frac))
+    log = win.sliding_window_stream(ds.src, ds.dst, ds.w, window=window,
+                                    delta=delta, seed=seed)
+    return ev.interleave_queries(log, query_every)
+
+
+def pctile(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if len(xs) else float("nan")
+
+
+class CsvSink:
+    def __init__(self):
+        self.rows: list[str] = []
+
+    def emit(self, bench: str, **kv):
+        kvs = ",".join(f"{k}={v}" for k, v in kv.items())
+        row = f"{bench},{kvs}"
+        self.rows.append(row)
+        print(row, flush=True)

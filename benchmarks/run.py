@@ -1,0 +1,123 @@
+"""Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Sections:
+  * SSSP-Del paper tables/figures (benchmarks/bench_sssp.py) with Dijkstra
+    oracle cross-checks — one function per paper table/figure;
+  * kernel micro-benchmarks (Pallas interpret-mode vs jnp reference);
+  * roofline table distilled from the dry-run reports (if reports/ exists).
+
+``--small`` shrinks graphs for CI-speed runs; ``--only <prefix>`` filters.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from benchmarks import common as C
+
+
+def run_sssp(sink: C.CsvSink, small: bool, only: str | None) -> None:
+    from benchmarks import bench_sssp
+    for fn in bench_sssp.ALL:
+        if only and only not in fn.__name__:
+            continue
+        t0 = time.perf_counter()
+        fn(sink, small)
+        sink.emit("section_done", name=fn.__name__,
+                  wall_s=f"{time.perf_counter() - t0:.1f}")
+
+
+def run_kernels(sink: C.CsvSink, small: bool) -> None:
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.relax import ops as relax_ops
+    from repro.kernels.spmm import ops as spmm_ops
+    from repro.kernels.embed_bag import ops as eb_ops
+    rng = np.random.default_rng(0)
+
+    n, k = (256, 16) if small else (1024, 32)
+    nbr = jnp.asarray(rng.integers(0, n, (n, k)), jnp.int32)
+    w = jnp.asarray(rng.random((n, k)).astype(np.float32))
+    dist = jnp.asarray(rng.random(n).astype(np.float32))
+    parent = jnp.full((n,), -1, jnp.int32)
+    for name, use_kernel in (("pallas_interp", True), ("jnp_ref", False)):
+        t0 = time.perf_counter()
+        out = relax_ops.relax_wave(dist, parent, nbr, w,
+                                   use_kernel=use_kernel)
+        jax.block_until_ready(out)
+        sink.emit("kernel_relax", impl=name, n=n, k=k,
+                  ms=f"{(time.perf_counter()-t0)*1e3:.1f}")
+
+    feats = jnp.asarray(rng.random((n, 64)).astype(np.float32))
+    msk = jnp.asarray(rng.random((n, k)) < 0.8)
+    for name, use_kernel in (("pallas_interp", True), ("jnp_ref", False)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(spmm_ops.neighbor_reduce(
+            feats, nbr, msk, agg="sum", use_kernel=use_kernel))
+        sink.emit("kernel_spmm", impl=name, n=n, k=k,
+                  ms=f"{(time.perf_counter()-t0)*1e3:.1f}")
+
+    table = jnp.asarray(rng.random((4096, 32)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 4096, (n, 8)), jnp.int32)
+    for name, use_kernel in (("pallas_interp", True), ("jnp_ref", False)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(eb_ops.bag_lookup(table, idx, agg="sum",
+                                                use_kernel=use_kernel))
+        sink.emit("kernel_embed_bag", impl=name, bags=n,
+                  ms=f"{(time.perf_counter()-t0)*1e3:.1f}")
+
+
+def run_roofline_table(sink: C.CsvSink) -> None:
+    shown = 0
+    for base, variant in (("reports/dryrun", "baseline"),
+                          ("reports/perf/flash_vjp", "flash_vjp"),
+                          ("reports/perf/opt", "opt")):
+        if not os.path.isdir(base):
+            continue
+        for mesh in sorted(os.listdir(base)):
+            d = os.path.join(base, mesh)
+            if not os.path.isdir(d):
+                continue
+            for f in sorted(os.listdir(d)):
+                if not f.endswith(".json"):
+                    continue
+                rec = json.load(open(os.path.join(d, f)))
+                if not rec.get("ok"):
+                    continue
+                r = rec["roofline"]
+                sink.emit("roofline", variant=variant, mesh=mesh,
+                          cell=f[:-5], dominant=r["dominant"],
+                          compute_s=f"{r['compute_s']:.3e}",
+                          memory_s=f"{r['memory_s']:.3e}",
+                          collective_s=f"{r['collective_s']:.3e}",
+                          peak_gb=f"{rec['memory']['peak_per_device_gb']:.2f}")
+                shown += 1
+    if not shown:
+        sink.emit("roofline", note="no reports found; run "
+                  "PYTHONPATH=src python -m repro.launch.dryrun --all first")
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--small", action="store_true")
+    p.add_argument("--only")
+    p.add_argument("--skip-kernels", action="store_true")
+    args = p.parse_args()
+    sink = C.CsvSink()
+    t0 = time.perf_counter()
+    run_sssp(sink, args.small, args.only)
+    if not args.skip_kernels and not args.only:
+        run_kernels(sink, args.small)
+    if not args.only:
+        run_roofline_table(sink)
+    sink.emit("all_done", wall_s=f"{time.perf_counter() - t0:.1f}",
+              rows=len(sink.rows))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

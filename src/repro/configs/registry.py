@@ -1,0 +1,550 @@
+"""Architecture/shape registry: every (arch x input-shape) cell as a
+lowerable program.
+
+``build_program(arch, shape, mesh)`` returns a ``Program`` carrying the
+step function, ShapeDtypeStruct inputs (no allocation), and the
+in/out shardings for the production mesh — consumed by launch/dryrun.py,
+the roofline analyzer, and the perf harness.
+
+``build_smoke(arch)`` returns a runnable REDUCED-config program with real
+(tiny) arrays for the per-arch CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from contextlib import nullcontext as _nullcontext
+from functools import partial
+from typing import Any, Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import (din as c_din, dimenet as c_dimenet,
+                           equiformer_v2 as c_eqv2,
+                           graphsage_reddit as c_sage,
+                           meshgraphnet as c_mgn,
+                           minicpm3_4b as c_minicpm,
+                           mistral_large_123b as c_mistral,
+                           moonshot_v1_16b_a3b as c_moonshot,
+                           olmoe_1b_7b as c_olmoe,
+                           qwen3_14b as c_qwen,
+                           sssp_del as c_sssp)
+from repro.models import din as din_mod
+from repro.models import sharding as shd
+from repro.models import transformer as tfm
+from repro.models.gnn import (dimenet as dimenet_mod, equiformer as eqv2_mod,
+                              graphsage as sage_mod,
+                              meshgraphnet as mgn_mod)
+from repro.train import optimizer as opt_mod
+from repro.train import steps as steps_mod
+
+ARCHES = {
+    m.ARCH_ID: m for m in (
+        c_olmoe, c_moonshot, c_minicpm, c_mistral, c_qwen,
+        c_mgn, c_sage, c_dimenet, c_eqv2, c_din, c_sssp)
+}
+
+LM_SHAPES = {
+    "train_4k":    dict(kind="train",   seq=4096,   batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768,  batch=32),
+    "decode_32k":  dict(kind="decode",  seq=32768,  batch=128),
+    "long_500k":   dict(kind="decode",  seq=524288, batch=1,
+                        skip="pure full-attention arch: 500k decode is "
+                             "sub-quadratic-only per the assignment"),
+}
+GNN_SHAPES = {
+    "full_graph_sm": dict(kind="train", n=2708, e=10556, d_feat=1433,
+                          classes=7),
+    "minibatch_lg":  dict(kind="train", n_total=232_965, e_total=114_615_892,
+                          batch_nodes=1024, fanout=(15, 10), d_feat=602,
+                          classes=41),
+    "ogb_products":  dict(kind="train", n=2_449_029, e=61_859_140,
+                          d_feat=100, classes=47),
+    "molecule":      dict(kind="train", n=30, e=64, batch=128, graph=True),
+}
+DIN_SHAPES = {
+    "train_batch":    dict(kind="train", batch=65_536),
+    "serve_p99":      dict(kind="serve", batch=512),
+    "serve_bulk":     dict(kind="serve", batch=262_144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_cand=1_000_000),
+}
+SSSP_SHAPES = {
+    "relax_rmat24":  dict(kind="relax", n=1 << 24, epp=1 << 20),
+    "delete_rmat24": dict(kind="delete", n=1 << 24, epp=1 << 20),
+    "relax_web1b":   dict(kind="relax", n=1 << 26, epp=1 << 22),
+    "delete_web1b":  dict(kind="delete", n=1 << 26, epp=1 << 22),
+}
+
+FAMILY_SHAPES = {"lm": LM_SHAPES, "gnn": GNN_SHAPES, "recsys": DIN_SHAPES,
+                 "sssp": SSSP_SHAPES}
+
+# padding unit that divides both production meshes (256 and 512 devices)
+PAD = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    skip: str | None = None
+
+
+@dataclasses.dataclass
+class Program:
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple
+    meta: dict
+
+
+def all_cells(include_sssp: bool = True) -> list[Cell]:
+    cells = []
+    for arch_id, mod in ARCHES.items():
+        if mod.FAMILY == "sssp" and not include_sssp:
+            continue
+        for shape, info in FAMILY_SHAPES[mod.FAMILY].items():
+            cells.append(Cell(arch=arch_id, shape=shape, kind=info["kind"],
+                              skip=info.get("skip")))
+    return cells
+
+
+def _pad(n: int, m: int = PAD) -> int:
+    return -(-n // m) * m
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _replicated_tree(tree, mesh):
+    return jax.tree.map(lambda _: _ns(mesh, P()), tree)
+
+
+# ===================================================================== LM ====
+
+def _lm_cast(pshape, dtype):
+    return jax.tree.map(lambda s: _sds(s.shape, dtype), pshape)
+
+
+def _lm_train_program(cfg: tfm.LMConfig, mesh: Mesh, info) -> Program:
+    pshape = tfm.lm_param_shapes(cfg)
+    oshape = jax.eval_shape(opt_mod.adamw_init, pshape)
+    pspec = shd.lm_param_specs(pshape, mesh)
+    psh = jax.tree.map(lambda s: _ns(mesh, s), pspec,
+                       is_leaf=lambda x: isinstance(x, P))
+    osh = {"m": psh, "v": psh, "step": _ns(mesh, P())}
+    bx = shd.batch_axes(mesh)
+    A, B, S = cfg.grad_accum, info["batch"], info["seq"]
+    mb = B // A
+    if A > 1:
+        batch = {"tokens": _sds((A, mb, S), jnp.int32),
+                 "labels": _sds((A, mb, S), jnp.int32)}
+        bsh = jax.tree.map(lambda _: _ns(mesh, P(None, bx, None)), batch)
+    else:
+        batch = {"tokens": _sds((B, S), jnp.int32),
+                 "labels": _sds((B, S), jnp.int32)}
+        bsh = jax.tree.map(lambda _: _ns(mesh, P(bx, None)), batch)
+
+    loss_fn = partial(lm_loss_adapter, cfg=cfg)
+    step = steps_mod.make_train_step(loss_fn, opt_mod.AdamWConfig(), A)
+    step = _with_act_sharding(step, cfg, mesh)
+    metrics_shape = jax.eval_shape(step, pshape, oshape, batch)[2]
+    msh = _replicated_tree(metrics_shape, mesh)
+    return Program(
+        fn=step, args=(pshape, oshape, batch),
+        in_shardings=(psh, osh, bsh),
+        out_shardings=(psh, osh, msh),
+        donate_argnums=(0, 1),
+        meta={"model_flops": cfg.model_flops(B * S, train=True),
+              "tokens": B * S, "params": cfg.param_count(),
+              "active_params": cfg.active_param_count()})
+
+
+def lm_loss_adapter(params, batch, cfg):
+    return tfm.lm_loss(params, batch, cfg)
+
+
+def _with_act_sharding(fn, cfg, mesh):
+    """Trace ``fn`` under the activation-sharding context.  The context is
+    always entered; the per-site constraints gate themselves (the residual
+    constraint on cfg.act_batch_sharding — §Perf A2/D1)."""
+
+    def wrapped(*args):
+        with tfm.activation_sharding(mesh, shd.batch_axes(mesh)):
+            return fn(*args)
+
+    return wrapped
+
+
+def _lm_prefill_program(cfg: tfm.LMConfig, mesh: Mesh, info) -> Program:
+    pshape = _lm_cast(tfm.lm_param_shapes(cfg), jnp.bfloat16)
+    pspec = shd.lm_param_specs(pshape, mesh)
+    psh = jax.tree.map(lambda s: _ns(mesh, s), pspec,
+                       is_leaf=lambda x: isinstance(x, P))
+    bx = shd.batch_axes(mesh)
+    B, S = info["batch"], info["seq"]
+    tokens = _sds((B, S), jnp.int32)
+
+    def prefill_fn(params, toks):
+        # ctx always active: the cache-slice constraint (§Perf B1) applies
+        # to every arch; the residual-stream constraint gates itself on
+        # cfg.act_batch_sharding inside block_forward/prefill.
+        with tfm.activation_sharding(mesh, shd.batch_axes(mesh)):
+            logits, cache = tfm.prefill(params, toks, cfg, capacity=S)
+        return logits[:, -1, :], cache
+
+    cache_shape = tfm.cache_shapes(cfg, B, S)
+    csp = shd.cache_spec(cache_shape, mesh)
+    csh = jax.tree.map(lambda s: _ns(mesh, s), csp,
+                       is_leaf=lambda x: isinstance(x, P))
+    out_sh = (_ns(mesh, P(bx, None)), csh)
+    n_act = cfg.active_param_count()
+    return Program(
+        fn=prefill_fn, args=(pshape, tokens),
+        in_shardings=(psh, _ns(mesh, P(bx, None))),
+        out_shardings=out_sh, donate_argnums=(),
+        meta={"model_flops": cfg.model_flops(B * S, train=False),
+              "tokens": B * S, "params": cfg.param_count(),
+              "active_params": n_act})
+
+
+def _lm_decode_program(cfg: tfm.LMConfig, mesh: Mesh, info) -> Program:
+    pshape = _lm_cast(tfm.lm_param_shapes(cfg), jnp.bfloat16)
+    pspec = shd.lm_param_specs(pshape, mesh)
+    psh = jax.tree.map(lambda s: _ns(mesh, s), pspec,
+                       is_leaf=lambda x: isinstance(x, P))
+    bx = shd.batch_axes(mesh)
+    B, S = info["batch"], info["seq"]
+    cache_shape = tfm.cache_shapes(cfg, B, S)
+    csp = shd.cache_spec(cache_shape, mesh)
+    csh = jax.tree.map(lambda s: _ns(mesh, s), csp,
+                       is_leaf=lambda x: isinstance(x, P))
+    tokens = _sds((B,), jnp.int32)
+
+    def decode_fn(params, cache, toks):
+        return tfm.decode_step(params, cache, toks, cfg)
+
+    out_sh = (_ns(mesh, P(bx, None)), csh)
+    # decode FLOPs: 2*N_act per token + attention reads; it is memory-bound
+    flops = cfg.model_flops(B, train=False)
+    return Program(
+        fn=decode_fn, args=(pshape, cache_shape, tokens),
+        in_shardings=(psh, csh, _ns(mesh, P(bx))),
+        out_shardings=out_sh, donate_argnums=(1,),
+        meta={"model_flops": flops, "tokens": B,
+              "params": cfg.param_count(),
+              "active_params": cfg.active_param_count(),
+              "kv_bytes": sum(np.prod(s.shape) * 2
+                              for s in jax.tree.leaves(cache_shape)
+                              if hasattr(s, "shape") and len(s.shape) > 0)})
+
+
+# ==================================================================== GNN ====
+
+_GNN_FNS = {
+    "meshgraphnet": (mgn_mod.mgn_node_loss, mgn_mod.mgn_graph_loss,
+                     mgn_mod.init_mgn, True, False),
+    "graphsage-reddit": (sage_mod.sage_node_loss, sage_mod.sage_graph_loss,
+                         sage_mod.init_sage, False, False),
+    "dimenet": (dimenet_mod.dimenet_node_loss, dimenet_mod.dimenet_graph_loss,
+                dimenet_mod.init_dimenet, True, True),
+    "equiformer-v2": (eqv2_mod.eqv2_node_loss, eqv2_mod.eqv2_graph_loss,
+                      eqv2_mod.init_eqv2, True, False),
+}
+
+
+def _gnn_resolve_cfg(arch_mod, info, reduced=False):
+    cfg = arch_mod.REDUCED if reduced else arch_mod.CONFIG
+    d_feat = info.get("d_feat", 16)
+    classes = info.get("classes", cfg.n_out)
+    if not reduced:
+        cfg = dataclasses.replace(cfg, d_in=d_feat, n_out=classes)
+    return cfg
+
+
+def _gnn_flat_batch(info, d_feat, *, needs_pos, needs_tri) -> dict:
+    if "n" in info:
+        n, e = _pad(info["n"]), _pad(info["e"])
+    else:  # minibatch_lg: padded sampled subgraph
+        from repro.graphs import sampler as sampler_mod
+        n0, e0 = sampler_mod.subgraph_capacity(info["batch_nodes"],
+                                               info["fanout"])
+        n, e = _pad(n0), _pad(e0)
+    batch = {
+        "feats": _sds((n, d_feat), jnp.float32),
+        "src": _sds((e,), jnp.int32), "dst": _sds((e,), jnp.int32),
+        "edge_mask": _sds((e,), jnp.bool_),
+        "labels": _sds((n,), jnp.int32),
+        "label_mask": _sds((n,), jnp.bool_),
+    }
+    if needs_pos:
+        batch["pos"] = _sds((n, 3), jnp.float32)
+    if needs_tri:
+        from repro.graphs import triplets as tri_mod
+        t = _pad(tri_mod.triplet_budget(e))
+        batch["t_kj"] = _sds((t,), jnp.int32)
+        batch["t_ji"] = _sds((t,), jnp.int32)
+        batch["triplet_mask"] = _sds((t,), jnp.bool_)
+    return batch
+
+
+def _gnn_mol_batch(info, d_feat, *, needs_pos, needs_tri) -> dict:
+    B, n, e = info["batch"], info["n"], info["e"]
+    batch = {
+        "feats": _sds((B, n, d_feat), jnp.float32),
+        "src": _sds((B, e), jnp.int32), "dst": _sds((B, e), jnp.int32),
+        "edge_mask": _sds((B, e), jnp.bool_),
+        "target": _sds((B,), jnp.float32),
+    }
+    if needs_pos:
+        batch["pos"] = _sds((B, n, 3), jnp.float32)
+    if needs_tri:
+        t = e * 8
+        batch["t_kj"] = _sds((B, t), jnp.int32)
+        batch["t_ji"] = _sds((B, t), jnp.int32)
+        batch["triplet_mask"] = _sds((B, t), jnp.bool_)
+    return batch
+
+
+def _gnn_program(arch_id: str, mesh: Mesh, info) -> Program:
+    arch_mod = ARCHES[arch_id]
+    node_loss, graph_loss, init_fn, needs_pos, needs_tri = _GNN_FNS[arch_id]
+    cfg = _gnn_resolve_cfg(arch_mod, info)
+    pshape = jax.eval_shape(lambda: init_fn(jax.random.key(0), cfg))
+    oshape = jax.eval_shape(opt_mod.adamw_init, pshape)
+    psh = _replicated_tree(pshape, mesh)   # GNN params are small: replicate
+    osh = {"m": _replicated_tree(pshape, mesh),
+           "v": _replicated_tree(pshape, mesh), "step": _ns(mesh, P())}
+    gx = shd.graph_axes(mesh)
+    bx = shd.batch_axes(mesh)
+    molecule = info.get("graph", False)
+    d_feat = info.get("d_feat", 16)
+    if molecule:
+        batch = _gnn_mol_batch(info, d_feat, needs_pos=needs_pos,
+                               needs_tri=needs_tri)
+        bsh = jax.tree.map(
+            lambda s: _ns(mesh, P(bx, *([None] * (len(s.shape) - 1)))), batch)
+        loss_fn = partial(_gnn_loss_call, loss=graph_loss, cfg=cfg)
+    else:
+        batch = _gnn_flat_batch(info, d_feat, needs_pos=needs_pos,
+                                needs_tri=needs_tri)
+        bsh = jax.tree.map(
+            lambda s: _ns(mesh, P(gx, *([None] * (len(s.shape) - 1)))), batch)
+        loss_fn = partial(_gnn_loss_call, loss=node_loss, cfg=cfg)
+
+    step = steps_mod.make_train_step(loss_fn, opt_mod.AdamWConfig(), 1)
+    metrics_shape = jax.eval_shape(step, pshape, oshape, batch)[2]
+    msh = _replicated_tree(metrics_shape, mesh)
+    n_edges = int(np.prod(batch["src"].shape))
+    return Program(
+        fn=step, args=(pshape, oshape, batch),
+        in_shardings=(psh, osh, bsh), out_shardings=(psh, osh, msh),
+        donate_argnums=(0, 1),
+        meta={"model_flops": _gnn_model_flops(arch_id, cfg, batch),
+              "edges": n_edges,
+              "params": sum(int(np.prod(s.shape))
+                            for s in jax.tree.leaves(pshape))})
+
+
+def _gnn_loss_call(params, batch, loss, cfg):
+    return loss(params, batch, cfg)
+
+
+def _gnn_model_flops(arch_id, cfg, batch) -> float:
+    """Analytic 'useful' FLOPs (fwd+bwd = 3x fwd matmul FLOPs)."""
+    E = float(np.prod(batch["src"].shape))
+    N = float(np.prod(batch["feats"].shape[:-1]))
+    d = cfg.d_hidden
+    if arch_id == "meshgraphnet":
+        per_layer = E * (3 * d * d + d * d) * 2 + N * (2 * d * d + d * d) * 2
+        fwd = cfg.n_layers * per_layer
+    elif arch_id == "graphsage-reddit":
+        d_in = batch["feats"].shape[-1]
+        fwd = N * 2 * (d_in * d + d_in * d) + N * 2 * (d * d * 2)
+    elif arch_id == "dimenet":
+        T = float(np.prod(batch["t_kj"].shape))
+        fwd = cfg.n_blocks * (E * 6 * d * d * 2
+                              + T * (cfg.n_bilinear * d * d) * 2)
+    else:  # equiformer-v2
+        nc, nl = cfg.n_coef, cfg.n_l
+        n_pair = len(cfg.pair_index()[0])
+        fwd = cfg.n_layers * (E * (nl + 4 * n_pair) * d * d * 2
+                              + N * 2 * nc * d * d * 2)
+    return 3.0 * fwd
+
+
+# ==================================================================== DIN ====
+
+def _din_param_shardings(pshape, mesh):
+    gx = shd.graph_axes(mesh)
+
+    def one(path, s):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if "item_emb" in name:
+            return _ns(mesh, P(gx, None))
+        return _ns(mesh, P())
+    return jax.tree_util.tree_map_with_path(one, pshape)
+
+
+def _din_batch(info, cfg: din_mod.DINConfig, kind):
+    if kind == "retrieval":
+        C = _pad(info["n_cand"])
+        return {
+            "hist_items": _sds((cfg.seq_len,), jnp.int32),
+            "hist_cates": _sds((cfg.seq_len,), jnp.int32),
+            "hist_mask": _sds((cfg.seq_len,), jnp.bool_),
+            "cand_items": _sds((C,), jnp.int32),
+            "cand_cates": _sds((C,), jnp.int32),
+        }
+    B = info["batch"]
+    batch = {
+        "target_item": _sds((B,), jnp.int32),
+        "target_cate": _sds((B,), jnp.int32),
+        "hist_items": _sds((B, cfg.seq_len), jnp.int32),
+        "hist_cates": _sds((B, cfg.seq_len), jnp.int32),
+        "hist_mask": _sds((B, cfg.seq_len), jnp.bool_),
+    }
+    if kind == "train":
+        batch["labels"] = _sds((B,), jnp.float32)
+    return batch
+
+
+def _din_program(mesh: Mesh, info) -> Program:
+    cfg = c_din.CONFIG
+    kind = info["kind"]
+    pshape = din_mod.din_param_shapes(cfg)
+    psh = _din_param_shardings(pshape, mesh)
+    gx = shd.graph_axes(mesh)
+    batch = _din_batch(info, cfg, kind)
+
+    if kind == "train":
+        oshape = jax.eval_shape(opt_mod.adamw_init, pshape)
+        osh = {"m": psh, "v": psh, "step": _ns(mesh, P())}
+        bsh = jax.tree.map(
+            lambda s: _ns(mesh, P(gx, *([None] * (len(s.shape) - 1)))), batch)
+        loss_fn = partial(_din_loss_call, cfg=cfg)
+        step = steps_mod.make_train_step(loss_fn, opt_mod.AdamWConfig(), 1)
+        metrics_shape = jax.eval_shape(step, pshape, oshape, batch)[2]
+        msh = _replicated_tree(metrics_shape, mesh)
+        flops = _din_flops(cfg, info["batch"]) * 3
+        return Program(fn=step, args=(pshape, oshape, batch),
+                       in_shardings=(psh, osh, bsh),
+                       out_shardings=(psh, osh, msh), donate_argnums=(0, 1),
+                       meta={"model_flops": flops, "rows": info["batch"],
+                             "params": cfg.n_items * cfg.embed_dim})
+    if kind == "serve":
+        bsh = jax.tree.map(
+            lambda s: _ns(mesh, P(gx, *([None] * (len(s.shape) - 1)))), batch)
+        fn = partial(_din_score_call, cfg=cfg)
+        return Program(fn=fn, args=(pshape, batch),
+                       in_shardings=(psh, bsh),
+                       out_shardings=_ns(mesh, P(gx)), donate_argnums=(),
+                       meta={"model_flops": _din_flops(cfg, info["batch"]),
+                             "rows": info["batch"],
+                             "params": cfg.n_items * cfg.embed_dim})
+    # retrieval
+    def rsh(s):
+        if len(s.shape) == 1 and s.shape[0] >= PAD:
+            return _ns(mesh, P(gx))
+        return _ns(mesh, P())
+    bsh = jax.tree.map(rsh, batch)
+    fn = partial(_din_retrieval_call, cfg=cfg)
+    C = batch["cand_items"].shape[0]
+    return Program(fn=fn, args=(pshape, batch),
+                   in_shardings=(psh, bsh), out_shardings=_ns(mesh, P(gx)),
+                   donate_argnums=(),
+                   meta={"model_flops": _din_flops(cfg, C), "rows": C,
+                         "params": cfg.n_items * cfg.embed_dim})
+
+
+def _din_loss_call(params, batch, cfg):
+    return din_mod.din_loss(params, batch, cfg)
+
+
+def _din_score_call(params, batch, cfg):
+    return din_mod.din_score(params, batch, cfg)
+
+
+def _din_retrieval_call(params, batch, cfg):
+    return din_mod.din_retrieval(params, batch, cfg)
+
+
+def _din_flops(cfg: din_mod.DINConfig, rows: int) -> float:
+    di = cfg.d_item
+    attn = 4 * di * cfg.attn_mlp[0] + cfg.attn_mlp[0] * cfg.attn_mlp[1]
+    mlp = 3 * di * cfg.mlp[0] + cfg.mlp[0] * cfg.mlp[1]
+    return rows * 2.0 * (cfg.seq_len * attn + mlp)
+
+
+# =================================================================== SSSP ====
+
+def _sssp_program(mesh: Mesh, info, overrides: dict | None = None) -> Program:
+    from repro.core.distributed import DistConfig, DistributedSSSP
+    cfg0 = c_sssp.CONFIG
+    if overrides:
+        cfg0 = dataclasses.replace(cfg0, **overrides)
+    axes = tuple(mesh.axis_names)
+    dcfg = DistConfig(num_vertices=info["n"], edges_per_part=info["epp"],
+                      mesh_axes=axes, exchange=cfg0.exchange,
+                      delta_cap=cfg0.delta_cap)
+    eng = DistributedSSSP(mesh, dcfg)
+    P_ = eng.P
+    E = P_ * info["epp"]
+    vsh = _ns(mesh, P(axes))
+    esh = vsh
+    dist = _sds((info["n"],), jnp.float32)
+    parent = _sds((info["n"],), jnp.int32)
+    flag = _sds((info["n"],), jnp.bool_)
+    esrc = _sds((E,), jnp.int32)
+    edst = _sds((E,), jnp.int32)
+    ew = _sds((E,), jnp.float32)
+    eact = _sds((E,), jnp.bool_)
+    if info["kind"] == "relax":
+        fn = eng.make_relax_epoch()
+    else:
+        fn = eng.make_delete_epoch()
+    args = (dist, parent, flag, esrc, edst, ew, eact)
+    in_sh = (vsh, vsh, vsh, esh, esh, esh, esh)
+    out_sh = (vsh, vsh, _ns(mesh, P()))
+    # per-round useful work: one fused gather+add+segmin over E edges
+    return Program(fn=fn, args=args, in_shardings=in_sh,
+                   out_shardings=out_sh, donate_argnums=(),
+                   meta={"model_flops": 2.0 * E, "edges": E,
+                         "vertices": info["n"], "note":
+                         "while_loop: terms reported per round"})
+
+
+# ================================================================ dispatch ====
+
+def build_program(arch_id: str, shape: str, mesh: Mesh,
+                  overrides: dict | None = None) -> Program:
+    """``overrides``: dataclasses.replace kwargs applied to the arch config
+    (LM family only) — used by the dry-run/perf harness to pin the baseline
+    (attn_impl='scan') vs optimized (attn_impl='flash_vjp') variants."""
+    mod = ARCHES[arch_id]
+    info = FAMILY_SHAPES[mod.FAMILY][shape]
+    if info.get("skip"):
+        raise ValueError(f"cell ({arch_id}, {shape}) is skipped: {info['skip']}")
+    if mod.FAMILY == "lm":
+        cfg = mod.CONFIG
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        if info["kind"] == "train":
+            return _lm_train_program(cfg, mesh, info)
+        if info["kind"] == "prefill":
+            return _lm_prefill_program(cfg, mesh, info)
+        return _lm_decode_program(cfg, mesh, info)
+    if mod.FAMILY == "gnn":
+        return _gnn_program(arch_id, mesh, info)
+    if mod.FAMILY == "recsys":
+        return _din_program(mesh, info)
+    return _sssp_program(mesh, info, overrides)

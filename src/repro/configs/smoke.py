@@ -1,0 +1,151 @@
+"""Reduced-config smoke programs: real (tiny) arrays, runnable on one CPU
+device.  Used by tests/test_arch_smoke.py and examples/quickstart.py.
+
+Every assigned architecture gets: init -> one train step (forward+backward+
+AdamW) -> metric dict, plus a decode step for the LM family.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry as reg
+from repro.graphs import generators as gen
+from repro.graphs import triplets as tri_mod
+from repro.models import din as din_mod
+from repro.models import transformer as tfm
+from repro.train import data as data_mod
+from repro.train import optimizer as opt_mod
+from repro.train import steps as steps_mod
+
+
+def _finite_tree(tree) -> bool:
+    return all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(tree)
+               if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating))
+
+
+def smoke_lm(arch_id: str, seed: int = 0) -> dict:
+    cfg = reg.ARCHES[arch_id].REDUCED
+    key = jax.random.key(seed)
+    params = tfm.init_lm(key, cfg)
+    stream = data_mod.TokenStream(vocab_size=cfg.vocab_size, batch=2,
+                                  seq_len=16, seed=seed)
+    batch = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+    loss_fn = partial(tfm.lm_loss, cfg=cfg)
+    step = jax.jit(steps_mod.make_train_step(
+        loss_fn, opt_mod.AdamWConfig(warmup_steps=2, total_steps=10), 1))
+    opt_state = opt_mod.adamw_init(params)
+    params, opt_state, metrics = step(params, opt_state, batch)
+
+    # decode: 3 tokens against a small cache
+    cache = tfm.init_cache(cfg, batch=2, capacity=8)
+    dec = jax.jit(partial(tfm.decode_step, cfg=cfg))
+    logits = None
+    for t in range(3):
+        tok = jnp.asarray(np.full((2,), t + 1, np.int32))
+        logits, cache = dec(params, cache, tok)
+    assert logits.shape == (2, cfg.padded_vocab)
+    metrics = dict(metrics)
+    metrics["decode_finite"] = jnp.all(jnp.isfinite(
+        logits.astype(jnp.float32)))
+    return jax.device_get(metrics)
+
+
+def _small_graph(seed=0, n=24, m=64):
+    n, src, dst, w = gen.erdos_renyi(n, m, seed=seed)
+    rng = np.random.default_rng(seed)
+    d_in = 8
+    return {
+        "n": n, "src": src.astype(np.int32), "dst": dst.astype(np.int32),
+        "feats": rng.normal(size=(n, d_in)).astype(np.float32),
+        "pos": rng.normal(size=(n, 3)).astype(np.float32),
+        "labels": rng.integers(0, 4, n).astype(np.int32),
+        "label_mask": np.ones(n, bool),
+        "edge_mask": np.ones(len(src), bool),
+    }
+
+
+def smoke_gnn(arch_id: str, seed: int = 0) -> dict:
+    cfg = reg.ARCHES[arch_id].REDUCED
+    node_loss, graph_loss, init_fn, needs_pos, needs_tri = reg._GNN_FNS[arch_id]
+    g = _small_graph(seed)
+    batch = {k: jnp.asarray(v) for k, v in g.items() if k != "n"}
+    if needs_tri:
+        t_kj, t_ji, tmask = tri_mod.build_triplets(
+            g["n"], g["src"], g["dst"], budget=256, per_edge_cap=4, seed=seed)
+        batch["t_kj"], batch["t_ji"] = jnp.asarray(t_kj), jnp.asarray(t_ji)
+        batch["triplet_mask"] = jnp.asarray(tmask)
+    params = init_fn(jax.random.key(seed), cfg)
+    loss_fn = partial(reg._gnn_loss_call, loss=node_loss, cfg=cfg)
+    step = jax.jit(steps_mod.make_train_step(
+        loss_fn, opt_mod.AdamWConfig(warmup_steps=2, total_steps=10), 1))
+    opt_state = opt_mod.adamw_init(params)
+    params, opt_state, metrics = step(params, opt_state, batch)
+
+    # batched-molecule path (vmapped forward + graph regression)
+    B = 3
+    gs = [_small_graph(seed + i, n=10, m=20) for i in range(B)]
+    mol = {
+        "feats": jnp.stack([g["feats"][:10] for g in gs]),
+        "pos": jnp.stack([g["pos"][:10] for g in gs]),
+        "src": jnp.stack([g["src"][:20] % 10 for g in gs]),
+        "dst": jnp.stack([g["dst"][:20] % 10 for g in gs]),
+        "edge_mask": jnp.stack([g["edge_mask"][:20] for g in gs]),
+        "target": jnp.zeros((B,), jnp.float32),
+    }
+    if needs_tri:
+        tk, tj, tm = [], [], []
+        for i, g in enumerate(gs):
+            a, b, m = tri_mod.build_triplets(
+                10, np.asarray(mol["src"][i]), np.asarray(mol["dst"][i]),
+                budget=64, per_edge_cap=4, seed=seed + i)
+            tk.append(a); tj.append(b); tm.append(m)
+        mol["t_kj"], mol["t_ji"] = jnp.asarray(np.stack(tk)), jnp.asarray(np.stack(tj))
+        mol["triplet_mask"] = jnp.asarray(np.stack(tm))
+    gl, gm = jax.jit(partial(reg._gnn_loss_call, loss=graph_loss, cfg=cfg))(
+        params, mol)
+    metrics = dict(metrics)
+    metrics["mol_loss"] = gl
+    return jax.device_get(metrics)
+
+
+def smoke_din(seed: int = 0) -> dict:
+    cfg = reg.ARCHES["din"].REDUCED
+    stream = data_mod.ClickStream(n_items=cfg.n_items, n_cates=cfg.n_cates,
+                                  batch=8, seq_len=cfg.seq_len, seed=seed)
+    batch = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+    params = din_mod.init_din(jax.random.key(seed), cfg)
+    loss_fn = partial(reg._din_loss_call, cfg=cfg)
+    step = jax.jit(steps_mod.make_train_step(
+        loss_fn, opt_mod.AdamWConfig(warmup_steps=2, total_steps=10), 1))
+    opt_state = opt_mod.adamw_init(params)
+    params, opt_state, metrics = step(params, opt_state, batch)
+    # retrieval path
+    rng = np.random.default_rng(seed)
+    rbatch = {
+        "hist_items": jnp.asarray(rng.integers(0, cfg.n_items, cfg.seq_len),
+                                  jnp.int32),
+        "hist_cates": jnp.asarray(rng.integers(0, cfg.n_cates, cfg.seq_len),
+                                  jnp.int32),
+        "hist_mask": jnp.ones((cfg.seq_len,), jnp.bool_),
+        "cand_items": jnp.asarray(rng.integers(0, cfg.n_items, 64), jnp.int32),
+        "cand_cates": jnp.asarray(rng.integers(0, cfg.n_cates, 64), jnp.int32),
+    }
+    scores = jax.jit(partial(din_mod.din_retrieval, cfg=cfg))(params, rbatch)
+    metrics = dict(metrics)
+    metrics["retrieval_mean"] = jnp.mean(scores)
+    return jax.device_get(metrics)
+
+
+def smoke(arch_id: str, seed: int = 0) -> dict:
+    fam = reg.ARCHES[arch_id].FAMILY
+    if fam == "lm":
+        return smoke_lm(arch_id, seed)
+    if fam == "gnn":
+        return smoke_gnn(arch_id, seed)
+    if fam == "recsys":
+        return smoke_din(seed)
+    raise ValueError(f"no smoke for family {fam} (sssp has its own tests)")

@@ -1,0 +1,25 @@
+"""sssp-del — the paper's own technique as the 11th selectable config.
+
+Shapes are (vertex count, per-partition edge capacity): the total edge pool
+scales with the mesh (shared-nothing, paper §3).  ``rmat24`` matches the
+paper's RMAT(20) scaled to pod size; ``web_1b`` is a web-Google-like graph
+at 1B+ edges (the 1000+-node design point)."""
+import dataclasses
+
+ARCH_ID = "sssp-del"
+FAMILY = "sssp"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSSPArchConfig:
+    name: str
+    num_vertices: int
+    edges_per_part: int
+    exchange: str = "allgather"   # paper-faithful; "delta" = beyond-paper
+    delta_cap: int = 4096
+
+
+CONFIG = SSSPArchConfig(name=ARCH_ID, num_vertices=1 << 24,
+                        edges_per_part=1 << 20)
+REDUCED = SSSPArchConfig(name=ARCH_ID + "-smoke", num_vertices=1 << 10,
+                         edges_per_part=1 << 12)

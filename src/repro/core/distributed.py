@@ -1,0 +1,431 @@
+"""Distributed SSSP-Del: shard_map over a vertex-partitioned device mesh.
+
+Shared-nothing mapping (paper §3 -> TPU):
+
+  * vertices are range-partitioned over the *flattened* mesh axes (every chip
+    owns ``Npp = N/P`` contiguous vertices and their SSSP state);
+  * edges live with the partition of their **dst** (each chip owns up to
+    ``Epp`` in-edges of its vertices) so the per-round scatter-min is local;
+  * the only cross-partition traffic is the paper's "messages": ``dist[src]``
+    offers.  Two exchange strategies:
+      - ``"allgather"`` (paper-faithful bulk): all_gather the dist (+frontier)
+        vectors each round — the BSP rendering of "send DistanceUpdate to all
+        out-neighbours";
+      - ``"delta"`` (beyond-paper): each round all_gathers only a fixed-size
+        buffer of (index, value) pairs for vertices that *improved* last round
+        — message-compression; falls back to dense gather on overflow.
+  * convergence is detected with a ``psum`` over per-partition improvement
+    counts (the paper's distributed epoch/termination detection).
+
+Everything below is pure shard_map + lax collectives; the same code lowers on
+1 CPU device (P=1), 8 forced host devices (tests) and the 256/512-chip
+production meshes (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.state import INF, NO_PARENT
+from repro.graphs import csr as csr_mod
+from repro.graphs import partition as part_mod
+
+BIG = jnp.int32(2**31 - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    num_vertices: int        # padded: divisible by P
+    edges_per_part: int      # static per-partition edge capacity
+    mesh_axes: tuple[str, ...]  # axes to flatten into the vertex partition
+    exchange: str = "allgather"  # or "delta"
+    delta_cap: int = 4096    # per-part (idx,val) slots for "delta" exchange
+    max_rounds: int = 0      # 0 = run to fixpoint; >0 = straggler bound
+
+
+def _flat_axis_size(mesh: Mesh, names: Sequence[str]) -> int:
+    s = 1
+    for n in names:
+        s *= mesh.shape[n]
+    return s
+
+
+class DistributedSSSP:
+    """Builds the jitted shard_map epoch functions for a given mesh."""
+
+    def __init__(self, mesh: Mesh, cfg: DistConfig):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.P = _flat_axis_size(mesh, cfg.mesh_axes)
+        assert cfg.num_vertices % self.P == 0, (
+            f"num_vertices {cfg.num_vertices} must divide P={self.P}")
+        self.npp = cfg.num_vertices // self.P
+        ax = cfg.mesh_axes
+        self.vspec = P(ax)          # vertex arrays: sharded dim 0
+        self.espec = P(ax)          # edge arrays: sharded dim 0 (dst-owner order)
+        self.rspec = P()            # replicated scalars
+
+    # -------------------------------------------------------------- sharding
+    def vertex_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self.vspec)
+
+    def edge_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self.espec)
+
+    # ------------------------------------------------------------ partition
+    def place_edges(self, src: np.ndarray, dst: np.ndarray, w: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Host-side: bucket edges by dst partition, pad each bucket to Epp.
+
+        Returns (src, dst, w, active) of shape (P*Epp,) in partition-major
+        order — the layout the edge sharding expects.
+        """
+        cfg, P_, npp, epp = self.cfg, self.P, self.npp, self.cfg.edges_per_part
+        owner = np.minimum(dst // npp, P_ - 1)
+        order = np.argsort(owner, kind="stable")
+        src_s, dst_s, w_s, owner_s = src[order], dst[order], w[order], owner[order]
+        out_src = np.zeros(P_ * epp, np.int32)
+        out_dst = np.zeros(P_ * epp, np.int32)
+        out_w = np.zeros(P_ * epp, np.float32)
+        out_act = np.zeros(P_ * epp, np.bool_)
+        counts = np.bincount(owner_s, minlength=P_)
+        if counts.max() > epp:
+            raise ValueError(f"partition overflow: max {counts.max()} > Epp {epp}"
+                             " — raise edges_per_part or rebalance")
+        starts = np.concatenate([[0], np.cumsum(counts)])
+        for p in range(P_):
+            a, b = starts[p], starts[p + 1]
+            o = p * epp
+            out_src[o:o + b - a] = src_s[a:b]
+            out_dst[o:o + b - a] = dst_s[a:b]
+            out_w[o:o + b - a] = w_s[a:b]
+            out_act[o:o + b - a] = True
+            # padding rows: dst points at the partition's first row, inactive
+            out_dst[o + b - a:o + epp] = p * npp
+        return out_src, out_dst, out_w, out_act
+
+    # --------------------------------------------------------------- epochs
+    def _round_allgather(self, dist_sh, parent_sh, frontier_sh,
+                         esrc, edst, ew, eact, row0):
+        """One BSP message wave with dense dist/frontier exchange."""
+        ax = self.cfg.mesh_axes
+        dist_full = jax.lax.all_gather(dist_sh, ax, tiled=True)
+        front_full = jax.lax.all_gather(frontier_sh, ax, tiled=True)
+        live = eact & front_full[esrc]
+        cand = jnp.where(live, dist_full[esrc] + ew, INF)
+        dl = edst - row0
+        best = jax.ops.segment_min(cand, dl, num_segments=self.npp)
+        improved = best < dist_sh
+        hit = live & (cand == best[dl]) & improved[dl]
+        cand_src = jnp.where(hit, esrc, BIG)
+        new_par = jax.ops.segment_min(cand_src, dl, num_segments=self.npp)
+        dist_sh = jnp.where(improved, best, dist_sh)
+        parent_sh = jnp.where(improved, new_par, parent_sh)
+        return dist_sh, parent_sh, improved
+
+    def _round_delta(self, dist_sh, parent_sh, frontier_sh,
+                     esrc, edst, ew, eact, row0):
+        """Delta-compressed wave: exchange only (idx,val) of improved vertices.
+
+        Each partition packs the indices of its frontier vertices into a
+        fixed ``delta_cap`` buffer (global ids; slot 0-padded with id=-1),
+        all_gathers the small buffers, scatters them into a local copy of the
+        *stale* dist vector, and proceeds as usual.  Overflow falls back to a
+        dense all_gather for that round (flagged via psum).
+        """
+        ax = self.cfg.mesh_axes
+        cap = self.cfg.delta_cap
+        n_front = jnp.sum(frontier_sh.astype(jnp.int32))
+        overflow = n_front > cap
+        any_overflow = jax.lax.psum(overflow.astype(jnp.int32), ax) > 0
+
+        # pack local frontier (idx, dist) — global ids
+        local_ids = row0 + jnp.arange(self.npp, dtype=jnp.int32)
+        order = jnp.argsort(~frontier_sh)  # frontier first (stable)
+        take = order[:cap]
+        sel = frontier_sh[take]
+        pack_idx = jnp.where(sel, local_ids[take], -1)
+        pack_val = jnp.where(sel, dist_sh[take], INF)
+
+        all_idx = jax.lax.all_gather(pack_idx, ax, tiled=True)   # (P*cap,)
+        all_val = jax.lax.all_gather(pack_val, ax, tiled=True)
+
+        def sparse_dist():
+            base = jnp.full((self.cfg.num_vertices,), INF, dist_sh.dtype)
+            safe = jnp.clip(all_idx, 0, self.cfg.num_vertices - 1)
+            return base.at[safe].min(jnp.where(all_idx >= 0, all_val, INF))
+
+        def dense_dist():
+            return jax.lax.all_gather(dist_sh, ax, tiled=True)
+
+        dist_full = jax.lax.cond(any_overflow, dense_dist, sparse_dist)
+        # No separate frontier gather: in the sparse case dist_full[src] is
+        # +inf for every non-frontier src, so cand=inf masks those edges; in
+        # the dense-fallback round all edges participate (a superset — safe,
+        # costs one extra wave's work only on overflow rounds).
+        live = eact
+        cand = jnp.where(live, dist_full[esrc] + ew, INF)
+        dl = edst - row0
+        best = jax.ops.segment_min(cand, dl, num_segments=self.npp)
+        improved = best < dist_sh
+        hit = live & (cand == best[dl]) & improved[dl]
+        cand_src = jnp.where(hit, esrc, BIG)
+        new_par = jax.ops.segment_min(cand_src, dl, num_segments=self.npp)
+        dist_sh = jnp.where(improved, best, dist_sh)
+        parent_sh = jnp.where(improved, new_par, parent_sh)
+        return dist_sh, parent_sh, improved
+
+    def _relax_body(self, dist_sh, parent_sh, frontier_sh, esrc, edst, ew, eact):
+        ax = self.cfg.mesh_axes
+        row0 = (jnp.int32(self._flat_index()) * self.npp)
+        rnd = (self._round_delta if self.cfg.exchange == "delta"
+               else self._round_allgather)
+
+        def cond(carry):
+            _, _, _, go, rounds = carry
+            keep = go
+            if self.cfg.max_rounds:
+                keep = keep & (rounds < self.cfg.max_rounds)
+            return keep
+
+        def body(carry):
+            dist, parent, frontier, _, rounds = carry
+            dist, parent, improved = rnd(dist, parent, frontier,
+                                         esrc, edst, ew, eact, row0)
+            n_imp = jax.lax.psum(jnp.sum(improved.astype(jnp.int32)), ax)
+            return dist, parent, improved, n_imp > 0, rounds + 1
+
+        init_go = jax.lax.psum(
+            jnp.sum(frontier_sh.astype(jnp.int32)), ax) > 0
+        dist_sh, parent_sh, _, _, rounds = jax.lax.while_loop(
+            cond, body, (dist_sh, parent_sh, frontier_sh, init_go, jnp.int32(0)))
+        return dist_sh, parent_sh, rounds
+
+    def _flat_index(self):
+        """Flattened partition index from the (possibly multiple) mesh axes."""
+        idx = jnp.int32(0)
+        for name in self.cfg.mesh_axes:
+            idx = idx * self.mesh.shape[name] + jax.lax.axis_index(name)
+        return idx
+
+    # ---- public jitted entry points ----------------------------------------
+    def make_relax_epoch(self):
+        """epoch(dist, parent, frontier, esrc, edst, ew, eact) -> (dist, parent, rounds)"""
+        cfg = self.cfg
+
+        @jax.jit
+        @partial(jax.shard_map, mesh=self.mesh,
+                 in_specs=(self.vspec, self.vspec, self.vspec,
+                           self.espec, self.espec, self.espec, self.espec),
+                 out_specs=(self.vspec, self.vspec, self.rspec),
+                 check_vma=False)
+        def epoch(dist, parent, frontier, esrc, edst, ew, eact):
+            d, p, r = self._relax_body(dist, parent, frontier, esrc, edst, ew, eact)
+            return d, p, r
+
+        return epoch
+
+    def make_delete_epoch(self):
+        """delete(dist, parent, seed, esrc, edst, ew, eact) -> (dist, parent, rounds)
+
+        seed: bool[N] (sharded) marking invalidation roots (heads of deleted
+        tree edges; computed host-side or by ``seed_from_deletions`` below).
+        Performs: pointer-doubling subtree marking -> invalidate -> pull ->
+        push-relax to fixpoint.  eact must already exclude the deleted edges.
+        """
+        ax = self.cfg.mesh_axes
+
+        @jax.jit
+        @partial(jax.shard_map, mesh=self.mesh,
+                 in_specs=(self.vspec, self.vspec, self.vspec,
+                           self.espec, self.espec, self.espec, self.espec),
+                 out_specs=(self.vspec, self.vspec, self.rspec),
+                 check_vma=False)
+        def delete_epoch(dist, parent, seed, esrc, edst, ew, eact):
+            row0 = jnp.int32(self._flat_index()) * self.npp
+
+            if self.cfg.exchange == "delta":
+                aff, inv_rounds = self._invalidate_delta(parent, seed, row0)
+            else:
+                aff, inv_rounds = self._invalidate_doubling(parent, seed)
+
+            dist = jnp.where(aff, INF, dist)
+            parent = jnp.where(aff, NO_PARENT, parent)
+
+            if self.cfg.exchange == "delta":
+                # --- bulk DistanceQuery, message form (paper Listing 9):
+                # each partition broadcasts the ids of the srcs its affected
+                # vertices need offers from (packed, delta_cap); owners of
+                # queried valid vertices become the PUSH frontier and normal
+                # delta relaxation delivers the offers.  Same fixpoint as the
+                # dense pull (Appendix A); O(P*cap) bytes instead of O(N).
+                dl = edst - row0
+                req = eact & aff[dl]
+                cap = self.cfg.delta_cap
+                order = jnp.argsort(~req)
+                take = order[:cap]
+                sel = req[take]
+                pack = jnp.where(sel, esrc[take], -1)
+                overflow = jax.lax.psum(
+                    (jnp.sum(req.astype(jnp.int32)) > cap).astype(jnp.int32),
+                    ax) > 0
+                all_q = jax.lax.all_gather(pack, ax, tiled=True)
+
+                def sparse_front():
+                    base = jnp.zeros((self.cfg.num_vertices,), jnp.bool_)
+                    safe = jnp.clip(all_q, 0, self.cfg.num_vertices - 1)
+                    base = base.at[safe].max(all_q >= 0)
+                    local_ids = row0 + jnp.arange(self.npp, dtype=jnp.int32)
+                    return base[local_ids]
+
+                def dense_front():
+                    # overflow fallback: every valid vertex pushes once
+                    return jnp.ones((self.npp,), jnp.bool_)
+
+                queried = jax.lax.cond(overflow, dense_front, sparse_front)
+                frontier0 = queried & jnp.isfinite(dist)
+                dist, parent, rounds = self._relax_body(
+                    dist, parent, frontier0, esrc, edst, ew, eact)
+                return dist, parent, rounds + inv_rounds
+            # --- dense pull wave (bulk DistanceQuery): affected dsts pull
+            # from any valid src (dist gathered once; inf srcs offer nothing)
+            dist_full = jax.lax.all_gather(dist, ax, tiled=True)
+            dl = edst - row0
+            live = eact & aff[dl]
+            cand = jnp.where(live, dist_full[esrc] + ew, INF)
+            best = jax.ops.segment_min(cand, dl, num_segments=self.npp)
+            improved = best < dist
+            hit = live & (cand == best[dl]) & improved[dl]
+            cand_src = jnp.where(hit, esrc, BIG)
+            new_par = jax.ops.segment_min(cand_src, dl, num_segments=self.npp)
+            dist = jnp.where(improved, best, dist)
+            parent = jnp.where(improved, new_par, parent)
+
+            # --- push to fixpoint
+            dist, parent, rounds = self._relax_body(
+                dist, parent, improved, esrc, edst, ew, eact)
+            return dist, parent, rounds + inv_rounds + 1
+
+        return delete_epoch
+
+    # --------------------------------------------------- invalidation impls
+    def _invalidate_doubling(self, parent, seed):
+        """Pointer-doubling subtree marking with dense all_gathers of the
+        (aff, ptr) vectors — O(log depth) rounds x O(N) bytes/round."""
+        ax = self.cfg.mesh_axes
+
+        def dcond(carry):
+            _, _, grew, _ = carry
+            return grew
+
+        def dbody(carry):
+            aff, ptr, _, rounds = carry
+            aff_full = jax.lax.all_gather(aff, ax, tiled=True)
+            par_full = jax.lax.all_gather(ptr, ax, tiled=True)
+            valid = ptr >= 0
+            safe = jnp.clip(ptr, 0)
+            hop = jnp.where(valid, aff_full[safe], False)
+            new_aff = aff | hop
+            nxt = jnp.where(valid, par_full[safe], NO_PARENT)
+            grew_local = jnp.any(new_aff != aff) | jnp.any(nxt != ptr)
+            grew = jax.lax.psum(grew_local.astype(jnp.int32), ax) > 0
+            return new_aff, nxt, grew, rounds + 1
+
+        aff, _, _, inv_rounds = jax.lax.while_loop(
+            dcond, dbody, (seed, parent, jnp.bool_(True), jnp.int32(0)))
+        return aff, inv_rounds
+
+    def _invalidate_delta(self, parent, seed, row0):
+        """Paper-faithful SetToInfinity flood with delta-compressed frontier
+        exchange: each wave broadcasts only the NEWLY affected vertex ids
+        (packed (idx) buffers, delta_cap per partition) — O(depth) rounds x
+        O(P*cap) bytes.  Overflow rounds fall back to a dense aff gather.
+        Beyond-paper vs the doubling variant: 10-40x fewer wire bytes on
+        shallow subtrees (EXPERIMENTS.md §Perf C3)."""
+        ax = self.cfg.mesh_axes
+        cap = self.cfg.delta_cap
+        n = self.cfg.num_vertices
+        local_ids = row0 + jnp.arange(self.npp, dtype=jnp.int32)
+
+        def dcond(carry):
+            _, _, grew, _ = carry
+            return grew
+
+        def dbody(carry):
+            aff, frontier, _, rounds = carry
+            n_front = jnp.sum(frontier.astype(jnp.int32))
+            overflow = jax.lax.psum(
+                (n_front > cap).astype(jnp.int32), ax) > 0
+
+            order = jnp.argsort(~frontier)
+            take = order[:cap]
+            sel = frontier[take]
+            pack = jnp.where(sel, local_ids[take], -1)
+            all_ids = jax.lax.all_gather(pack, ax, tiled=True)   # (P*cap,)
+
+            def sparse_base():
+                base = jnp.zeros((n,), jnp.bool_)
+                safe = jnp.clip(all_ids, 0, n - 1)
+                return base.at[safe].max(all_ids >= 0)
+
+            def dense_base():
+                return jax.lax.all_gather(aff, ax, tiled=True)
+
+            base = jax.lax.cond(overflow, dense_base, sparse_base)
+            valid = parent >= 0
+            join = jnp.where(valid, base[jnp.clip(parent, 0)], False)
+            new = join & ~aff
+            aff2 = aff | new
+            grew = jax.lax.psum(jnp.sum(new.astype(jnp.int32)), ax) > 0
+            return aff2, new, grew, rounds + 1
+
+        aff, _, _, inv_rounds = jax.lax.while_loop(
+            dcond, dbody, (seed, seed, jnp.bool_(True), jnp.int32(0)))
+        return aff, inv_rounds
+
+    def make_seed_from_deletions(self):
+        """seed(parent, del_src, del_dst) -> bool[N] invalidation seeds.
+
+        del_src/del_dst: replicated i32[K] (pad with -1).  A deletion seeds
+        iff it was a tree edge (Listing 4)."""
+
+        @jax.jit
+        @partial(jax.shard_map, mesh=self.mesh,
+                 in_specs=(self.vspec, self.rspec, self.rspec),
+                 out_specs=self.vspec,
+                 check_vma=False)
+        def seed_fn(parent, del_src, del_dst):
+            row0 = jnp.int32(self._flat_index()) * self.npp
+            local = (del_dst >= row0) & (del_dst < row0 + self.npp) & (del_dst >= 0)
+            safe = jnp.clip(del_dst - row0, 0, self.npp - 1)
+            is_tree = parent[safe] == del_src
+            f = jnp.zeros((self.npp,), jnp.bool_)
+            return f.at[safe].max(local & is_tree)
+
+        return seed_fn
+
+    # ------------------------------------------------------------- host init
+    def init_vertex_arrays(self, source: int):
+        n = self.cfg.num_vertices
+        dist = np.full(n, np.inf, np.float32); dist[source] = 0.0
+        parent = np.full(n, -1, np.int32)
+        sh = self.vertex_sharding()
+        return (jax.device_put(dist, sh), jax.device_put(parent, sh))
+
+    def put_edges(self, src, dst, w, active):
+        sh = self.edge_sharding()
+        return (jax.device_put(src.astype(np.int32), sh),
+                jax.device_put(dst.astype(np.int32), sh),
+                jax.device_put(w.astype(np.float32), sh),
+                jax.device_put(active, sh))
+
+    def frontier_of(self, vertices: np.ndarray):
+        f = np.zeros(self.cfg.num_vertices, np.bool_)
+        f[vertices[vertices >= 0]] = True
+        return jax.device_put(f, self.vertex_sharding())

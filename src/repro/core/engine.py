@@ -1,0 +1,191 @@
+"""SSSPDelEngine — the paper's runtime loop (paper §4.1) as a host
+orchestrator over jitted device epochs.
+
+Faithful behaviour (defaults):
+  * runs of consecutive ADD events are ingested as one batch and drained by
+    monotone relaxation (the paper's runtime likewise drains its topology
+    buffer before algorithmic messages, and insertion mode is order-free);
+  * every DEL event triggers the stop-the-world sequence: converge, apply the
+    single deletion, invalidation + recomputation, converge;
+  * QUERY markers enforce an epoch and snapshot (dist, parent).
+
+Beyond-paper switches:
+  * ``batch_deletions=True`` — coalesce a run of consecutive DELs into one
+    invalidation+recompute epoch (union of affected subtrees; see DESIGN.md).
+  * ``use_doubling`` — pointer-doubling invalidation (default True; set False
+    for the paper's wave-by-wave flood).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import delete as del_mod
+from repro.core import events as ev
+from repro.core import ingest, relax
+from repro.core.state import EdgePool, GraphState, SSSPState
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    num_vertices: int
+    edge_capacity: int
+    source: int
+    use_doubling: bool = True
+    batch_deletions: bool = False
+    on_duplicate: str = "ignore"
+    validate_every: int = 0     # if >0, run oracle check every k queries (tests)
+
+
+@dataclasses.dataclass
+class QueryResult:
+    dist: np.ndarray
+    parent: np.ndarray
+    latency_s: float
+    epoch_stats: dict[str, Any]
+
+
+class SSSPDelEngine:
+    """Host orchestrator; all heavy lifting is jitted device code."""
+
+    def __init__(self, cfg: EngineConfig):
+        self.cfg = cfg
+        self.alloc = ingest.SlotAllocator(cfg.edge_capacity, cfg.on_duplicate)
+        self.state = GraphState.init(cfg.num_vertices, cfg.edge_capacity, cfg.source)
+        # counters (host-side, for benchmarks)
+        self.n_epochs = 0
+        self.n_rounds = 0
+        self.n_messages = 0
+        self.n_adds = 0
+        self.n_dels = 0
+        self._last_parent: np.ndarray | None = None
+
+    # ------------------------------------------------------------------ adds
+    def _ingest_adds(self, batch: ev.EventBatch) -> None:
+        slots, src, dst, w = self.alloc.plan_adds(batch.src, batch.dst, batch.w)
+        if len(slots) == 0:
+            return
+        slots_p, src_p, dst_p, w_p = ingest.pad_pow2(slots, src, dst, w)
+        edges = ingest.apply_adds(self.state.edges, jnp.asarray(slots_p),
+                                  jnp.asarray(src_p), jnp.asarray(dst_p),
+                                  jnp.asarray(w_p))
+        # Frontier = tails of the inserted edges (paper Listing 3: tail offers
+        # its distance to the head).  Relaxing from the tails delivers exactly
+        # those offers (plus no-op re-offers along other out-edges).
+        frontier = relax.frontier_from_vertices(
+            jnp.asarray(src), self.cfg.num_vertices)
+        sssp, stats = relax.relax_until_converged(
+            self.state.sssp, edges, frontier, num_vertices=self.cfg.num_vertices)
+        self.state = dataclasses.replace(self.state, edges=edges, sssp=sssp)
+        self.n_adds += len(slots)
+        self.n_epochs += 1
+        self.n_rounds += int(stats.rounds)
+        self.n_messages += int(stats.messages)
+
+    # ------------------------------------------------------------------ dels
+    def _ingest_dels(self, batch: ev.EventBatch) -> None:
+        if self.cfg.batch_deletions:
+            groups = [(batch.src, batch.dst)]
+        else:
+            groups = [(batch.src[i:i + 1], batch.dst[i:i + 1])
+                      for i in range(len(batch.src))]
+        for gsrc, gdst in groups:
+            slots, psrc, pdst = self.alloc.plan_dels(gsrc, gdst)
+            if len(slots) == 0:
+                continue
+            slots_p, psrc_p, pdst_p = ingest.pad_pow2(slots, psrc, pdst)
+            # Epoch before the deletion is implicit: every prior batch ran to
+            # convergence.  Seed from the *pre-deletion* tree, then deactivate.
+            seed = del_mod.deletion_seed_for_edges(
+                self.state.sssp, jnp.asarray(psrc_p), jnp.asarray(pdst_p),
+                self.cfg.num_vertices)
+            edges = ingest.apply_dels(self.state.edges, jnp.asarray(slots_p))
+            if bool(jnp.any(seed)):
+                sssp, dstats = del_mod.invalidate_and_recompute(
+                    self.state.sssp, edges, seed,
+                    num_vertices=self.cfg.num_vertices,
+                    use_doubling=self.cfg.use_doubling)
+                self.n_rounds += int(dstats.invalidation_rounds) + int(dstats.recompute_rounds)
+                self.n_messages += int(dstats.recompute_messages) + int(dstats.affected)
+            else:
+                sssp = self.state.sssp  # non-tree deletion: no algorithmic work
+            self.state = dataclasses.replace(self.state, edges=edges, sssp=sssp)
+            self.n_dels += len(slots)
+            self.n_epochs += 1
+
+    # ---------------------------------------------------------------- stream
+    def ingest_log(self, log: ev.EventLog,
+                   on_query: Callable[[QueryResult], None] | None = None) -> list[QueryResult]:
+        """Drive the engine over an event log; returns query results."""
+        results: list[QueryResult] = []
+        for batch in log.runs():
+            if batch.kind == ev.ADD:
+                self._ingest_adds(batch)
+            elif batch.kind == ev.DEL:
+                self._ingest_dels(batch)
+            else:
+                res = self.query()
+                results.append(res)
+                if on_query is not None:
+                    on_query(res)
+        return results
+
+    # ----------------------------------------------------------------- query
+    def query(self) -> QueryResult:
+        """State collection (paper §3): epoch is already enforced (every batch
+        runs to convergence), so the query cost is the device->host readback
+        plus any residual convergence work (none in faithful mode)."""
+        t0 = time.perf_counter()
+        dist = np.asarray(jax.device_get(self.state.sssp.dist))
+        parent = np.asarray(jax.device_get(self.state.sssp.parent))
+        dt = time.perf_counter() - t0
+        stats = {
+            "epochs": self.n_epochs, "rounds": self.n_rounds,
+            "messages": self.n_messages, "adds": self.n_adds, "dels": self.n_dels,
+        }
+        return QueryResult(dist=dist, parent=parent, latency_s=dt, epoch_stats=stats)
+
+    def stability_vs_prev(self, parent: np.ndarray) -> float:
+        """Paper §5.4: fraction of vertices whose predecessor is unchanged
+        (over vertices present in both results)."""
+        if self._last_parent is None:
+            self._last_parent = parent.copy()
+            return 1.0
+        prev = self._last_parent
+        both = (prev >= 0) & (parent >= 0)
+        frac = float(np.mean(prev[both] == parent[both])) if both.any() else 1.0
+        self._last_parent = parent.copy()
+        return frac
+
+    # ------------------------------------------------------------ checkpoint
+    def checkpoint(self) -> dict[str, np.ndarray]:
+        """O(N+E) snapshot for fault tolerance (see train/checkpoint.py for
+        the sharded writer used at scale)."""
+        e, s = self.state.edges, self.state.sssp
+        return {
+            "src": np.asarray(e.src), "dst": np.asarray(e.dst),
+            "w": np.asarray(e.w), "active": np.asarray(e.active),
+            "dist": np.asarray(s.dist), "parent": np.asarray(s.parent),
+            "source": np.asarray(s.source), "cursor": np.asarray(self.state.cursor),
+        }
+
+    def restore(self, ckpt: dict[str, np.ndarray]) -> None:
+        self.state = GraphState(
+            edges=EdgePool(jnp.asarray(ckpt["src"]), jnp.asarray(ckpt["dst"]),
+                           jnp.asarray(ckpt["w"]), jnp.asarray(ckpt["active"])),
+            sssp=SSSPState(jnp.asarray(ckpt["dist"]), jnp.asarray(ckpt["parent"]),
+                           jnp.asarray(ckpt["source"])),
+            cursor=jnp.asarray(ckpt["cursor"]),
+        )
+        # rebuild host allocator from the pool
+        self.alloc = ingest.SlotAllocator(self.cfg.edge_capacity, self.cfg.on_duplicate)
+        act = np.asarray(ckpt["active"])
+        src = np.asarray(ckpt["src"]); dst = np.asarray(ckpt["dst"])
+        self.alloc.free = [i for i in range(self.cfg.edge_capacity - 1, -1, -1) if not act[i]]
+        self.alloc.slot_of = {(int(src[i]), int(dst[i])): i
+                              for i in np.nonzero(act)[0].tolist()}

@@ -1,0 +1,138 @@
+"""Graph + SSSP-tree state for the SSSP-Del engine.
+
+JAX needs static shapes, so the dynamic graph lives in fixed-capacity pools:
+
+  * an edge pool in COO form (``src``, ``dst``, ``w``, ``active``) that the
+    ingestion layer mutates functionally (``.at[slot].set``), and
+  * per-vertex SSSP state: ``dist`` (+inf == unreached) and ``parent``
+    (-1 == no predecessor).
+
+The paper keeps explicit ``SuccessorVertices`` sets per vertex (Listing 1);
+here successor sets are *implicit* — the children of ``v`` are exactly
+``{u : parent[u] == v}`` — which removes all successor-set bookkeeping
+messages (AddToSuccessor / RemoveFromSuccessor become no-ops by construction)
+while preserving the invariant they maintain.  This is recorded in DESIGN.md
+as part of the async->bulk adaptation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+NO_PARENT = jnp.int32(-1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EdgePool:
+    """Fixed-capacity COO edge pool.
+
+    Inactive slots have ``active == False`` and are ignored by every kernel.
+    ``src``/``dst`` of inactive slots are kept in-range (0) so gathers stay safe.
+    """
+
+    src: jax.Array  # i32[E]
+    dst: jax.Array  # i32[E]
+    w: jax.Array    # f32[E]
+    active: jax.Array  # bool[E]
+
+    @property
+    def capacity(self) -> int:
+        return self.src.shape[0]
+
+    @staticmethod
+    def empty(capacity: int) -> "EdgePool":
+        return EdgePool(
+            src=jnp.zeros((capacity,), jnp.int32),
+            dst=jnp.zeros((capacity,), jnp.int32),
+            w=jnp.zeros((capacity,), jnp.float32),
+            active=jnp.zeros((capacity,), jnp.bool_),
+        )
+
+    def num_active(self) -> jax.Array:
+        return jnp.sum(self.active.astype(jnp.int32))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SSSPState:
+    """Per-vertex SSSP tree state."""
+
+    dist: jax.Array    # f32[N]; +inf == unreached
+    parent: jax.Array  # i32[N]; -1 == none (source or unreached)
+    source: jax.Array  # i32[] scalar
+
+    @property
+    def num_vertices(self) -> int:
+        return self.dist.shape[0]
+
+    @staticmethod
+    def init(num_vertices: int, source: int | jax.Array) -> "SSSPState":
+        source = jnp.asarray(source, jnp.int32)
+        dist = jnp.full((num_vertices,), INF, jnp.float32).at[source].set(0.0)
+        parent = jnp.full((num_vertices,), NO_PARENT, jnp.int32)
+        return SSSPState(dist=dist, parent=parent, source=source)
+
+    def reached(self) -> jax.Array:
+        return jnp.isfinite(self.dist)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphState:
+    """Full engine state: topology pool + SSSP tree."""
+
+    edges: EdgePool
+    sssp: SSSPState
+    # Next free slot pointer for ring-buffer style slot allocation.  Slot reuse
+    # of deleted edges is handled by the host-side ingestion planner; on device
+    # we only need the cursor for append-style allocation.
+    cursor: jax.Array  # i32[]
+
+    @property
+    def num_vertices(self) -> int:
+        return self.sssp.num_vertices
+
+    @staticmethod
+    def init(num_vertices: int, edge_capacity: int, source: int) -> "GraphState":
+        return GraphState(
+            edges=EdgePool.empty(edge_capacity),
+            sssp=SSSPState.init(num_vertices, source),
+            cursor=jnp.int32(0),
+        )
+
+
+def degree_histogram(edges: EdgePool, num_vertices: int) -> jax.Array:
+    """In-degree of every vertex over active edges (diagnostics/partitioning)."""
+    ones = edges.active.astype(jnp.int32)
+    return jax.ops.segment_sum(ones, edges.dst, num_segments=num_vertices)
+
+
+@partial(jax.jit, static_argnames=("num_vertices",))
+def validate_state(state: GraphState, num_vertices: int) -> dict[str, Any]:
+    """Cheap invariant probes used by property tests and the engine's
+    self-check mode (all computed on device, returned as scalars)."""
+    e, s = state.edges, state.sssp
+    in_range = jnp.all((e.src >= 0) & (e.src < num_vertices) &
+                       (e.dst >= 0) & (e.dst < num_vertices))
+    pos_w = jnp.all(jnp.where(e.active, e.w > 0, True))
+    src_ok = s.dist[s.source] == 0.0
+    parent_range = jnp.all((s.parent >= -1) & (s.parent < num_vertices))
+    # every reached non-source vertex has a parent; unreached have none
+    reached = jnp.isfinite(s.dist)
+    non_src = jnp.arange(num_vertices) != s.source
+    has_parent_ok = jnp.all(jnp.where(reached & non_src, s.parent >= 0, True))
+    no_parent_ok = jnp.all(jnp.where(~reached, s.parent == NO_PARENT, True))
+    return {
+        "edges_in_range": in_range,
+        "weights_positive": pos_w,
+        "source_dist_zero": src_ok,
+        "parent_in_range": parent_range,
+        "reached_have_parent": has_parent_ok,
+        "unreached_have_no_parent": no_parent_ok,
+    }

@@ -1,0 +1,1 @@
+from repro.graphs import generators, window, partition, csr  # noqa: F401

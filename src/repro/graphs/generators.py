@@ -1,0 +1,111 @@
+"""Graph generators (host-side, numpy).
+
+* ``rmat`` — R-MAT (Chakrabarti et al., 2004) with Graph500 parameters
+  (a,b,c,d) = (0.57, 0.19, 0.19, 0.05), the paper's RMAT(20) source; weights
+  U(0,4) as in the paper's footnote 2.
+* ``erdos_renyi`` — uniform random digraphs (small tests).
+* ``grid2d`` — deterministic mesh graphs (MeshGraphNet shapes, oracle tests).
+* ``power_law_hubs`` — a small web-Google-like graph: a few high in-degree
+  hubs (the paper picks top-PageRank sources precisely because they create
+  large shortest-path trees).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def rmat(scale: int, edge_factor: int = 16, *, a: float = 0.57, b: float = 0.19,
+         c: float = 0.19, seed: int = 0, weights: tuple[float, float] = (0.0, 4.0),
+         dedup: bool = True) -> tuple[int, np.ndarray, np.ndarray, np.ndarray]:
+    """Graph500-style R-MAT. Returns (n, src, dst, w); weights in (lo, hi]."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = n * edge_factor
+    src = np.zeros(m, np.int64)
+    dst = np.zeros(m, np.int64)
+    ab, abc = a + b, a + b + c
+    for bit in range(scale):
+        r = rng.random(m)
+        # quadrant choice per Chakrabarti et al.
+        go_b = (r >= a) & (r < ab)
+        go_c = (r >= ab) & (r < abc)
+        go_d = r >= abc
+        src += ((go_c | go_d).astype(np.int64)) << bit
+        dst += ((go_b | go_d).astype(np.int64)) << bit
+    keep = src != dst  # drop self-loops (paper: simple graphs)
+    src, dst = src[keep], dst[keep]
+    if dedup:
+        key = src * n + dst
+        _, idx = np.unique(key, return_index=True)
+        idx.sort()
+        src, dst = src[idx], dst[idx]
+    lo, hi = weights
+    w = lo + (hi - lo) * rng.random(len(src)).astype(np.float32)
+    w = np.maximum(w, 1e-3).astype(np.float32)  # strictly positive (termination)
+    return n, src, dst, w
+
+
+def erdos_renyi(n: int, m: int, *, seed: int = 0,
+                weights: tuple[float, float] = (0.5, 2.0)
+                ) -> tuple[int, np.ndarray, np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, 4 * m)
+    dst = rng.integers(0, n, 4 * m)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    key = src * n + dst
+    _, idx = np.unique(key, return_index=True)
+    idx.sort()
+    src, dst = src[idx][:m], dst[idx][:m]
+    lo, hi = weights
+    w = (lo + (hi - lo) * rng.random(len(src))).astype(np.float32)
+    return n, src, dst, w
+
+
+def grid2d(rows: int, cols: int, *, bidirectional: bool = True,
+           weight: float = 1.0) -> tuple[int, np.ndarray, np.ndarray, np.ndarray]:
+    """rows x cols lattice; vertex id = r*cols + c."""
+    n = rows * cols
+    srcs, dsts = [], []
+    for r in range(rows):
+        for c in range(cols):
+            v = r * cols + c
+            if c + 1 < cols:
+                srcs.append(v); dsts.append(v + 1)
+            if r + 1 < rows:
+                srcs.append(v); dsts.append(v + cols)
+    src = np.asarray(srcs, np.int64)
+    dst = np.asarray(dsts, np.int64)
+    if bidirectional:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    w = np.full(len(src), weight, np.float32)
+    return n, src, dst, w
+
+
+def power_law_hubs(n: int, m: int, n_hubs: int = 3, *, seed: int = 0
+                   ) -> tuple[int, np.ndarray, np.ndarray, np.ndarray]:
+    """Hub-heavy digraph: ~30% of edges leave hubs, rest uniform."""
+    rng = np.random.default_rng(seed)
+    hubs = rng.choice(n, n_hubs, replace=False)
+    m_hub = m // 3
+    src = np.concatenate([
+        rng.choice(hubs, m_hub),
+        rng.integers(0, n, m - m_hub),
+    ])
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    key = src * n + dst
+    _, idx = np.unique(key, return_index=True)
+    idx.sort()
+    src, dst = src[idx], dst[idx]
+    w = np.ones(len(src), np.float32)  # paper: unit weights for real graphs
+    return n, src, dst, w
+
+
+def top_in_degree_sources(n: int, dst: np.ndarray, k: int = 3) -> np.ndarray:
+    """Stand-in for the paper's PageRank-on-transpose source selection: the
+    top in-degree vertices (PageRank on the transpose is dominated by
+    in-degree for these graphs; avoids an extra dependency)."""
+    deg = np.bincount(dst, minlength=n)
+    return np.argsort(-deg)[:k]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+Every kernel ships three artifacts:
+  * ``<name>/<name>.py`` — the pl.pallas_call + BlockSpec kernel (TPU target);
+  * ``<name>/ops.py``    — the jitted public wrapper (+ shape plumbing);
+  * ``<name>/ref.py``    — a pure-jnp oracle, used by tests (interpret mode)
+    and by the engine as the fallback when kernels are disabled.
+
+Kernels here are the TPU adaptation of the paper's hot loop (edge relaxation)
+plus the two gather-reduce primitives the assigned GNN/recsys architectures
+hinge on.  CPU container note: kernels are *validated* with interpret=True
+(Python execution of the kernel body); the BlockSpec tiling targets TPU v5e
+VMEM.
+"""

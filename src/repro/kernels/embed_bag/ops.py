@@ -1,0 +1,36 @@
+"""Public embedding-bag wrapper with custom VJP (recsys training path).
+
+Backward is the transposed scatter-add into the table — expressed through AD
+of the jnp oracle so training works with or without the kernel enabled.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embed_bag.embed_bag import embedding_bag
+from repro.kernels.embed_bag.ref import embedding_bag_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def bag_lookup(table, idx, agg: str = "sum", use_kernel: bool = False,
+               interpret: bool = True):
+    if use_kernel:
+        return embedding_bag(table, idx, agg=agg, interpret=interpret)
+    return embedding_bag_ref(table, idx, agg=agg)
+
+
+def _fwd(table, idx, agg, use_kernel, interpret):
+    return bag_lookup(table, idx, agg, use_kernel, interpret), (table, idx)
+
+
+def _bwd(agg, use_kernel, interpret, res, g):
+    table, idx = res
+    _, vjp = jax.vjp(lambda t: embedding_bag_ref(t, idx, agg=agg), table)
+    (dtable,) = vjp(g)
+    return (dtable, None)
+
+
+bag_lookup.defvjp(_fwd, _bwd)

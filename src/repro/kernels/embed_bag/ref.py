@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the embedding-bag kernel (recsys hot path).
+
+    out[b, :] = agg_{l : idx[b, l] >= 0} table[idx[b, l], :]  (* wt[b, l])
+
+JAX has no native EmbeddingBag — this gather + masked reduce IS the
+implementation (see kernel taxonomy §RecSys); the Pallas kernel tiles the
+same dataflow for TPU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jnp.ndarray, idx: jnp.ndarray,
+                      weights: jnp.ndarray | None = None,
+                      agg: str = "sum") -> jnp.ndarray:
+    valid = idx >= 0
+    safe = jnp.clip(idx, 0)
+    g = table[safe]                                   # (B, L, D)
+    if weights is not None:
+        g = g * weights[..., None]
+    g = jnp.where(valid[..., None], g, 0.0)
+    s = jnp.sum(g, axis=1)
+    if agg == "sum":
+        return s
+    if agg == "mean":
+        cnt = jnp.maximum(jnp.sum(valid, axis=1, keepdims=True), 1)
+        return s / cnt.astype(table.dtype)
+    raise ValueError(f"unknown agg {agg!r}")

@@ -1,0 +1,34 @@
+"""Public wrapper for the ELLPACK relaxation kernel.
+
+``relax_wave`` composes the kernel (or the jnp ref) with the engine-level
+update rule: take the elementwise min against current distances, emit the
+improved mask (next frontier) and updated parents.  The host-side ELL builder
+lives in repro.graphs.csr.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.relax.ref import ellpack_relax_ref
+from repro.kernels.relax.relax import ellpack_relax
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def relax_wave(dist: jax.Array, parent: jax.Array, nbr_idx: jax.Array,
+               nbr_w: jax.Array, *, use_kernel: bool = True,
+               interpret: bool = True):
+    """One full (non-frontier-masked) relaxation wave in ELL layout.
+
+    Returns (dist', parent', improved).  CPU container: interpret=True.
+    """
+    if use_kernel:
+        best, arg = ellpack_relax(dist, nbr_idx, nbr_w, interpret=interpret)
+    else:
+        best, arg = ellpack_relax_ref(dist, nbr_idx, nbr_w)
+    improved = best < dist
+    return (jnp.where(improved, best, dist),
+            jnp.where(improved, arg, parent),
+            improved)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the ELLPACK min-plus relaxation kernel.
+
+Semantics (one bulk "DistanceUpdate" wave in ELL layout):
+
+    cand[i, k] = dist[nbr_idx[i, k]] + nbr_w[i, k]
+    best[i]    = min_k cand[i, k]                (+inf padded entries lose)
+    arg[i]     = nbr_idx[i, argmin_k cand[i,k]]  (-1 if best == +inf)
+
+Ties break toward the smallest k (jnp.argmin convention) — the host ELL
+builder sorts each row's neighbors by id, so this matches the engine's
+smallest-src-id rule.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ellpack_relax_ref(dist: jnp.ndarray, nbr_idx: jnp.ndarray,
+                      nbr_w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    cand = dist[nbr_idx] + nbr_w                       # (N, K)
+    best = jnp.min(cand, axis=1)
+    kstar = jnp.argmin(cand, axis=1)
+    arg = jnp.take_along_axis(nbr_idx, kstar[:, None], axis=1)[:, 0]
+    arg = jnp.where(jnp.isfinite(best), arg, -1)
+    return best, arg.astype(jnp.int32)

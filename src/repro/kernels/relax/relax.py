@@ -1,0 +1,77 @@
+"""ELLPACK min-plus relaxation — the Pallas TPU kernel for SSSP-Del's hot loop.
+
+TPU adaptation (see DESIGN.md §2): GPU implementations scatter-min with
+atomics over CSR; TPUs have no atomics and hate irregular scatters, so we
+re-block the graph into sliced-ELLPACK — per destination row, a padded dense
+list of (in-neighbor, weight).  One wave is then:
+
+    gather (VMEM-resident dist tile) -> add -> row-min / row-argmin
+
+entirely dense, VPU-friendly work.  Grid tiles rows in ``bm`` blocks; the
+dist vector is kept whole in VMEM (per-shard vertex counts at production
+scale are <= ~64k, i.e. <= 256 KiB f32 — trivially VMEM resident; the
+BlockSpec pins it once and Mosaic hoists the load out of the grid loop).
+
+Layout notes
+------------
+* ``nbr_idx``/``nbr_w`` tiles are (bm, K): K is the slice's padded degree,
+  rounded to a multiple of 128 (lane width) by the host builder.
+* padded entries carry w=+inf, idx=0 — they can never win the min.
+* argmin is computed in-kernel with broadcasted_iota (TPU needs 2D iota).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _relax_kernel(dist_ref, idx_ref, w_ref, best_ref, arg_ref):
+    dist = dist_ref[...]                       # (N,) VMEM-resident tile
+    idx = idx_ref[...]                         # (bm, K)
+    w = w_ref[...]                             # (bm, K)
+    cand = jnp.take(dist, idx, axis=0) + w     # dense gather + add
+    best = jnp.min(cand, axis=1)               # (bm,)
+    # row-argmin via 2D iota (1D iota is not legal on TPU)
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, cand.shape, 1)
+    is_min = cand == best[:, None]
+    kstar = jnp.min(jnp.where(is_min, k_iota, jnp.int32(2**31 - 1)), axis=1)
+    arg = jnp.take_along_axis(idx, kstar[:, None].astype(jnp.int32), axis=1)[:, 0]
+    best_ref[...] = best
+    arg_ref[...] = jnp.where(jnp.isfinite(best), arg, -1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def ellpack_relax(dist: jax.Array, nbr_idx: jax.Array, nbr_w: jax.Array,
+                  *, block_rows: int = 256, interpret: bool = False
+                  ) -> tuple[jax.Array, jax.Array]:
+    """best[i], arg[i] = min-plus reduction of row i's in-neighbors.
+
+    Shapes: dist (N,) f32; nbr_idx (R, K) i32 (entries in [0, N)); nbr_w
+    (R, K) f32 (+inf padding).  R % block_rows == 0 (host builder pads).
+    """
+    R, K = nbr_idx.shape
+    N = dist.shape[0]
+    bm = min(block_rows, R)
+    assert R % bm == 0, (R, bm)
+    grid = (R // bm,)
+    return pl.pallas_call(
+        _relax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((N,), lambda i: (0,)),              # dist: whole vector
+            pl.BlockSpec((bm, K), lambda i: (i, 0)),          # idx tile
+            pl.BlockSpec((bm, K), lambda i: (i, 0)),          # w tile
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R,), jnp.float32),
+            jax.ShapeDtypeStruct((R,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(dist, nbr_idx, nbr_w)

@@ -1,0 +1,41 @@
+"""Public wrapper for the ELL SpMM kernel with a custom VJP.
+
+Backward pass: d(feats) = scatter of d(out) back through the gather — which
+is itself a segment-sum, expressed with the jnp ref's transpose (JAX's AD of
+the ref is used; the kernel is forward-only and wrapped in custom_vjp so the
+GNN training path stays differentiable whether or not the kernel is on).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmm.ref import spmm_ell_ref
+from repro.kernels.spmm.spmm import spmm_ell
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def neighbor_reduce(feats, nbr_idx, nbr_mask, agg: str = "sum",
+                    use_kernel: bool = False, interpret: bool = True):
+    """Differentiable neighbor aggregation (GraphSAGE/MeshGraphNet hot path)."""
+    if use_kernel:
+        return spmm_ell(feats, nbr_idx, nbr_mask, agg=agg, interpret=interpret)
+    return spmm_ell_ref(feats, nbr_idx, nbr_mask, agg=agg)
+
+
+def _fwd(feats, nbr_idx, nbr_mask, agg, use_kernel, interpret):
+    out = neighbor_reduce(feats, nbr_idx, nbr_mask, agg, use_kernel, interpret)
+    return out, (feats, nbr_idx, nbr_mask, out)
+
+
+def _bwd(agg, use_kernel, interpret, res, g):
+    feats, nbr_idx, nbr_mask, out = res
+    # AD through the pure-jnp oracle gives the correct scatter for all aggs.
+    _, vjp = jax.vjp(lambda f: spmm_ell_ref(f, nbr_idx, nbr_mask, agg=agg), feats)
+    (dfeats,) = vjp(g)
+    return (dfeats, None, None)
+
+
+neighbor_reduce.defvjp(_fwd, _bwd)

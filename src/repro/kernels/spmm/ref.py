@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the ELL gather-reduce SpMM (GNN aggregation).
+
+    out[i, :] = agg_{k : mask[i,k]} feats[nbr_idx[i, k], :]
+
+agg in {sum, mean, max}; mean divides by the row's valid count (0 -> 0);
+max over an empty row is 0 (GraphSAGE convention for isolated nodes).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmm_ell_ref(feats: jnp.ndarray, nbr_idx: jnp.ndarray,
+                 nbr_mask: jnp.ndarray, agg: str = "sum") -> jnp.ndarray:
+    gathered = feats[nbr_idx]                       # (R, K, F)
+    m = nbr_mask[..., None]                         # (R, K, 1)
+    if agg == "sum":
+        return jnp.sum(jnp.where(m, gathered, 0.0), axis=1)
+    if agg == "mean":
+        s = jnp.sum(jnp.where(m, gathered, 0.0), axis=1)
+        cnt = jnp.maximum(jnp.sum(nbr_mask, axis=1, keepdims=True), 1)
+        return s / cnt.astype(feats.dtype)
+    if agg == "max":
+        neg = jnp.finfo(feats.dtype).min
+        mx = jnp.max(jnp.where(m, gathered, neg), axis=1)
+        has = jnp.any(nbr_mask, axis=1, keepdims=True)
+        return jnp.where(has, mx, 0.0)
+    raise ValueError(f"unknown agg {agg!r}")

@@ -1,0 +1,133 @@
+"""Production training driver: config -> mesh -> sharded train loop with
+checkpoint/restart, failure injection (for FT testing) and async saves.
+
+On the real cluster this binary runs under the pod launcher with
+``jax.distributed.initialize`` (multi-host); on this container it runs the
+same code on the single CPU device (mesh (1,1)).  The *same* train_step is
+what launch/dryrun.py lowers for the 256/512-chip meshes.
+
+Usage (see examples/train_lm.py for a wrapped demo)::
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b \
+        --preset smoke --steps 50 --ckpt-dir /tmp/ckpt --ckpt-every 20
+    ...                                  --resume   # restart after a crash
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry as reg
+from repro.models import transformer as tfm
+from repro.train import checkpoint as ckpt_mod
+from repro.train import data as data_mod
+from repro.train import optimizer as opt_mod
+from repro.train import steps as steps_mod
+
+
+def preset_config(arch: str, preset: str) -> tfm.LMConfig:
+    mod = reg.ARCHES[arch]
+    if preset == "full":
+        return mod.CONFIG
+    if preset == "smoke":
+        return mod.REDUCED
+    if preset == "100m":   # ~110M-param end-to-end trainable-on-CPU config
+        return dataclasses.replace(
+            mod.REDUCED, n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+            d_ff=2304, vocab_size=16384, vocab_pad_to=256, moe=None,
+            mla=None, attn="gqa", d_head=64, name=arch + "-100m")
+    raise ValueError(preset)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen3-14b")
+    p.add_argument("--preset", default="smoke",
+                   choices=["smoke", "100m", "full"])
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--ckpt-dir", default="")
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--resume", action="store_true")
+    p.add_argument("--fail-at-step", type=int, default=0,
+                   help="fault-tolerance test: hard-exit at this step")
+    p.add_argument("--log-every", type=int, default=10)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg = preset_config(args.arch, args.preset)
+    n_params_fn = lambda tree: sum(int(np.prod(x.shape))
+                                   for x in jax.tree.leaves(tree))
+
+    params = tfm.init_lm(jax.random.key(args.seed), cfg)
+    opt_cfg = opt_mod.AdamWConfig(lr=args.lr, warmup_steps=20,
+                                  total_steps=args.steps)
+    opt_state = opt_mod.adamw_init(params)
+    stream = data_mod.TokenStream(vocab_size=cfg.vocab_size,
+                                  batch=args.batch, seq_len=args.seq,
+                                  seed=args.seed)
+    start_step = 0
+    if args.resume and args.ckpt_dir:
+        latest = ckpt_mod.latest_step(args.ckpt_dir)
+        if latest is not None:
+            tree = {"params": params, "opt": opt_state,
+                    "data": {"step": jnp.int32(0)}}
+            restored = ckpt_mod.restore(
+                jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                             tree), args.ckpt_dir)
+            params, opt_state = restored["params"], restored["opt"]
+            stream.restore({"step": int(restored["data"]["step"])})
+            start_step = latest
+            print(f"[train] resumed from step {latest}", flush=True)
+
+    loss_fn = lambda p_, b_: tfm.lm_loss(p_, b_, cfg)
+    step_fn = jax.jit(steps_mod.make_train_step(loss_fn, opt_cfg, 1),
+                      donate_argnums=(0, 1))
+    saver = ckpt_mod.AsyncSaver()
+    print(f"[train] arch={cfg.name} params={n_params_fn(params):,} "
+          f"steps {start_step}..{args.steps}", flush=True)
+
+    t_start = time.perf_counter()
+    losses = []
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if args.fail_at_step and step + 1 == args.fail_at_step:
+            print(f"[train] INJECTED FAILURE at step {step + 1}", flush=True)
+            sys.stdout.flush()
+            import os
+            os._exit(17)       # hard crash: no cleanup, tests restart cycle
+        if (step + 1) % args.log_every == 0:
+            dt = time.perf_counter() - t_start
+            print(f"[train] step {step+1} loss {metrics['loss']:.4f} "
+                  f"lr {metrics['lr']:.2e} gnorm {metrics['grad_norm']:.3f} "
+                  f"({dt/ (step - start_step + 1):.2f}s/step)", flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            saver.save({"params": params, "opt": opt_state,
+                        "data": {"step": jnp.int32(stream.step)}},
+                       args.ckpt_dir, step + 1)
+    saver.wait()
+    if args.ckpt_dir:
+        ckpt_mod.save({"params": params, "opt": opt_state,
+                       "data": {"step": jnp.int32(stream.step)}},
+                      args.ckpt_dir, args.steps)
+        ckpt_mod.cleanup(args.ckpt_dir, keep=2)
+    if len(losses) >= 20:
+        first = float(np.mean(losses[:10]))
+        last = float(np.mean(losses[-10:]))
+        print(f"[train] loss first10={first:.4f} last10={last:.4f} "
+              f"improved={last < first}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,166 @@
+"""Shared GNN substrate: MLPs, segment aggregators, bases, graph containers.
+
+JAX has no native sparse message-passing (BCOO only) — per the assignment,
+message passing here is built from ``jnp.take`` (gather) over an edge index
+plus ``jax.ops.segment_sum`` / ``segment_max`` scatters.  This is the same
+gather/scatter substrate the SSSP-Del engine uses (core/relax.py), which is
+exactly why these four archs share the paper's infrastructure.
+
+Uniform graph form (all four archs, all four shapes):
+
+  * flat COO: feats (N,F) [+ pos (N,3)], src/dst (E,) int32, edge_mask (E,)
+    — covers full_graph_sm, ogb_products and minibatch_lg (the host-side
+    neighbor sampler in graphs/sampler.py emits a padded subgraph in this
+    exact form);
+  * batched molecules: the same per graph, vmapped over a leading B dim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------ MLPs ----
+
+def init_mlp(key, dims: Sequence[int], *, final_bias: bool = True) -> dict:
+    ks = jax.random.split(key, len(dims) - 1)
+    ws, bs = [], []
+    for i, k in enumerate(ks):
+        ws.append(jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32)
+                  / jnp.sqrt(dims[i]))
+        bs.append(jnp.zeros((dims[i + 1],), jnp.float32))
+    return {"w": ws, "b": bs}
+
+
+def mlp(params: dict, x: jax.Array, *, act=jax.nn.silu,
+        final_act: bool = False) -> jax.Array:
+    n = len(params["w"])
+    for i, (w, b) in enumerate(zip(params["w"], params["b"])):
+        x = x @ w.astype(x.dtype) + b.astype(x.dtype)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def init_layernorm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]).astype(dt)
+
+
+# ----------------------------------------------------------- aggregators ----
+
+def segment_sum(vals, dst, n, mask=None):
+    if mask is not None:
+        vals = jnp.where(mask.reshape(mask.shape + (1,) * (vals.ndim - 1)),
+                         vals, 0)
+    return jax.ops.segment_sum(vals, dst, num_segments=n)
+
+
+def segment_mean(vals, dst, n, mask=None):
+    s = segment_sum(vals, dst, n, mask)
+    ones = jnp.ones(vals.shape[0], vals.dtype) if mask is None \
+        else mask.astype(vals.dtype)
+    cnt = jax.ops.segment_sum(ones, dst, num_segments=n)
+    return s / jnp.maximum(cnt, 1.0).reshape((n,) + (1,) * (vals.ndim - 1))
+
+
+def segment_max(vals, dst, n, mask=None):
+    neg = jnp.finfo(vals.dtype).min
+    if mask is not None:
+        vals = jnp.where(mask.reshape(mask.shape + (1,) * (vals.ndim - 1)),
+                         vals, neg)
+    out = jax.ops.segment_max(vals, dst, num_segments=n)
+    return jnp.maximum(out, 0.0)  # empty segments -> 0, and clamp -inf
+
+
+def segment_softmax(logits, dst, n, mask=None):
+    """Numerically-stable scatter softmax (graph attention)."""
+    neg = jnp.float32(-1e30)
+    lg = logits.astype(jnp.float32)
+    if mask is not None:
+        lg = jnp.where(mask, lg, neg)
+    mx = jax.ops.segment_max(lg, dst, num_segments=n)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.exp(lg - mx[dst])
+    if mask is not None:
+        ex = jnp.where(mask, ex, 0.0)
+    den = jax.ops.segment_sum(ex, dst, num_segments=n)
+    return (ex / jnp.maximum(den[dst], 1e-30)).astype(logits.dtype)
+
+
+# ------------------------------------------------------------------ bases ----
+
+def radial_bessel(d: jax.Array, n_radial: int, cutoff: float) -> jax.Array:
+    """DimeNet's radial Bessel basis: sqrt(2/c)·sin(nπd/c)/d (d>0)."""
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    d = jnp.maximum(d.astype(jnp.float32), 1e-9)[..., None]
+    return (jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * d / cutoff) / d)
+
+
+def envelope(d: jax.Array, cutoff: float, p: int = 6) -> jax.Array:
+    """Smooth polynomial cutoff envelope u(d) (DimeNet eq. 8 family)."""
+    x = jnp.clip(d.astype(jnp.float32) / cutoff, 0.0, 1.0)
+    a = -(p + 1) * (p + 2) / 2.0
+    b = p * (p + 2.0)
+    c = -p * (p + 1) / 2.0
+    return 1.0 + a * x ** p + b * x ** (p + 1) + c * x ** (p + 2)
+
+
+def angular_fourier(cos_angle: jax.Array, n_spherical: int) -> jax.Array:
+    """Angular basis cos(l·α), l = 0..n_spherical-1 — the Chebyshev form of
+    DimeNet's spherical harmonics Y_l0(α) (published functional family with
+    fixed frequencies; see DESIGN.md §9)."""
+    ang = jnp.arccos(jnp.clip(cos_angle.astype(jnp.float32), -1.0, 1.0))
+    l = jnp.arange(n_spherical, dtype=jnp.float32)
+    return jnp.cos(ang[..., None] * l)
+
+
+# ------------------------------------------------------- geometry helpers ----
+
+def edge_vectors(pos: jax.Array, src: jax.Array, dst: jax.Array):
+    """Returns (vec (E,3), dist (E,)) for edges src->dst."""
+    v = pos[dst] - pos[src]
+    d = jnp.sqrt(jnp.maximum(jnp.sum(v * v, axis=-1), 1e-12))
+    return v, d
+
+
+def masked_node_mean(x: jax.Array, node_mask: jax.Array | None) -> jax.Array:
+    """Graph readout: mean over valid nodes. x (N, d) -> (d,)."""
+    if node_mask is None:
+        return jnp.mean(x, axis=0)
+    m = node_mask.astype(x.dtype)[:, None]
+    return jnp.sum(x * m, axis=0) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+# ------------------------------------------------------------- loss heads ----
+
+def node_classification_loss(logits: jax.Array, labels: jax.Array,
+                             mask: jax.Array) -> tuple[jax.Array, dict]:
+    """Masked softmax CE over nodes; labels int32, mask bool."""
+    lg = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    safe = jnp.maximum(labels, 0)
+    gold = jnp.take_along_axis(lg, safe[:, None], axis=-1)[:, 0]
+    m = (mask & (labels >= 0)).astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    loss = jnp.sum((logz - gold) * m) / n
+    acc = jnp.sum((jnp.argmax(lg, -1) == labels) * m) / n
+    return loss, {"loss": loss, "acc": acc}
+
+
+def graph_regression_loss(pred: jax.Array, target: jax.Array
+                          ) -> tuple[jax.Array, dict]:
+    err = (pred.astype(jnp.float32) - target.astype(jnp.float32))
+    loss = jnp.mean(err * err)
+    return loss, {"loss": loss, "mae": jnp.mean(jnp.abs(err))}

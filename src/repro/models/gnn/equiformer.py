@@ -1,0 +1,222 @@
+"""Equiformer-V2 (Liao et al., arXiv:2306.12059) — eSCN-style equivariant
+graph attention, SO(2)-restricted.
+
+Assigned config: 12 layers, d_hidden=128, l_max=6, m_max=2, 8 heads.
+
+Representation: each node carries real spherical-tensor features
+``x (N, C, d)`` where C enumerates (l, m) with l <= l_max and |m| <=
+min(l, m_max) — the eSCN m-restriction that cuts the O(L^6) tensor product
+to O(L^3).  For l_max=6, m_max=2: C = 1+3+5+5+5+5+5 = 29.
+
+Per-edge message (the eSCN convolution, z-alignment simplified to azimuthal
+phase factorization — DESIGN.md §9):
+
+  1. gather source features, rotate each (+m, -m) pair by -m*phi_e
+     (phi = edge azimuth) — the SO(2) frame alignment;
+  2. per-(l,m) SO(2) linear maps (complex pair mixing for m>0);
+  3. radial-angular gains: MLP([bessel(d), cos^k(theta)]) -> per-l scale
+     (this is where the polar dependence enters in lieu of full Wigner-D);
+  4. 8-head graph attention: logits from the invariant (m=0) channels,
+     scatter-softmax over incoming edges;
+  5. rotate back (+m*phi), segment-sum into destination nodes.
+
+Node update: per-l channel mixing + equivariant RMS norm (norm taken over
+the m multiplet per (l, channel)) + gated FFN (invariant gate from l=0).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import common as C
+
+
+@dataclasses.dataclass(frozen=True)
+class EqV2Config:
+    n_layers: int = 12
+    d_hidden: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    n_radial: int = 8
+    n_theta: int = 4
+    d_in: int = 16
+    n_out: int = 8
+    cutoff: float = 5.0
+
+    # ---- static coefficient bookkeeping (numpy; baked into the jaxpr)
+    def coef_table(self):
+        """Returns (l_of, m_of) int arrays over the C coefficients; order:
+        for each l: m=0, then (+1,-1), (+2,-2) up to min(l, m_max)."""
+        ls, ms = [], []
+        for l in range(self.l_max + 1):
+            ls.append(l); ms.append(0)
+            for m in range(1, min(l, self.m_max) + 1):
+                ls.extend([l, l]); ms.extend([m, -m])
+        return np.array(ls), np.array(ms)
+
+    @property
+    def n_coef(self) -> int:
+        return len(self.coef_table()[0])
+
+    @property
+    def n_l(self) -> int:
+        return self.l_max + 1
+
+    def pair_index(self):
+        """Indices of (+m, -m) coefficient pairs: (plus, minus, m, l)."""
+        ls, ms = self.coef_table()
+        plus, minus, mm, ll = [], [], [], []
+        for i in range(len(ls)):
+            if ms[i] > 0:
+                j = np.nonzero((ls == ls[i]) & (ms == -ms[i]))[0][0]
+                plus.append(i); minus.append(j)
+                mm.append(ms[i]); ll.append(ls[i])
+        return (np.array(plus), np.array(minus), np.array(mm), np.array(ll))
+
+    def m0_index(self):
+        ls, ms = self.coef_table()
+        idx = np.nonzero(ms == 0)[0]
+        return idx, ls[idx]
+
+
+def init_eqv2(key, cfg: EqV2Config) -> dict:
+    d, nl = cfg.d_hidden, cfg.n_l
+    n_pair = len(cfg.pair_index()[0])
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+
+    def one_layer(k):
+        kk = jax.random.split(k, 8)
+        return {
+            "so2_w0": jax.random.normal(kk[0], (nl, d, d), jnp.float32) * s,
+            "so2_wr": jax.random.normal(kk[1], (n_pair, d, d), jnp.float32) * s,
+            "so2_wi": jax.random.normal(kk[2], (n_pair, d, d), jnp.float32) * s,
+            "radial": C.init_mlp(kk[3], [cfg.n_radial + cfg.n_theta, d, nl]),
+            "attn": C.init_mlp(kk[4], [nl * d, d, cfg.n_heads]),
+            "node_mix": jax.random.normal(kk[5], (nl, d, d), jnp.float32) * s,
+            "ln_scale": jnp.ones((nl, d), jnp.float32),
+            "ffn_gate": C.init_mlp(kk[6], [d, d, d]),
+            "ffn_mix": jax.random.normal(kk[7], (nl, d, d), jnp.float32) * s,
+            "ffn_ln": jnp.ones((nl, d), jnp.float32),
+        }
+
+    blocks = jax.vmap(one_layer)(jax.random.split(ks[0], cfg.n_layers))
+    return {
+        "embed": C.init_mlp(ks[1], [cfg.d_in, d, d]),
+        "blocks": blocks,
+        "head": C.init_mlp(ks[2], [d, d, cfg.n_out]),
+    }
+
+
+def _equiv_norm(x, l_of, scale, eps=1e-6):
+    """Equivariant RMS norm: normalize per (node, l, channel) by the RMS over
+    the m multiplet.  x (N, C, d); l_of (C,) static."""
+    nl = int(l_of.max()) + 1
+    sq = x.astype(jnp.float32) ** 2
+    per_l = jax.ops.segment_sum(sq.swapaxes(0, 1), jnp.asarray(l_of),
+                                num_segments=nl)            # (nl, N, d)
+    cnt = np.bincount(l_of, minlength=nl).astype(np.float32)
+    rms = jnp.sqrt(per_l / cnt[:, None, None] + eps)        # (nl, N, d)
+    denom = rms[jnp.asarray(l_of)].swapaxes(0, 1)           # (N, C, d)
+    return (x / denom * scale[jnp.asarray(l_of)][None]).astype(x.dtype)
+
+
+def eqv2_forward(params, feats, pos, src, dst, cfg: EqV2Config,
+                 edge_mask=None) -> jax.Array:
+    n = feats.shape[0]
+    l_of, _ = cfg.coef_table()
+    plus, minus, pm, pl = cfg.pair_index()
+    m0_idx, m0_l = cfg.m0_index()
+    nc, nl, d, H = cfg.n_coef, cfg.n_l, cfg.d_hidden, cfg.n_heads
+
+    vec, dist = C.edge_vectors(pos, src, dst)
+    # edge angles: theta (polar, vs z), phi (azimuth)
+    cos_t = vec[:, 2] / jnp.maximum(dist, 1e-9)
+    phi = jnp.arctan2(vec[:, 1], vec[:, 0] + 1e-12)
+    rbf = C.radial_bessel(dist, cfg.n_radial, cfg.cutoff) \
+        * C.envelope(dist, cfg.cutoff)[:, None]
+    tbf = cos_t[:, None] ** jnp.arange(cfg.n_theta, dtype=jnp.float32)
+    rad_in = jnp.concatenate([rbf, tbf], axis=-1)           # (E, n_rad+n_th)
+
+    cph = jnp.cos(pm[None, :] * phi[:, None])               # (E, n_pair)
+    sph = jnp.sin(pm[None, :] * phi[:, None])
+
+    # initial embedding: invariant features in the l=0 slot
+    x = jnp.zeros((n, nc, d), feats.dtype)
+    x = x.at[:, 0, :].set(C.mlp(params["embed"], feats))
+
+    def layer(x, blk):
+        msg = x[src]                                        # (E, C, d)
+        # --- SO(2) frame alignment (rotate pairs by -m phi)
+        xp, xm = msg[:, plus], msg[:, minus]                # (E, P, d)
+        rp = cph[..., None] * xp + sph[..., None] * xm
+        rm = -sph[..., None] * xp + cph[..., None] * xm
+        x0 = msg[:, m0_idx]                                 # (E, nl, d)
+        # --- per-(l,m) SO(2) linear
+        y0 = jnp.einsum("eld,ldf->elf", x0, blk["so2_w0"].astype(x.dtype))
+        yp = (jnp.einsum("epd,pdf->epf", rp, blk["so2_wr"].astype(x.dtype))
+              - jnp.einsum("epd,pdf->epf", rm, blk["so2_wi"].astype(x.dtype)))
+        ym = (jnp.einsum("epd,pdf->epf", rp, blk["so2_wi"].astype(x.dtype))
+              + jnp.einsum("epd,pdf->epf", rm, blk["so2_wr"].astype(x.dtype)))
+        # --- radial-angular gains per l
+        g = C.mlp(blk["radial"], rad_in)                    # (E, nl)
+        y0 = y0 * g[..., None]
+        yp = yp * g[:, pl][..., None]
+        ym = ym * g[:, pl][..., None]
+        # --- attention from invariants
+        logits = C.mlp(blk["attn"], y0.reshape(-1, nl * d)) \
+            / np.sqrt(d / H)                                # (E, H)
+        alpha = jax.vmap(lambda lg: C.segment_softmax(lg, dst, n, edge_mask),
+                         in_axes=1, out_axes=1)(logits)     # (E, H)
+
+        def weight_heads(y):                                # (E, K, d)
+            yh = y.reshape(y.shape[0], y.shape[1], H, d // H)
+            return (yh * alpha[:, None, :, None]).reshape(y.shape)
+
+        y0, yp, ym = weight_heads(y0), weight_heads(yp), weight_heads(ym)
+        # --- rotate back (+m phi)
+        bp = cph[..., None] * yp - sph[..., None] * ym
+        bm = sph[..., None] * yp + cph[..., None] * ym
+        out = jnp.zeros((msg.shape[0], nc, d), x.dtype)
+        out = out.at[:, m0_idx].set(y0)
+        out = out.at[:, plus].set(bp)
+        out = out.at[:, minus].set(bm)
+        if edge_mask is not None:
+            out = jnp.where(edge_mask[:, None, None], out, 0)
+        agg = jax.ops.segment_sum(out, dst, num_segments=n)  # (N, C, d)
+        # --- node update: per-l mixing (weight gathered per coefficient so
+        # each x[:, c] is multiplied once, not nl times) + equivariant norm
+        w_mix = blk["node_mix"].astype(x.dtype)[jnp.asarray(l_of)]  # (C, d, d)
+        mixed = jnp.einsum("ncd,cdf->ncf", agg, w_mix)
+        x = x + _equiv_norm(mixed, l_of, blk["ln_scale"])
+        # --- gated FFN: invariant gate from l=0 broadcast over coefficients
+        gate = jax.nn.silu(C.mlp(blk["ffn_gate"], x[:, 0, :]))  # (N, d)
+        w_ffn = blk["ffn_mix"].astype(x.dtype)[jnp.asarray(l_of)]
+        val = jnp.einsum("ncd,cdf->ncf", x, w_ffn)
+        x = x + _equiv_norm(val * gate[:, None, :], l_of, blk["ffn_ln"])
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(layer, prevent_cse=False),
+                        x, params["blocks"])
+    return C.mlp(params["head"], x[:, 0, :])                # invariant readout
+
+
+def eqv2_node_loss(params, batch, cfg: EqV2Config):
+    out = eqv2_forward(params, batch["feats"], batch["pos"], batch["src"],
+                       batch["dst"], cfg, batch.get("edge_mask"))
+    return C.node_classification_loss(out, batch["labels"],
+                                      batch["label_mask"])
+
+
+def eqv2_graph_loss(params, batch, cfg: EqV2Config):
+    def one(feats, pos, src, dst, em):
+        out = eqv2_forward(params, feats, pos, src, dst, cfg, em)
+        return jnp.sum(C.masked_node_mean(out, None))
+
+    pred = jax.vmap(one)(batch["feats"], batch["pos"], batch["src"],
+                         batch["dst"], batch["edge_mask"])
+    return C.graph_regression_loss(pred, batch["target"])

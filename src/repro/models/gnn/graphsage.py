@@ -1,0 +1,82 @@
+"""GraphSAGE (Hamilton et al., arXiv:1706.02216), mean aggregator.
+
+Assigned config: 2 layers, d_hidden=128, sample sizes 25-10 (training-time
+neighbor fanout — realized by the host-side sampler in graphs/sampler.py,
+which emits a padded COO subgraph consumed by the same forward as the
+full-graph shapes).
+
+Layer: h'_v = ReLU(W_self h_v + W_nbr mean_{u in N(v)} h_u), L2-normalized
+(as in the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import common as C
+
+
+@dataclasses.dataclass(frozen=True)
+class SAGEConfig:
+    n_layers: int = 2
+    d_hidden: int = 128
+    d_in: int = 602
+    n_out: int = 41
+    sample_sizes: tuple[int, ...] = (25, 10)
+    normalize: bool = True
+
+
+def init_sage(key, cfg: SAGEConfig) -> dict:
+    layers = []
+    d_prev = cfg.d_in
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    for i in range(cfg.n_layers):
+        d_out = cfg.d_hidden
+        k1, k2 = jax.random.split(ks[i])
+        layers.append({
+            "w_self": jax.random.normal(k1, (d_prev, d_out), jnp.float32)
+                      / jnp.sqrt(d_prev),
+            "w_nbr": jax.random.normal(k2, (d_prev, d_out), jnp.float32)
+                     / jnp.sqrt(d_prev),
+            "b": jnp.zeros((d_out,), jnp.float32),
+        })
+        d_prev = d_out
+    head = jax.random.normal(ks[-1], (d_prev, cfg.n_out), jnp.float32) \
+        / jnp.sqrt(d_prev)
+    return {"layers": layers, "head": head}
+
+
+def sage_forward(params, feats, src, dst, cfg: SAGEConfig,
+                 edge_mask=None) -> jax.Array:
+    """Full-graph/subgraph forward over COO edges src->dst."""
+    n = feats.shape[0]
+    h = feats
+    for lyr in params["layers"]:
+        nbr = C.segment_mean(h[src], dst, n, edge_mask)
+        h = jax.nn.relu(h @ lyr["w_self"].astype(h.dtype)
+                        + nbr @ lyr["w_nbr"].astype(h.dtype)
+                        + lyr["b"].astype(h.dtype))
+        if cfg.normalize:
+            h = h / jnp.maximum(
+                jnp.linalg.norm(h.astype(jnp.float32), axis=-1,
+                                keepdims=True), 1e-6).astype(h.dtype)
+    return h @ params["head"].astype(h.dtype)
+
+
+def sage_node_loss(params, batch, cfg: SAGEConfig):
+    out = sage_forward(params, batch["feats"], batch["src"], batch["dst"],
+                       cfg, batch.get("edge_mask"))
+    return C.node_classification_loss(out, batch["labels"],
+                                      batch["label_mask"])
+
+
+def sage_graph_loss(params, batch, cfg: SAGEConfig):
+    def one(feats, src, dst, emask):
+        out = sage_forward(params, feats, src, dst, cfg, emask)
+        return jnp.sum(C.masked_node_mean(out, None))
+
+    pred = jax.vmap(one)(batch["feats"], batch["src"], batch["dst"],
+                         batch["edge_mask"])
+    return C.graph_regression_loss(pred, batch["target"])

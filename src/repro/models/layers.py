@@ -1,0 +1,174 @@
+"""Shared transformer layers: norms, RoPE, blockwise (flash-style) attention
+with GQA + optional qk-norm, and gated MLPs.
+
+All functions are pure; parameters are plain dict pytrees created by the
+``init_*`` helpers (shape-only via jax.eval_shape for the dry-run).  Compute
+dtype is bf16 with f32 accumulation/normalization (TPU convention); params
+are kept f32 (master copy) and cast at use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- norms ----
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def init_rms_norm(d: int) -> jax.Array:
+    return jnp.ones((d,), jnp.float32)
+
+
+# ----------------------------------------------------------------- rope ----
+
+def rope_angles(positions: jax.Array, d_head: int, theta: float = 1e4
+                ) -> tuple[jax.Array, jax.Array]:
+    """positions (..., S) int -> (cos, sin) of shape (..., S, d_head//2)."""
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, D); cos/sin (..., S, D//2) broadcast over heads."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(dt)
+
+
+# ------------------------------------------------- blockwise attention ----
+
+def _gqa_scores(q, k):
+    """q (B, S, nq, D), k (B, T, nkv, D) -> scores (B, nkv, G, S, T)."""
+    B, S, nq, D = q.shape
+    nkv = k.shape[2]
+    G = nq // nkv
+    qg = q.reshape(B, S, nkv, G, D)
+    return jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                      k.astype(jnp.float32))
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool, block_k: int = 512,
+                        q_offset: jax.Array | int = 0,
+                        kv_len: jax.Array | None = None) -> jax.Array:
+    """Flash-style attention: scan over KV blocks with running softmax stats.
+
+    Memory is O(B * heads * S * block_k) instead of O(S * T): required for
+    the 32k prefill cells and the standard TPU approach (the Pallas flash
+    kernel on real hardware has this exact dataflow; on this CPU container
+    the scan itself is the validated implementation).
+
+    q (B, S, nq, D); k/v (B, T, nkv, D), nq % nkv == 0.
+    ``q_offset``: global position of q[0] (decode: T_cur; train/prefill: 0).
+    ``kv_len``: number of valid kv positions (decode with a partially filled
+    cache); None means all T are valid.
+    Returns (B, S, nq, D) in q.dtype.
+    """
+    B, S, nq, D = q.shape
+    T, nkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = nq // nkv
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    nblk = -(-T // block_k)
+    Tp = nblk * block_k
+    if Tp != T:
+        pad = Tp - T
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block_k, nkv, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, block_k, nkv, Dv).transpose(1, 0, 2, 3, 4)
+
+    qg = q.reshape(B, S, nkv, G, D)
+    q_pos = (jnp.arange(S) + q_offset)[None, None, None, :, None]  # (1,1,1,S,1)
+
+    def step(carry, blk):
+        m, l, acc, t0 = carry
+        kblk, vblk = blk  # (B, bk, nkv, D)
+        s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                       kblk.astype(jnp.float32)) * scale  # (B,nkv,G,S,bk)
+        kv_pos = (t0 + jnp.arange(block_k))[None, None, None, None, :]
+        mask = kv_pos < (Tp if kv_len is None else kv_len)
+        if causal:
+            mask = mask & (kv_pos <= q_pos)
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard: rows with no valid key yet keep m=-inf; exp(-inf - -inf) nan
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p, vblk.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new, t0 + block_k), None
+
+    m0 = jnp.full((B, nkv, G, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, nkv, G, S), jnp.float32)
+    a0 = jnp.zeros((B, nkv, G, S, Dv), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, jnp.int32(0)), (kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, nq, Dv)
+    return out.astype(q.dtype)
+
+
+def attention_ref(q, k, v, *, causal: bool, q_offset=0, kv_len=None):
+    """Dense O(S*T) oracle for blockwise_attention (tests only)."""
+    B, S, nq, D = q.shape
+    T, nkv = k.shape[1], k.shape[2]
+    G = nq // nkv
+    s = _gqa_scores(q, k) / jnp.sqrt(D)  # (B,nkv,G,S,T)
+    q_pos = (jnp.arange(S) + q_offset)[None, None, None, :, None]
+    kv_pos = jnp.arange(T)[None, None, None, None, :]
+    mask = jnp.ones((1, 1, 1, S, T), bool)
+    if kv_len is not None:
+        mask = mask & (kv_pos < kv_len)
+    if causal:
+        mask = mask & (kv_pos <= q_pos)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, -1, keepdims=True), p, 0.0)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, nq, v.shape[-1]).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ mlp ----
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = jax.nn.silu(x @ w_gate.astype(dt)) * (x @ w_up.astype(dt))
+    return h @ w_down.astype(dt)
+
+
+def init_swiglu(key, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / jnp.sqrt(d_model)
+    s_ff = 1.0 / jnp.sqrt(d_ff)
+    return {
+        "w_gate": jax.random.normal(k1, (d_model, d_ff), jnp.float32) * s_in,
+        "w_up": jax.random.normal(k2, (d_model, d_ff), jnp.float32) * s_in,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), jnp.float32) * s_ff,
+    }
+
+
+def linear(x: jax.Array, w: jax.Array) -> jax.Array:
+    return x @ w.astype(x.dtype)
+
+
+def init_linear(key, d_in: int, d_out: int) -> jax.Array:
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) / jnp.sqrt(d_in)

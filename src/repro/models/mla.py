@@ -1,0 +1,142 @@
+"""Multi-head Latent Attention (MLA, DeepSeek-V2 / MiniCPM3 style).
+
+Projections:
+  q:  x -> q_lora (rank r_q, RMS-normed) -> per-head [nope dn | rope dr]
+  kv: x -> [c_kv (rank r_kv, RMS-normed) | shared k_rope (dr)]
+  k_h = [W_uk c_kv | k_rope (broadcast over heads)],  v_h = W_uv c_kv
+
+Train/prefill reconstruct full k/v and run blockwise attention (activation
+cost dominated by S anyway).  Decode uses the **absorbed** form: q_nope is
+folded through W_uk so scores are taken directly against the latent cache
+(c_kv, k_rope) — the cache holds only (r_kv + dr) per token, which is the
+whole point of MLA (memory term in the roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+
+
+def init_mla(key, d_model: int, n_heads: int, cfg: MLAConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    s = lambda d: 1.0 / jnp.sqrt(d)
+    return {
+        "w_dq": jax.random.normal(ks[0], (d_model, rq), jnp.float32) * s(d_model),
+        "q_norm": layers.init_rms_norm(rq),
+        "w_uq": jax.random.normal(ks[1], (rq, n_heads * (dn + dr)), jnp.float32) * s(rq),
+        "w_dkv": jax.random.normal(ks[2], (d_model, rkv + dr), jnp.float32) * s(d_model),
+        "kv_norm": layers.init_rms_norm(rkv),
+        "w_uk": jax.random.normal(ks[3], (rkv, n_heads * dn), jnp.float32) * s(rkv),
+        "w_uv": jax.random.normal(ks[4], (rkv, n_heads * dv), jnp.float32) * s(rkv),
+        "w_o": jax.random.normal(ks[5], (n_heads * dv, d_model), jnp.float32) * s(n_heads * dv),
+    }
+
+
+def mla_qkv_full(p: dict, x: jax.Array, n_heads: int, cfg: MLAConfig,
+                 positions: jax.Array, rope_theta: float):
+    """Train/prefill path: returns q, k, v as (B, S, H, *) full tensors plus
+    the latent (c_kv, k_rope) pair for cache seeding."""
+    B, S, _ = x.shape
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ql = layers.rms_norm(x @ p["w_dq"].astype(x.dtype), p["q_norm"])
+    q = (ql @ p["w_uq"].astype(x.dtype)).reshape(B, S, n_heads, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    ckv_full = x @ p["w_dkv"].astype(x.dtype)
+    c_kv = layers.rms_norm(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = ckv_full[..., cfg.kv_lora_rank:]                    # (B, S, dr)
+
+    cos, sin = layers.rope_angles(positions, dr, rope_theta)
+    q_rope = layers.apply_rope(q_rope, cos, sin)
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    k_nope = (c_kv @ p["w_uk"].astype(x.dtype)).reshape(B, S, n_heads, dn)
+    v = (c_kv @ p["w_uv"].astype(x.dtype)).reshape(B, S, n_heads, dv)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, n_heads, dr))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    return q, k, v, c_kv, k_rope
+
+
+def mla_attention_full(p: dict, x: jax.Array, n_heads: int, cfg: MLAConfig,
+                       positions: jax.Array, rope_theta: float,
+                       block_k: int = 512, attn_impl: str = "flash_vjp"
+                       ) -> jax.Array:
+    from repro.models import flash as flash_mod
+    q, k, v, _, _ = mla_qkv_full(p, x, n_heads, cfg, positions, rope_theta)
+    # v's value dim (dv) differs from k's (dn+dr); both paths support that.
+    if attn_impl == "flash_vjp":
+        out = flash_mod.flash_attention(q, k, v, True, block_k)
+    else:
+        out = layers.blockwise_attention(q, k, v, causal=True, block_k=block_k)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, -1) @ p["w_o"].astype(x.dtype)
+
+
+def mla_decode_absorbed(p: dict, x: jax.Array, n_heads: int, cfg: MLAConfig,
+                        c_kv_cache: jax.Array, k_rope_cache: jax.Array,
+                        kv_len: jax.Array, rope_theta: float) -> jax.Array:
+    """Absorbed single-token decode.
+
+    x (B, 1, d); c_kv_cache (B, T, r_kv) — includes the current token already
+    appended by the caller; k_rope_cache (B, T, dr); kv_len: valid length.
+    """
+    B = x.shape[0]
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rkv = cfg.kv_lora_rank
+    T = c_kv_cache.shape[1]
+
+    ql = layers.rms_norm(x @ p["w_dq"].astype(x.dtype), p["q_norm"])
+    q = (ql @ p["w_uq"].astype(x.dtype)).reshape(B, 1, n_heads, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    pos = (kv_len - 1)[None] if jnp.ndim(kv_len) == 0 else (kv_len - 1)
+    cos, sin = layers.rope_angles(jnp.reshape(pos, (1, 1)), dr, rope_theta)
+    q_rope = layers.apply_rope(q_rope, cos, sin)
+
+    # absorb q_nope through W_uk:  (B,1,H,dn) x (H,rkv,dn) -> (B,1,H,rkv)
+    w_uk = p["w_uk"].reshape(rkv, n_heads, dn).transpose(1, 0, 2)  # (H,rkv,dn)
+    q_lat = jnp.einsum("bshd,hrd->bshr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat,
+                         c_kv_cache.astype(jnp.float32))
+              + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                           k_rope_cache.astype(jnp.float32)))
+    scores = scores / jnp.sqrt(jnp.float32(dn + dr))
+    mask = jnp.arange(T)[None, None, None, :] < kv_len
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+
+    ctx_lat = jnp.einsum("bhst,btr->bshr", probs,
+                         c_kv_cache.astype(jnp.float32))       # (B,1,H,rkv)
+    w_uv = p["w_uv"].reshape(rkv, n_heads, dv).transpose(1, 0, 2)  # (H,rkv,dv)
+    out = jnp.einsum("bshr,hrd->bshd", ctx_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, n_heads * dv).astype(x.dtype)
+    return out @ p["w_o"].astype(x.dtype)
+
+
+def mla_latent_for_token(p: dict, x: jax.Array, cfg: MLAConfig,
+                         pos: jax.Array, rope_theta: float):
+    """(c_kv, k_rope) of a single new token (decode cache append)."""
+    ckv_full = x @ p["w_dkv"].astype(x.dtype)
+    c_kv = layers.rms_norm(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = ckv_full[..., cfg.kv_lora_rank:]
+    dr = cfg.qk_rope_dim
+    cos, sin = layers.rope_angles(jnp.reshape(pos, (1, 1)), dr, rope_theta)
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return c_kv, k_rope

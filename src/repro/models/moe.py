@@ -1,0 +1,167 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+Dispatch strategy (TPU/JAX-native, MegaBlocks-flavoured but dense):
+
+  1. router logits -> top_k experts per token, softmax-renormalized gates;
+  2. flatten (token, slot) assignments, sort by expert id;
+  3. position-within-expert via cumsum over the sorted one-hot;
+  4. tokens beyond capacity C are *dropped* (GShard semantics,
+     capacity_factor configurable);
+  5. gather into an (E, C, d) buffer -> batched expert SwiGLU
+     (einsum over the expert dim; experts sharded over the "model" axis =
+     expert parallelism) -> scatter-combine weighted by gates.
+
+No (T, E, C) one-hot is ever materialized — the dispatch is O(T*k) gathers
+plus one sort, which is what makes the 1M-token train cells compilable.
+
+Aux losses: standard load-balancing loss (Switch) + router z-loss, returned
+for logging and added to the LM loss by the caller.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+BUFFER_CONSTRAINT = True  # §Perf D1 toggle (see EXPERIMENTS.md)
+# Chunk size (in (token, slot) assignments) for the dispatch/combine
+# gathers; 0 disables.  Bounds the (T*K, d) transients at the 1M-token
+# prefill cells (§Perf F3).  Must divide T*K to engage.
+DISPATCH_CHUNK = 524_288
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                  # per-expert hidden dim
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3
+    balance_coef: float = 1e-2
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig) -> dict:
+    kr, ke = jax.random.split(key)
+    E, F = cfg.n_experts, cfg.d_ff
+    s_in = 1.0 / jnp.sqrt(d_model)
+    s_ff = 1.0 / jnp.sqrt(F)
+    k1, k2, k3 = jax.random.split(ke, 3)
+    return {
+        "router": jax.random.normal(kr, (d_model, E), jnp.float32) * s_in,
+        "w_gate": jax.random.normal(k1, (E, d_model, F), jnp.float32) * s_in,
+        "w_up": jax.random.normal(k2, (E, d_model, F), jnp.float32) * s_in,
+        "w_down": jax.random.normal(k3, (E, F, d_model), jnp.float32) * s_ff,
+    }
+
+
+def moe_capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU sublane alignment
+
+
+def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig
+                ) -> tuple[jax.Array, dict]:
+    """x (..., d) -> (..., d); aux dict carries router losses."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xt = x.reshape(-1, d)
+    T = xt.shape[0]
+    E, K = cfg.n_experts, cfg.top_k
+    C = moe_capacity(T, cfg)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                  # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- aux losses
+    me = jnp.mean(probs, axis=0)                                   # (E,)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E), axis=0)
+    balance = cfg.balance_coef * E * jnp.sum(me * ce)
+    z = cfg.router_z_coef * jnp.mean(jax.nn.logsumexp(logits, -1) ** 2)
+
+    # ---- sort-based dispatch
+    flat_e = gate_idx.reshape(-1)                                  # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    flat_g = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_, sg = flat_e[order], flat_t[order], flat_g[order]
+    # position of each sorted slot within its expert
+    pos_all = jnp.arange(T * K)
+    first_of_e = jnp.searchsorted(se, jnp.arange(E), side="left")  # (E,)
+    pos_in_e = pos_all - first_of_e[se]
+    keep = pos_in_e < C
+    slot = se * C + jnp.where(keep, pos_in_e, 0)
+
+    safe_slot = jnp.where(keep, slot, E * C - 1)
+    n_slots = T * K
+    if DISPATCH_CHUNK and n_slots > DISPATCH_CHUNK \
+            and n_slots % DISPATCH_CHUNK == 0:
+        # Chunked dispatch (§Perf F3): the one-shot gather xt[st_]
+        # materializes a (T*K, d) tensor — 34 GB at the 1M-token prefill
+        # cells.  Scanning over slot chunks bounds the transient to
+        # (chunk, d) while keeping routing/drops bit-identical (positions
+        # were computed globally above).
+        nchunk = n_slots // DISPATCH_CHUNK
+        st_c = st_.reshape(nchunk, DISPATCH_CHUNK)
+        sl_c = safe_slot.reshape(nchunk, DISPATCH_CHUNK)
+        kp_c = keep.reshape(nchunk, DISPATCH_CHUNK)
+
+        def disp(buf, ch):
+            st_i, sl_i, kp_i = ch
+            upd = jnp.where(kp_i[:, None], xt[st_i], 0.0)
+            return buf.at[sl_i].add(upd), None
+
+        buf, _ = jax.lax.scan(
+            disp, jnp.zeros((E * C, d), xt.dtype), (st_c, sl_c, kp_c))
+    else:
+        buf = jnp.zeros((E * C, d), xt.dtype)
+        buf = buf.at[safe_slot].add(jnp.where(keep[:, None], xt[st_], 0.0))
+    buf = buf.reshape(E, C, d)
+    # Constrain the dispatch buffer to (E over model [EP], d over the batch
+    # axes): the scatter's cross-shard reduction then moves (E/tp, C, d/dp)
+    # slices instead of the full (E, C, d) buffer (EXPERIMENTS.md §Perf D1).
+    # No-op outside the activation context or with BUFFER_CONSTRAINT off.
+    if BUFFER_CONSTRAINT:
+        from repro.models import sharding as shd_mod
+        buf = shd_mod.wsc(buf, "model", None, "batch")
+
+    # ---- expert SwiGLU (batched einsum over E; E sharded -> EP)
+    wg = params["w_gate"].astype(xt.dtype)
+    wu = params["w_up"].astype(xt.dtype)
+    wd = params["w_down"].astype(xt.dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, wu)
+    y = jnp.einsum("ecf,efd->ecd", h, wd)                          # (E, C, d)
+    if BUFFER_CONSTRAINT:
+        from repro.models import sharding as shd_mod
+        y = shd_mod.wsc(y, "model", None, "batch")
+
+    # ---- combine: gather each kept slot's output back to its token
+    y_flat = y.reshape(E * C, d)
+    if DISPATCH_CHUNK and n_slots > DISPATCH_CHUNK \
+            and n_slots % DISPATCH_CHUNK == 0:
+        sg_c = sg.reshape(nchunk, DISPATCH_CHUNK)
+
+        def comb(out, ch):
+            st_i, sl_i, kp_i, sg_i = ch
+            contrib = jnp.where(kp_i[:, None],
+                                y_flat[sl_i] * sg_i[:, None].astype(xt.dtype),
+                                0.0)
+            return out.at[st_i].add(contrib), None
+
+        out, _ = jax.lax.scan(comb, jnp.zeros_like(xt),
+                              (st_c, sl_c, kp_c, sg_c))
+    else:
+        contrib = jnp.where(keep[:, None],
+                            y_flat[slot] * sg[:, None].astype(xt.dtype), 0.0)
+        out = jnp.zeros_like(xt).at[st_].add(contrib)
+
+    frac_dropped = 1.0 - jnp.sum(keep.astype(jnp.float32)) / (T * K)
+    aux = {"moe_balance": balance, "moe_z": z, "moe_dropped": frac_dropped}
+    return out.reshape(orig_shape), aux

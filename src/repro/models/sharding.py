@@ -1,0 +1,200 @@
+"""Parameter/activation sharding rules (logical axes -> mesh axes).
+
+Production mesh axes (launch/mesh.py):
+
+  * ``data``  (16) — batch parallelism + FSDP (ZeRO-3-style parameter
+    sharding; GSPMD inserts the per-use all-gathers);
+  * ``model`` (16) — tensor parallelism (heads / d_ff / experts / vocab);
+  * ``pod``   (2, multi-pod only) — pure data parallelism across pods:
+    params replicated pod-wise (gradient all-reduce crosses the DCN once per
+    step), batch sharded over (pod, data).
+
+Divisibility is checked per-dimension: a rule that does not divide evenly is
+dropped to ``None`` for that dim (e.g. minicpm3's 40 heads on a 16-way model
+axis — the flattened head*dim projections still shard; the per-head score
+layout is left to GSPMD).
+"""
+from __future__ import annotations
+
+import re
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    names = (axis,) if isinstance(axis, str) else tuple(axis)
+    size = 1
+    for n in names:
+        if n not in mesh.shape:
+            return False
+        size *= mesh.shape[n]
+    return dim % size == 0
+
+
+def spec_for(shape: Sequence[int], wanted: Sequence, mesh: Mesh) -> P:
+    """Clamp a wanted spec to the dims that actually divide."""
+    out = []
+    for dim, ax in zip(shape, wanted):
+        out.append(ax if _fits(dim, mesh, ax) else None)
+    return P(*out)
+
+
+# Param-path rules: (regex over "/".join(path), wanted logical spec where
+# "fsdp" -> data axis, "tp" -> model axis; matched against the *trailing*
+# dims — stacked-layer leading L dims get None automatically).
+_LM_RULES: list[tuple[str, tuple]] = [
+    (r"embed$",                ("tp", "fsdp")),        # (V, d)
+    (r"lm_head$",              ("fsdp", "tp")),        # (d, V)
+    (r"final_norm$|.*_norm$|.*norm$", (None,)),        # (d,) and friends
+    # GQA attention
+    (r"attn/wq$|attn/wk$|attn/wv$", ("fsdp", "tp")),   # (d, h*dh)
+    (r"attn/wo$",              ("tp", "fsdp")),        # (h*dh, d)
+    # MLA
+    (r"attn/w_dq$",            ("fsdp", "tp")),        # (d, rq)
+    (r"attn/w_uq$",            ("fsdp", "tp")),        # (rq, h*(dn+dr))
+    (r"attn/w_dkv$",           ("fsdp", None)),        # (d, rkv+dr)
+    (r"attn/w_uk$|attn/w_uv$", (None, "tp")),          # (rkv, h*dn)
+    (r"attn/w_o$",             ("tp", "fsdp")),        # (h*dv, d)
+    # dense MLP
+    (r"mlp/w_gate$|mlp/w_up$", ("fsdp", "tp")),        # (d, F)
+    (r"mlp/w_down$",           ("tp", "fsdp")),        # (F, d)
+    # MoE: experts over model axis (expert parallelism)
+    (r"moe/router$",           ("fsdp", None)),        # (d, E)
+    (r"moe/w_gate$|moe/w_up$", ("tp", "fsdp", None)),  # (E, d, F)
+    (r"moe/w_down$",           ("tp", None, "fsdp")),  # (E, F, d)
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(k.name)
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _resolve(ax, fsdp_axis, tp_axis):
+    if ax == "fsdp":
+        return fsdp_axis
+    if ax == "tp":
+        return tp_axis
+    return ax
+
+
+def lm_param_specs(params_shape, mesh: Mesh, *, fsdp_axis="data",
+                   tp_axis="model") -> "jax.tree_util.PyTreeDef":
+    """PartitionSpec tree for an LM param pytree (works on shapes or arrays).
+
+    Stacked-layer leaves (under ``blocks``) get a leading None for the L dim.
+    """
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        shape = leaf.shape
+        stacked = pstr.startswith("blocks/")
+        trail = shape[1:] if stacked else shape
+        for pat, wanted in _LM_RULES:
+            if re.search(pat, pstr):
+                w = tuple(_resolve(a, fsdp_axis, tp_axis) for a in wanted)
+                if len(w) != len(trail):   # e.g. stacked norms (L, d)
+                    w = (None,) * (len(trail) - 1) + (w[-1],) if len(trail) else ()
+                sp = spec_for(trail, w, mesh)
+                return P(*((None,) + tuple(sp))) if stacked else sp
+        return P(*((None,) * len(shape)))  # default: replicated
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def lm_shardings(params_shape, mesh: Mesh, **kw):
+    specs = lm_param_specs(params_shape, mesh, **kw)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes the global batch is sharded over: (pod, data) when multi-pod."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def lm_batch_spec(mesh: Mesh) -> P:
+    return P(batch_axes(mesh))
+
+
+def cache_spec(cache_shape, mesh: Mesh) -> P:
+    """KV cache sharding: batch over (pod,data); cache-length dim over model
+    (context parallelism for 32k decode — the memory-roofline winner; see
+    EXPERIMENTS.md §Perf)."""
+    b_ax = batch_axes(mesh)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        if name == "length":
+            return P()
+        # (L, B, T, ...) — shard B over data axes, T over model.
+        shape = leaf.shape
+        want = [None, b_ax, "model"] + [None] * (len(shape) - 3)
+        return spec_for(shape, want, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def tree_specs_to_shardings(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ----------------------------------------------------- graph-model specs ----
+
+def graph_axes(mesh: Mesh) -> tuple[str, ...]:
+    """GNN / recsys / SSSP models flatten every mesh axis into one big
+    vertex/row partition (shared-nothing, paper §3)."""
+    return tuple(mesh.axis_names)
+
+
+def row_sharded(mesh: Mesh, ndim: int) -> NamedSharding:
+    """Shard dim0 over all mesh axes, replicate the rest (node/edge/row
+    tables)."""
+    return NamedSharding(mesh, P(graph_axes(mesh), *([None] * (ndim - 1))))
+
+
+# ------------------------------------------------ activation-sharding ctx ----
+# Set by the launcher/dry-run around tracing; model code consults it to
+# constrain activation layouts (see EXPERIMENTS.md §Perf iterations A2/D1).
+ACT_CTX: list = []
+
+
+class activation_context:
+    def __init__(self, mesh: Mesh, batch_axes_):
+        self.proto = (mesh, tuple(batch_axes_))
+
+    def __enter__(self):
+        ACT_CTX.append(self.proto)
+        return self
+
+    def __exit__(self, *exc):
+        ACT_CTX.pop()
+        return False
+
+
+def wsc(x, *wanted):
+    """with_sharding_constraint against the active context; ``wanted`` uses
+    "batch" for the batch axes, a mesh-axis name, or None per dim.  No-op
+    when no context is active or a dim does not divide."""
+    if not ACT_CTX:
+        return x
+    mesh, bx = ACT_CTX[-1]
+    resolved = tuple(bx if a == "batch" else a for a in wanted)
+    spec = spec_for(x.shape, resolved, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def wsc_batch(x):
+    return wsc(x, "batch", *([None] * (x.ndim - 1)))

@@ -1,0 +1,480 @@
+"""Decoder-only LM family covering the five assigned transformer archs.
+
+One config dataclass + one parameter pytree layout covers:
+
+  * olmoe-1b-7b          — GQA(16/16) + MoE 64e top-8
+  * moonshot-v1-16b-a3b  — GQA(16/16) + MoE 64e top-6
+  * minicpm3-4b          — MLA (DeepSeek-V2 style latent attention), dense
+  * mistral-large-123b   — GQA(96/8), dense
+  * qwen3-14b            — GQA(40/8) + qk-norm, dense
+
+Layer parameters are *stacked* on a leading ``L`` axis and the forward pass
+is a ``jax.lax.scan`` over layers (remat-wrapped) so the lowered HLO contains
+one layer body regardless of depth — this is what keeps the 88-layer
+mistral-large dry-run compile tractable and is also the standard production
+trick (MaxText does the same).
+
+Three entry points match the assigned input shapes:
+
+  * ``lm_loss``      — training forward+loss (train_4k), grad-accum handled
+                       by the caller (train/steps.py);
+  * ``lm_forward``   — full-sequence logits (prefill_32k uses the blockwise
+                       attention path; activations stay O(S·block_k));
+  * ``decode_step``  — one token with a KV cache (decode_32k).  GQA caches
+                       (k, v); MLA caches the latent (c_kv, k_rope) pair and
+                       uses the absorbed-matmul form (the memory-roofline
+                       point of MLA).
+
+``long_500k`` is *skipped* for all five archs: they are pure full-attention
+models (see DESIGN.md §5 / EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flash as flash_mod
+from repro.models import layers, mla as mla_mod, moe as moe_mod
+
+# --- activation-sharding context (set by the launcher/dry-run) -------------
+# When set, the residual stream is constrained to BATCH-ONLY sharding at
+# every layer boundary.  Without it GSPMD is free to shard x over the model
+# axis and then all-gathers activations around every matmul (measured:
+# 12.1 GB wire per layer on mistral-large train_4k — EXPERIMENTS.md §Perf
+# iteration A2); with it, the per-layer collectives collapse to the
+# Megatron pattern (weights gathered once, two x-sized all-reduces).
+# The machinery lives in models/sharding.py (shared with the MoE layer).
+from repro.models.sharding import activation_context as activation_sharding  # noqa: E402
+from repro.models.sharding import wsc_batch as _wsc_batch  # noqa: E402
+
+
+def attention(q, k, v, *, causal: bool, block_k: int, impl: str):
+    """Training/prefill attention dispatch (decode has its own dense path)."""
+    if impl == "flash_vjp":
+        return flash_mod.flash_attention(q, k, v, causal, block_k)
+    return layers.blockwise_attention(q, k, v, causal=causal, block_k=block_k)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int | None = None          # default d_model // n_heads
+    attn: str = "gqa"                  # "gqa" | "mla"
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    moe: moe_mod.MoEConfig | None = None
+    mla: mla_mod.MLAConfig | None = None
+    tie_embeddings: bool = False
+    vocab_pad_to: int = 256
+    # performance knobs (hillclimb targets; see EXPERIMENTS.md §Perf)
+    remat: bool = True
+    block_k: int = 512
+    grad_accum: int = 1                # microbatches per train step
+    compute_dtype: Any = jnp.bfloat16
+    # "flash_vjp": custom-VJP flash attention (O(S*d) residuals) — the
+    # optimized default.  "scan": plain lax.scan + autodiff (baseline; its
+    # backward saves O(S*T) softmax numerators — see EXPERIMENTS.md §Perf).
+    attn_impl: str = "flash_vjp"
+    # "layer": stash one residual per layer (default).  "sqrt": two-level
+    # scan stashing one residual per remat_group layers (peak-memory lever
+    # for the 88-layer mistral cell — EXPERIMENTS.md §Perf iteration A3).
+    remat_policy: str = "layer"
+    remat_group: int = 1
+    # constrain the residual stream to batch-only sharding (§Perf A2);
+    # the launcher activates it via the activation_sharding context
+    act_batch_sharding: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, self.vocab_pad_to)
+
+    # ------------------------------------------------- analytic param counts
+    def params_per_layer(self) -> int:
+        d, dh = self.d_model, self.head_dim
+        if self.attn == "mla":
+            m = self.mla
+            attn = (d * m.q_lora_rank
+                    + m.q_lora_rank * self.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+                    + d * (m.kv_lora_rank + m.qk_rope_dim)
+                    + m.kv_lora_rank * self.n_heads * (m.qk_nope_dim + m.v_head_dim)
+                    + self.n_heads * m.v_head_dim * d)
+        else:
+            attn = (d * self.n_heads * dh + 2 * d * self.n_kv_heads * dh
+                    + self.n_heads * dh * d)
+        if self.moe is not None:
+            mlp = self.moe.n_experts * 3 * d * self.moe.d_ff + d * self.moe.n_experts
+        else:
+            mlp = 3 * d * self.d_ff
+        return attn + mlp + 2 * d  # + norms
+
+    def param_count(self) -> int:
+        emb = self.padded_vocab * self.d_model
+        head = 0 if self.tie_embeddings else self.d_model * self.padded_vocab
+        return emb + head + self.n_layers * self.params_per_layer() + self.d_model
+
+    def active_params_per_layer(self) -> int:
+        """MoE: only top_k experts touch each token (for MODEL_FLOPS=6·N_act·D)."""
+        per = self.params_per_layer()
+        if self.moe is not None:
+            dense_all = self.moe.n_experts * 3 * self.d_model * self.moe.d_ff
+            dense_act = self.moe.top_k * 3 * self.d_model * self.moe.d_ff
+            per = per - dense_all + dense_act
+        return per
+
+    def active_param_count(self) -> int:
+        emb = self.padded_vocab * self.d_model
+        head = 0 if self.tie_embeddings else self.d_model * self.padded_vocab
+        return emb + head + self.n_layers * self.active_params_per_layer() + self.d_model
+
+    def model_flops(self, n_tokens: int, *, train: bool = True) -> float:
+        """6·N_active·D (train fwd+bwd) or 2·N_active·D (inference fwd)."""
+        n = self.active_param_count() - self.padded_vocab * self.d_model  # non-embed
+        if not self.tie_embeddings:
+            n -= 0  # lm_head matmul is real compute; keep it
+        return (6.0 if train else 2.0) * n * n_tokens
+
+
+# ------------------------------------------------------------------ init ----
+
+def _init_attn(key, cfg: LMConfig) -> dict:
+    d, dh = cfg.d_model, cfg.head_dim
+    if cfg.attn == "mla":
+        return mla_mod.init_mla(key, d, cfg.n_heads, cfg.mla)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(d)
+    p = {
+        "wq": jax.random.normal(k1, (d, cfg.n_heads * dh), jnp.float32) * s,
+        "wk": jax.random.normal(k2, (d, cfg.n_kv_heads * dh), jnp.float32) * s,
+        "wv": jax.random.normal(k3, (d, cfg.n_kv_heads * dh), jnp.float32) * s,
+        "wo": jax.random.normal(k4, (cfg.n_heads * dh, d), jnp.float32)
+              / jnp.sqrt(cfg.n_heads * dh),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.init_rms_norm(dh)
+        p["k_norm"] = layers.init_rms_norm(dh)
+    return p
+
+
+def init_block(key, cfg: LMConfig) -> dict:
+    ka, km = jax.random.split(key)
+    blk = {
+        "attn_norm": layers.init_rms_norm(cfg.d_model),
+        "mlp_norm": layers.init_rms_norm(cfg.d_model),
+        "attn": _init_attn(ka, cfg),
+    }
+    if cfg.moe is not None:
+        blk["moe"] = moe_mod.init_moe(km, cfg.d_model, cfg.moe)
+    else:
+        blk["mlp"] = layers.init_swiglu(km, cfg.d_model, cfg.d_ff)
+    return blk
+
+
+def init_lm(key, cfg: LMConfig) -> dict:
+    ke, kb, kh = jax.random.split(key, 3)
+    block_keys = jax.random.split(kb, cfg.n_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(block_keys)
+    params = {
+        "embed": jax.random.normal(ke, (cfg.padded_vocab, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "blocks": blocks,
+        "final_norm": layers.init_rms_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(kh, (cfg.d_model, cfg.padded_vocab),
+                                               jnp.float32)
+                             / jnp.sqrt(cfg.d_model))
+    return params
+
+
+def lm_param_shapes(cfg: LMConfig):
+    """ShapeDtypeStruct tree (no allocation) — dry-run stand-in."""
+    return jax.eval_shape(lambda: init_lm(jax.random.key(0), cfg))
+
+
+# --------------------------------------------------------------- forward ----
+
+def _gqa_attention(p, x, cfg: LMConfig, positions, *, causal=True):
+    B, S, _ = x.shape
+    dh = cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, cfg.n_heads, dh)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, cfg.n_kv_heads, dh)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"])
+        k = layers.rms_norm(k, p["k_norm"])
+    cos, sin = layers.rope_angles(positions, dh, cfg.rope_theta)
+    q = layers.apply_rope(q, cos, sin)
+    k = layers.apply_rope(k, cos, sin)
+    out = attention(q, k, v, causal=causal, block_k=cfg.block_k,
+                    impl=cfg.attn_impl)
+    return out.reshape(B, S, cfg.n_heads * dh) @ p["wo"].astype(x.dtype)
+
+
+def block_forward(blk, x, cfg: LMConfig, positions):
+    """One pre-norm transformer block; returns (x, aux)."""
+    if cfg.act_batch_sharding:
+        x = _wsc_batch(x)
+    h = layers.rms_norm(x, blk["attn_norm"])
+    if cfg.attn == "mla":
+        a = mla_mod.mla_attention_full(blk["attn"], h, cfg.n_heads, cfg.mla,
+                                       positions, cfg.rope_theta, cfg.block_k)
+    else:
+        a = _gqa_attention(blk["attn"], h, cfg, positions)
+    x = x + a
+    h = layers.rms_norm(x, blk["mlp_norm"])
+    if cfg.moe is not None:
+        m, aux = moe_mod.moe_forward(blk["moe"], h, cfg.moe)
+    else:
+        m, aux = layers.swiglu(h, **blk["mlp"]), {}
+    return x + m, aux
+
+
+def lm_forward(params, tokens, cfg: LMConfig):
+    """tokens (B, S) int32 -> (logits (B, S, V) in compute dtype, aux dict)."""
+    B, S = tokens.shape
+    x = _wsc_batch(params["embed"].astype(cfg.compute_dtype)[tokens])
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def body(carry, blk):
+        y, aux = block_forward(blk, carry, cfg, positions)
+        return y, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if cfg.remat_policy == "sqrt" and cfg.n_layers % cfg.remat_group > 0:
+        raise ValueError("n_layers must divide remat_group for sqrt remat")
+    if cfg.remat_policy == "sqrt" and cfg.remat_group > 1:
+        # Two-level remat: the outer scan stashes only L/G residuals; the
+        # inner G layers are recomputed from the group input in backward.
+        # Cuts the layer-input stash by G at the price of one extra forward
+        # of the inner layers (EXPERIMENTS.md §Perf iteration A3).
+        G = cfg.remat_group
+        grouped = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers // G, G) + a.shape[1:]),
+            params["blocks"])
+
+        def group_body(carry, grp):
+            y, aux = jax.lax.scan(body, carry, grp)
+            return y, jax.tree.map(jnp.sum, aux)
+
+        x, aux_stacked = jax.lax.scan(
+            jax.checkpoint(group_body, prevent_cse=False), x, grouped)
+    else:
+        x, aux_stacked = jax.lax.scan(body, x, params["blocks"])
+    aux = {k: jnp.sum(v) for k, v in aux_stacked.items()}
+
+    x = layers.rms_norm(x, params["final_norm"])
+    w_head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ w_head.astype(x.dtype)
+    return logits, aux
+
+
+def lm_loss(params, batch: dict, cfg: LMConfig):
+    """batch: tokens (B,S) i32, labels (B,S) i32 (-1 = masked).
+
+    Returns (loss, metrics).  Softmax cross-entropy in f32; MoE aux losses
+    (balance + z) are added with their configured coefficients.
+    """
+    logits, aux = lm_forward(params, batch["tokens"], cfg)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    ntok = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / ntok
+    total = loss + aux.get("moe_balance", 0.0) + aux.get("moe_z", 0.0)
+    metrics = {"loss": loss, "ntok": ntok, **aux}
+    return total, metrics
+
+
+# ---------------------------------------------------------------- decode ----
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KVCache:
+    """Decode cache.  GQA: k/v (L, B, T, n_kv, dh).  MLA: k holds the latent
+    c_kv (L, B, T, r_kv) and v holds k_rope (L, B, T, dr)."""
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array  # i32[] — number of valid positions
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[2]
+
+
+def init_cache(cfg: LMConfig, batch: int, capacity: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    L = cfg.n_layers
+    if cfg.attn == "mla":
+        k = jnp.zeros((L, batch, capacity, cfg.mla.kv_lora_rank), dtype)
+        v = jnp.zeros((L, batch, capacity, cfg.mla.qk_rope_dim), dtype)
+    else:
+        k = jnp.zeros((L, batch, capacity, cfg.n_kv_heads, cfg.head_dim), dtype)
+        v = jnp.zeros_like(k)
+    return KVCache(k=k, v=v, length=jnp.int32(0))
+
+
+def cache_shapes(cfg: LMConfig, batch: int, capacity: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, capacity, dtype))
+
+
+def _decode_attn_gqa(p, x, cfg: LMConfig, ck, cv, length):
+    """x (B,1,d); ck/cv (B,T,nkv,dh) with the new token NOT yet appended.
+    Returns (attn_out (B,1,d), new_ck, new_cv)."""
+    B = x.shape[0]
+    dh = cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, 1, cfg.n_heads, dh)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, 1, cfg.n_kv_heads, dh)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, 1, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"])
+        k = layers.rms_norm(k, p["k_norm"])
+    pos = jnp.reshape(length, (1, 1))
+    cos, sin = layers.rope_angles(pos, dh, cfg.rope_theta)
+    q = layers.apply_rope(q, cos, sin)
+    k = layers.apply_rope(k, cos, sin)
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, length, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, length, 0, 0))
+    T = ck.shape[1]
+    # dense single-token attention: scores (B, nkv, G, 1, T) in f32.  The T
+    # dim is what the mesh "model" axis shards at 32k (context parallelism by
+    # GSPMD propagation); softmax/psum combine is compiler-inserted.
+    nkv, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, 1, nkv, G, dh)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) / jnp.sqrt(jnp.float32(dh))
+    mask = jnp.arange(T)[None, None, None, None, :] <= length
+    s = jnp.where(mask, s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", pr, cv.astype(jnp.float32))
+    o = o.reshape(B, 1, cfg.n_heads * dh).astype(x.dtype)
+    return o @ p["wo"].astype(x.dtype), ck, cv
+
+
+def _decode_attn_mla(p, x, cfg: LMConfig, cc, cr, length):
+    """MLA absorbed decode; cc (B,T,rkv), cr (B,T,dr)."""
+    c_kv, k_rope = mla_mod.mla_latent_for_token(
+        p, x, cfg.mla, length, cfg.rope_theta)
+    cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype), (0, length, 0))
+    cr = jax.lax.dynamic_update_slice(cr, k_rope[:, None, :].astype(cr.dtype)
+                                      if k_rope.ndim == 2 else k_rope.astype(cr.dtype),
+                                      (0, length, 0))
+    out = mla_mod.mla_decode_absorbed(p, x, cfg.n_heads, cfg.mla,
+                                      cc, cr, length + 1, cfg.rope_theta)
+    return out, cc, cr
+
+
+def decode_step(params, cache: KVCache, tokens, cfg: LMConfig):
+    """tokens (B,) i32 (the newest token) -> (logits (B, V), new cache)."""
+    x = params["embed"].astype(cfg.compute_dtype)[tokens][:, None, :]  # (B,1,d)
+    length = cache.length
+
+    attn_fn = _decode_attn_mla if cfg.attn == "mla" else _decode_attn_gqa
+
+    def body(carry, xs):
+        h = carry
+        blk, ck, cv = xs
+        a_in = layers.rms_norm(h, blk["attn_norm"])
+        a, ck, cv = attn_fn(blk["attn"], a_in, cfg, ck, cv, length)
+        h = h + a
+        m_in = layers.rms_norm(h, blk["mlp_norm"])
+        if cfg.moe is not None:
+            m, _ = moe_mod.moe_forward(blk["moe"], m_in, cfg.moe)
+        else:
+            m = layers.swiglu(m_in, **blk["mlp"])
+        return h + m, (ck, cv)
+
+    x, (new_k, new_v) = jax.lax.scan(body, x, (params["blocks"], cache.k, cache.v))
+    x = layers.rms_norm(x, params["final_norm"])
+    w_head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x @ w_head.astype(x.dtype))[:, 0, :]
+    return logits, KVCache(k=new_k, v=new_v, length=length + 1)
+
+
+def prefill(params, tokens, cfg: LMConfig, capacity: int):
+    """Full-sequence prefill that also fills a decode cache (serving path)."""
+    B, S = tokens.shape
+    logits, _ = lm_forward(params, tokens, cfg)
+    # Re-run the cheap per-layer cache projections to fill the cache.  (One
+    # fused pass would save ~1 projection; kept simple — prefill attention
+    # dominates.)
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    cache = init_cache(cfg, B, capacity)
+
+    from repro.models import sharding as shd_mod
+
+    def _cache_wsc(c):
+        # Always constrain per-layer cache slices to (batch, seq@model):
+        # without this the scan's stacked (L, B, T, ...) cache buffer is
+        # replicated per device (measured 70-130 GB peak on the 32k prefill
+        # cells — EXPERIMENTS.md §Perf B1).
+        return shd_mod.wsc(c, "batch", "model", *([None] * (c.ndim - 2)))
+
+    def body(x, blk):
+        if cfg.act_batch_sharding:
+            x = _wsc_batch(x)
+        h = layers.rms_norm(x, blk["attn_norm"])
+        if cfg.attn == "mla":
+            q, k, v, c_kv, k_rope = mla_mod.mla_qkv_full(
+                blk["attn"], h, cfg.n_heads, cfg.mla, positions, cfg.rope_theta)
+            out = attention(q, k, v, causal=True, block_k=cfg.block_k,
+                            impl=cfg.attn_impl)
+            B_, S_ = x.shape[:2]
+            a = out.reshape(B_, S_, -1) @ blk["attn"]["w_o"].astype(x.dtype)
+            ck = jnp.zeros((B, capacity, cfg.mla.kv_lora_rank), jnp.bfloat16)
+            cv = jnp.zeros((B, capacity, cfg.mla.qk_rope_dim), jnp.bfloat16)
+            ck = jax.lax.dynamic_update_slice(ck, c_kv.astype(ck.dtype), (0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, k_rope.astype(cv.dtype), (0, 0, 0))
+        else:
+            dh = cfg.head_dim
+            p = blk["attn"]
+            q = (h @ p["wq"].astype(h.dtype)).reshape(B, S, cfg.n_heads, dh)
+            k = (h @ p["wk"].astype(h.dtype)).reshape(B, S, cfg.n_kv_heads, dh)
+            v = (h @ p["wv"].astype(h.dtype)).reshape(B, S, cfg.n_kv_heads, dh)
+            if cfg.qk_norm:
+                q = layers.rms_norm(q, p["q_norm"])
+                k = layers.rms_norm(k, p["k_norm"])
+            cos, sin = layers.rope_angles(positions, dh, cfg.rope_theta)
+            q = layers.apply_rope(q, cos, sin)
+            k = layers.apply_rope(k, cos, sin)
+            out = attention(q, k, v, causal=True, block_k=cfg.block_k,
+                            impl=cfg.attn_impl)
+            a = out.reshape(B, S, -1) @ p["wo"].astype(h.dtype)
+            ck = jnp.zeros((B, capacity, cfg.n_kv_heads, dh), jnp.bfloat16)
+            cv = jnp.zeros_like(ck)
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, 0, 0))
+        x = x + a
+        m_in = layers.rms_norm(x, blk["mlp_norm"])
+        if cfg.moe is not None:
+            m, _ = moe_mod.moe_forward(blk["moe"], m_in, cfg.moe)
+        else:
+            m = layers.swiglu(m_in, **blk["mlp"])
+        return x + m, (_cache_wsc(ck), _cache_wsc(cv))
+
+    _, (cks, cvs) = jax.lax.scan(body, x, params["blocks"])
+    return logits, KVCache(k=cks, v=cvs, length=jnp.int32(S))

@@ -1,0 +1,397 @@
+"""Post-optimization HLO cost walker with while-loop trip multiplication.
+
+``compiled.cost_analysis()`` counts each while body ONCE; all our big
+programs are scans (layers x microbatches x kv-blocks), so we do our own
+accounting over ``compiled.as_text()``:
+
+  * FLOPs        — dots (2 * result_elems * contracted), elementwise/reduce
+                   (1/elem), in fusion bodies too;
+  * HBM bytes    — operand + result bytes at fusion boundaries (internals of
+                   a fusion stay in registers/VMEM);
+  * collectives  — per op: operand/result bytes, group size (from
+                   replica_groups), and an estimated per-device WIRE byte
+                   count (ring terms: all-reduce 2x(g-1)/g, all-gather /
+                   reduce-scatter / all-to-all (g-1)/g, permute 1x);
+  * while loops  — costs multiplied by ``known_trip_count`` from
+                   backend_config (exact for lax.scan-derived loops);
+                   data-dependent loops (the SSSP fixpoints) have none and
+                   use ``default_trip`` (report per-round costs with
+                   default_trip=1).
+
+All numbers are PER DEVICE (the compiled module is the SPMD per-device
+program; shapes in it are already sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Any
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "ragged-all-to-all",
+}
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "partition-id", "replica-id", "after-all", "all-reduce-done",
+    "all-gather-done", "collective-permute-done", "copy-start", "copy-done",
+    "opt-barrier", "domain", "rng-get-and-update-state",
+}
+_ELEMENTWISE_FLOPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "rsqrt", "sqrt", "tanh", "negate", "abs", "sign",
+    "cosine", "sine", "atan2", "logistic", "expm1", "log1p", "remainder",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "compare",
+    "select", "and", "or", "xor", "not", "clamp", "convert", "erf",
+    "cbrt", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "reduce", "reduce-window", "map", "exponential-minus-one",
+    "stochastic-convert", "clz", "popcnt",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(shape_str: str) -> float:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _first_shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    opcode: str
+    rest: str           # everything after the open paren (operands + attrs)
+    operands: list[str]
+
+
+@dataclasses.dataclass
+class CollectiveRecord:
+    opcode: str
+    operand_bytes: float
+    result_bytes: float
+    group_size: int
+    wire_bytes: float
+    count: float        # trip-multiplied occurrence count
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_operand_bytes: float = 0.0
+    coll_wire_bytes: float = 0.0
+    coll_by_type: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collectives: list = dataclasses.field(default_factory=list)
+    dynamic_whiles: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.coll_operand_bytes += other.coll_operand_bytes * mult
+        self.coll_wire_bytes += other.coll_wire_bytes * mult
+        for k, v in other.coll_by_type.items():
+            self.coll_by_type[k] += v * mult
+        for c in other.collectives:
+            self.collectives.append(dataclasses.replace(
+                c, count=c.count * mult))
+        self.dynamic_whiles += other.dynamic_whiles
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[Op]] = {}
+        self.entry: str | None = None
+        self._parse(text)
+        self._sym: dict[str, dict[str, str]] = {}
+
+    def _parse(self, text: str) -> None:
+        cur: list[Op] | None = None
+        cur_name = None
+        for line in text.splitlines():
+            if cur is None:
+                m = _COMP_RE.match(line)
+                if m and line.rstrip().endswith("{"):
+                    cur_name = m.group(2)
+                    cur = []
+                    if m.group(1):
+                        self.entry = cur_name
+                continue
+            if line.startswith("}"):
+                self.computations[cur_name] = cur
+                cur = None
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            name, shape, opcode, rest = m.groups()
+            operands = re.findall(r"%([\w.\-]+)", rest.split(", metadata=")[0]
+                                  .split(" calls=")[0])
+            cur.append(Op(name=name, shape=shape, opcode=opcode, rest=rest,
+                          operands=operands))
+
+    def symtab(self, comp: str) -> dict[str, str]:
+        if comp not in self._sym:
+            self._sym[comp] = {op.name: op.shape
+                               for op in self.computations[comp]}
+        return self._sym[comp]
+
+
+def _attr(rest: str, key: str) -> str | None:
+    m = re.search(key + r"=%([\w.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def _trip_count(rest: str) -> int | None:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rest)
+    return int(m.group(1)) if m else None
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _wire_bytes(opcode: str, operand_b: float, result_b: float,
+                g: int) -> float:
+    frac = (g - 1) / max(g, 1)
+    base = opcode.replace("-start", "")
+    if base == "all-reduce":
+        return 2.0 * operand_b * frac
+    if base == "all-gather":
+        return result_b * frac
+    if base == "reduce-scatter":
+        return operand_b * frac
+    if base in ("all-to-all", "ragged-all-to-all"):
+        return operand_b * frac
+    return operand_b  # collective-permute
+
+
+class Analyzer:
+    def __init__(self, module: HloModule, *, default_trip: float = 1.0,
+                 num_partitions: int = 1):
+        self.m = module
+        self.default_trip = default_trip
+        self.np_ = num_partitions
+        self._memo: dict[tuple[str, bool], Cost] = {}
+
+    def analyze(self) -> Cost:
+        return self._comp_cost(self.m.entry, fused=False)
+
+    # ------------------------------------------------------------------
+    def _operand_bytes(self, op: Op, sym: dict[str, str]) -> float:
+        return sum(_shape_bytes(sym.get(o, "")) for o in op.operands)
+
+    def _fusion_io_bytes(self, op: Op, sym: dict[str, str]) -> float:
+        """HBM bytes of a fusion node: parameters that are only
+        dynamic-sliced inside are charged the SLICE bytes (a scan body
+        addressing one layer of a stacked weight reads one layer, not the
+        stack); a root dynamic-update-slice writes the update region, not
+        the whole (aliased, in-place) buffer."""
+        callee = _attr(op.rest, "calls")
+        comp = self.m.computations.get(callee, [])
+        inner_sym = self.m.symtab(callee) if callee in self.m.computations \
+            else {}
+        # map inner parameter name -> index
+        param_order: list[str] = []
+        for iop in comp:
+            if iop.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", iop.rest)
+                idx = int(m.group(1)) if m else len(param_order)
+                while len(param_order) <= idx:
+                    param_order.append("")
+                param_order[idx] = iop.name
+        # consumers of each parameter
+        read_bytes: dict[str, float] = {}
+        for pname in param_order:
+            if not pname:
+                continue
+            slice_bytes, full = 0.0, False
+            for iop in comp:
+                if pname in iop.operands:
+                    if iop.opcode == "dynamic-slice" \
+                            and iop.operands[0] == pname:
+                        slice_bytes += _shape_bytes(iop.shape)
+                    elif iop.opcode == "dynamic-update-slice" \
+                            and iop.operands[0] == pname:
+                        # pass-through buffer being updated in place:
+                        # reads nothing beyond the update region
+                        continue
+                    else:
+                        full = True
+                        break
+            read_bytes[pname] = (_shape_bytes(inner_sym.get(pname, ""))
+                                 if full or slice_bytes == 0.0
+                                 else slice_bytes)
+        reads = 0.0
+        for i, o in enumerate(op.operands):
+            pname = param_order[i] if i < len(param_order) else ""
+            if pname and pname in read_bytes:
+                reads += read_bytes[pname]
+            else:
+                reads += _shape_bytes(sym.get(o, ""))
+        # writes: root DUS -> update region only
+        root = comp[-1] if comp else None
+        writes = _shape_bytes(op.shape)
+        if root is not None and root.opcode == "dynamic-update-slice" \
+                and len(root.operands) > 1:
+            upd = _shape_bytes(inner_sym.get(root.operands[1], ""))
+            if upd:
+                writes = upd
+        return reads + writes
+
+    def _comp_cost(self, comp: str, fused: bool) -> Cost:
+        key = (comp, fused)
+        if key in self._memo:
+            return self._memo[key]
+        cost = Cost()
+        sym = self.m.symtab(comp)
+        for op in self.m.computations.get(comp, []):
+            oc = op.opcode
+            if oc in _SKIP_OPS:
+                continue
+            res_b = _shape_bytes(op.shape)
+            opnd_b = self._operand_bytes(op, sym)
+            if oc == "fusion":
+                callee = _attr(op.rest, "calls")
+                if callee:
+                    inner = self._comp_cost(callee, fused=True)
+                    cost.flops += inner.flops
+                if not fused:
+                    cost.hbm_bytes += self._fusion_io_bytes(op, sym)
+            elif oc == "while":
+                body = _attr(op.rest, "body")
+                cond = _attr(op.rest, "condition")
+                trip = _trip_count(op.rest)
+                if trip is None:
+                    trip = self.default_trip
+                    cost.dynamic_whiles += 1
+                inner = Cost()
+                if body:
+                    inner.add(self._comp_cost(body, fused=False))
+                if cond:
+                    inner.add(self._comp_cost(cond, fused=False))
+                cost.add(inner, mult=float(trip))
+            elif oc in ("call", "conditional", "async-start"):
+                for callee_key in ("to_apply", "called_computations",
+                                   "true_computation", "false_computation",
+                                   "calls"):
+                    callee = _attr(op.rest, callee_key)
+                    if callee and callee in self.m.computations:
+                        cost.add(self._comp_cost(callee, fused=fused))
+                if not fused:
+                    cost.hbm_bytes += opnd_b + res_b
+            elif oc in _COLLECTIVES:
+                g = _group_size(op.rest, self.np_)
+                wire = _wire_bytes(oc, opnd_b, res_b, g)
+                cost.coll_operand_bytes += opnd_b
+                cost.coll_wire_bytes += wire
+                cost.coll_by_type[oc.replace("-start", "")] += opnd_b
+                cost.collectives.append(CollectiveRecord(
+                    opcode=oc.replace("-start", ""), operand_bytes=opnd_b,
+                    result_bytes=res_b, group_size=g, wire_bytes=wire,
+                    count=1.0))
+                if not fused:
+                    cost.hbm_bytes += opnd_b + res_b
+            elif oc == "dot":
+                dims = _first_shape_dims(sym.get(op.operands[0], "")) \
+                    if op.operands else []
+                m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+                contracted = 1
+                if m and m.group(1) and dims:
+                    for d in m.group(1).split(","):
+                        i = int(d)
+                        if i < len(dims):
+                            contracted *= dims[i]
+                cost.flops += 2.0 * _shape_elems(op.shape) * contracted
+                if not fused:
+                    cost.hbm_bytes += opnd_b + res_b
+            elif oc == "convolution":
+                # not used by our models; approximate as dot on result
+                cost.flops += 2.0 * _shape_elems(op.shape) * max(
+                    1, int(opnd_b / max(res_b, 1)))
+                if not fused:
+                    cost.hbm_bytes += opnd_b + res_b
+            elif oc == "dynamic-slice":
+                # reads + writes the slice, not the source buffer
+                if not fused:
+                    cost.hbm_bytes += 2.0 * res_b
+            elif oc == "dynamic-update-slice":
+                upd_b = (_shape_bytes(sym.get(op.operands[1], ""))
+                         if len(op.operands) > 1 else res_b)
+                if not fused:
+                    cost.hbm_bytes += 2.0 * upd_b
+            else:
+                if oc in _ELEMENTWISE_FLOPS:
+                    cost.flops += _shape_elems(op.shape)
+                if not fused:
+                    cost.hbm_bytes += opnd_b + res_b
+        self._memo[key] = cost
+        return cost
+
+
+def analyze_text(text: str, *, default_trip: float = 1.0,
+                 num_partitions: int = 1) -> Cost:
+    return Analyzer(HloModule(text), default_trip=default_trip,
+                    num_partitions=num_partitions).analyze()
+
+
+def summarize(cost: Cost) -> dict[str, Any]:
+    by_type = dict(cost.coll_by_type)
+    return {
+        "flops_per_device": cost.flops,
+        "hbm_bytes_per_device": cost.hbm_bytes,
+        "collective_operand_bytes": cost.coll_operand_bytes,
+        "collective_wire_bytes": cost.coll_wire_bytes,
+        "collective_by_type": by_type,
+        "n_collectives": len(cost.collectives),
+        "dynamic_whiles": cost.dynamic_whiles,
+    }

@@ -1,0 +1,96 @@
+"""Three-term roofline report from a compiled dry-run artifact.
+
+Hardware model (TPU v5e, per chip):
+  peak bf16 compute  197 TFLOP/s
+  HBM bandwidth      819 GB/s
+  ICI link bandwidth ~50 GB/s per link share
+
+Terms (seconds, per step, per device — the SPMD module is per-device):
+  compute    = HLO_FLOPs / 197e12
+  memory     = HLO_bytes / 819e9
+  collective = wire_bytes / 50e9     (ring-model wire bytes; the raw
+               operand-byte sum per the assignment definition is also
+               reported)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.roofline import hlo_analysis as H
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    hbm_bytes: float
+    coll_operand_bytes: float
+    coll_wire_bytes: float
+    coll_by_type: dict
+    dynamic_whiles: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Lower-bound step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self, model_flops_global: float,
+                          chips: int) -> float:
+        """'How close to roofline': useful-FLOPs time at peak vs the bound."""
+        useful_s = model_flops_global / (chips * PEAK_FLOPS)
+        return useful_s / max(self.bound_s, 1e-30)
+
+    def mfu_ratio(self, model_flops_global: float, chips: int) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global) — remat/redundancy waste probe."""
+        return model_flops_global / max(self.flops * chips, 1e-30)
+
+
+def roofline_from_text(hlo_text: str, *, default_trip: float = 1.0,
+                       num_partitions: int = 1) -> Roofline:
+    cost = H.analyze_text(hlo_text, default_trip=default_trip,
+                          num_partitions=num_partitions)
+    return Roofline(
+        compute_s=cost.flops / PEAK_FLOPS,
+        memory_s=cost.hbm_bytes / HBM_BW,
+        collective_s=cost.coll_wire_bytes / ICI_BW,
+        flops=cost.flops,
+        hbm_bytes=cost.hbm_bytes,
+        coll_operand_bytes=cost.coll_operand_bytes,
+        coll_wire_bytes=cost.coll_wire_bytes,
+        coll_by_type=dict(cost.coll_by_type),
+        dynamic_whiles=cost.dynamic_whiles,
+    )
+
+
+def report_dict(rf: Roofline, meta: dict, chips: int) -> dict[str, Any]:
+    mf = float(meta.get("model_flops", 0.0))
+    return {
+        "compute_s": rf.compute_s,
+        "memory_s": rf.memory_s,
+        "collective_s": rf.collective_s,
+        "dominant": rf.dominant,
+        "bound_s": rf.bound_s,
+        "flops_per_device": rf.flops,
+        "hbm_bytes_per_device": rf.hbm_bytes,
+        "coll_operand_bytes": rf.coll_operand_bytes,
+        "coll_wire_bytes": rf.coll_wire_bytes,
+        "coll_by_type": rf.coll_by_type,
+        "dynamic_whiles": rf.dynamic_whiles,
+        "model_flops": mf,
+        "model_flops_ratio": rf.mfu_ratio(mf, chips) if mf else None,
+        "roofline_fraction": rf.roofline_fraction(mf, chips) if mf else None,
+        "chips": chips,
+    }

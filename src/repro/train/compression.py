@@ -1,0 +1,83 @@
+"""Gradient compression: int8 quantization with error feedback (EF-SGD
+family), for the cross-pod (DCN) gradient all-reduce.
+
+Within a pod the ICI is fast enough that gradients stay bf16/f32; across
+pods the DCN link is the bottleneck, so the pod-axis all-reduce is the one
+worth compressing (4x over f32).  Error feedback keeps the quantization
+noise from accumulating: the residual e_t is added back before the next
+quantization, making the scheme unbiased in the long run (Karimireddy et
+al., 2019).
+
+``compressed_psum`` is the collective building block (used inside
+shard_map over the pod axis); ``ef_state`` / ``apply_ef`` wrap it with the
+error-feedback memory.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8: returns (q int8, scale f32)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Quantize -> all-reduce int8 (as int32 accumulate) -> dequantize.
+
+    The wire format is int8 (4x smaller than f32); accumulation happens in
+    int32 with per-participant scales reconciled by taking the max scale
+    (each participant re-quantizes to the shared scale first so the sum is
+    exact in the shared grid).
+    """
+    q, scale = quantize_int8(x)
+    smax = jax.lax.pmax(scale, axis_name)
+    # requantize into the shared grid (cheap: scale ratio multiply)
+    q_shared = jnp.clip(jnp.round(q.astype(jnp.float32) * (scale / smax)),
+                        -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q_shared.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * smax
+
+
+def ef_init(grads_like: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def ef_compress_tree(grads: Any, ef: Any, axis_name: str) -> tuple[Any, Any]:
+    """Error-feedback compressed all-reduce over a gradient pytree.
+
+    Returns (reduced_grads, new_ef).  Usage (inside shard_map over the pod
+    axis): g_hat, ef = ef_compress_tree(local_grads, ef, "pod").
+    """
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(corrected)
+        sent = dequantize_int8(q, scale)
+        new_e = corrected - sent
+        reduced = compressed_psum(corrected, axis_name)
+        return reduced, new_e
+
+    out = jax.tree.map(one, grads, ef)
+    red = jax.tree.map(lambda t: t[0], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return red, new_ef
+
+
+def compression_ratio(tree: Any) -> float:
+    """Wire bytes int8 / f32 (plus one f32 scale per tensor)."""
+    f32 = sum(x.size * 4 for x in jax.tree.leaves(tree))
+    i8 = sum(x.size * 1 + 4 for x in jax.tree.leaves(tree))
+    return i8 / f32

@@ -1,0 +1,69 @@
+"""Generic train-step builders: loss -> grads (with microbatch accumulation)
+-> AdamW update.
+
+Gradient accumulation is a ``lax.scan`` over microbatches with an f32
+accumulator pytree — the standard memory lever for the big train cells
+(mistral-large train_4k runs accum=16).  The scan also gives XLA a natural
+compute/communication overlap point: the gradient all-reduce of microbatch i
+overlaps the forward of i+1 (no barrier between them in the HLO).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as opt_mod
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: opt_mod.AdamWConfig,
+                    grad_accum: int = 1):
+    """loss_fn(params, batch) -> (loss, metrics).
+
+    Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  With grad_accum > 1, every batch leaf must arrive PRE-SPLIT
+    as (grad_accum, micro_batch, ...) — splitting host-side keeps each
+    microbatch sharded over the data axes (an in-jit reshape of a
+    batch-sharded dim would put microbatch i entirely on device i, turning
+    the scan into a serial device walk).
+    """
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = batch
+
+            def acc_body(carry, mb):
+                g_acc, m_acc = carry
+                (_, metrics), grads = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                m_acc = jax.tree.map(lambda a, m: a + m, m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = jax.eval_shape(lambda: grad_fn(params, jax.tree.map(
+                lambda x: x[0], micro))[0][1])
+            m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+            (grads, metrics), _ = jax.lax.scan(
+                acc_body, (g0, m0), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree.map(lambda m: m / grad_accum, metrics)
+
+        params, opt_state, om = opt_mod.adamw_update(
+            grads, opt_state, params, opt_cfg)
+        return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+def make_eval_step(loss_fn: Callable):
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+    return eval_step

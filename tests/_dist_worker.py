@@ -1,0 +1,76 @@
+"""Subprocess worker for multi-device distributed tests.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 (set by the
+parent test process, NOT globally — see dry-run rules).  Exercises the full
+dynamic cycle (relax -> delete -> relax) on a (2,2,2) mesh, checks against
+the Dijkstra oracle, prints "OK <rounds>" on success.
+"""
+import os
+import sys
+
+# must precede any jax import in this process
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.distributed import DistConfig, DistributedSSSP  # noqa: E402
+from repro.core.oracle import dijkstra  # noqa: E402
+from repro.graphs import generators  # noqa: E402
+from repro.launch.mesh import _mk  # noqa: E402
+
+
+def main(exchange: str) -> None:
+    assert len(jax.devices()) == 8, f"expected 8 devices, got {len(jax.devices())}"
+    mesh = _mk((2, 2, 2), ("pod", "data", "model"))
+    n_raw, src, dst, w = generators.power_law_hubs(400, 3000, seed=1)
+    source = int(generators.top_in_degree_sources(n_raw, dst, 1)[0])
+    P = 8
+    npp = -(-n_raw // P)
+    N = P * npp
+    cfg = DistConfig(num_vertices=N, edges_per_part=2048,
+                     mesh_axes=("pod", "data", "model"),
+                     exchange=exchange, delta_cap=64)
+    ds = DistributedSSSP(mesh, cfg)
+
+    es, ed, ew, ea = ds.place_edges(src, dst, w)
+    eput = ds.put_edges(es, ed, ew, ea)
+    dist, parent = ds.init_vertex_arrays(source)
+    front = ds.frontier_of(np.array([source]))
+    epoch = ds.make_relax_epoch()
+    dist, parent, r1 = epoch(dist, parent, front, *eput)
+
+    ref, _ = dijkstra(n_raw, src, dst, w, source)
+    got = np.asarray(dist)[:n_raw]
+    assert np.allclose(np.nan_to_num(ref, posinf=1e30),
+                       np.nan_to_num(got, posinf=1e30), rtol=1e-5), "relax mismatch"
+
+    # delete 3 tree edges at once (batched deletion epoch)
+    par = np.asarray(parent)
+    cand = np.nonzero((par[:n_raw] >= 0))[0]
+    heads = cand[:3]
+    tails = par[heads]
+    mask = np.ones(len(src), np.bool_)
+    for u, v in zip(tails, heads):
+        mask &= ~((src == u) & (dst == v))
+    src2, dst2, w2 = src[mask], dst[mask], w[mask]
+    e2 = ds.put_edges(*ds.place_edges(src2, dst2, w2))
+    seed_fn = ds.make_seed_from_deletions()
+    pad = lambda a: jnp.asarray(np.pad(a.astype(np.int32), (0, 5 - len(a)),
+                                       constant_values=-1))
+    seed = seed_fn(parent, pad(tails), pad(heads))
+    del_epoch = ds.make_delete_epoch()
+    dist, parent, r2 = del_epoch(dist, parent, seed, *e2)
+
+    ref2, _ = dijkstra(n_raw, src2, dst2, w2, source)
+    got2 = np.asarray(dist)[:n_raw]
+    assert np.allclose(np.nan_to_num(ref2, posinf=1e30),
+                       np.nan_to_num(got2, posinf=1e30), rtol=1e-5), "delete mismatch"
+    print(f"OK {int(r1)} {int(r2)}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "allgather")

@@ -1,0 +1,39 @@
+"""Per-architecture smoke tests: REDUCED config, one real train step (+
+decode / retrieval where the family has one) on CPU; assert output shapes
+and finiteness.  The FULL configs are exercised only via the dry-run."""
+import numpy as np
+import pytest
+
+from repro.configs import registry as reg
+from repro.configs import smoke as smoke_mod
+
+ARCHS = [a for a, m in reg.ARCHES.items() if m.FAMILY != "sssp"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke(arch):
+    metrics = smoke_mod.smoke(arch, seed=0)
+    for k, v in metrics.items():
+        arr = np.asarray(v)
+        assert np.all(np.isfinite(arr.astype(np.float64))), f"{arch}:{k} = {v}"
+    assert "loss" in metrics
+    assert float(np.asarray(metrics["loss"])) > 0.0
+
+
+def test_cells_enumeration():
+    cells = reg.all_cells()
+    # 5 LM archs x 4 shapes + 4 GNN x 4 + 1 recsys x 4 + sssp x 4
+    assert len(cells) == 5 * 4 + 4 * 4 + 4 + 4
+    skipped = [c for c in cells if c.skip]
+    assert all(c.shape == "long_500k" for c in skipped)
+    assert len(skipped) == 5  # every pure full-attention LM arch
+
+
+def test_param_counts_sane():
+    import repro.configs.mistral_large_123b as m
+    import repro.configs.olmoe_1b_7b as o
+    import repro.configs.qwen3_14b as q
+    assert 110e9 < m.CONFIG.param_count() < 135e9
+    assert 12e9 < q.CONFIG.param_count() < 16.5e9
+    assert 6e9 < o.CONFIG.param_count() < 8e9       # OLMoE total ~6.9B
+    assert 0.9e9 < o.CONFIG.active_param_count() < 1.6e9  # ~1.3B active

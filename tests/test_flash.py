@@ -1,0 +1,84 @@
+"""Flash-attention custom-VJP vs the dense oracle: values AND gradients,
+swept over GQA group sizes, block sizes, ragged T, and dtypes."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models import flash, layers
+
+
+def _mk(B, S, T, nq, nkv, D, Dv, dtype, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, nq, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, nkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, nkv, Dv), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("nq,nkv", [(4, 4), (8, 2), (6, 1)])
+@pytest.mark.parametrize("block_k", [16, 64, 100])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_forward_matches_oracle(nq, nkv, block_k, causal):
+    q, k, v = _mk(2, 24, 48, nq, nkv, 16, 16, jnp.float32)
+    out = flash.flash_attention(q, k, v, causal, block_k)
+    ref = layers.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("nq,nkv", [(4, 4), (8, 2)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_grads_match_oracle(nq, nkv, causal):
+    q, k, v = _mk(2, 16, 32, nq, nkv, 8, 8, jnp.float32, seed=3)
+
+    def f_flash(q, k, v):
+        return jnp.sum(flash.flash_attention(q, k, v, causal, 16) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(layers.attention_ref(q, k, v, causal=causal) ** 2)
+
+    gf = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(gf, gr, "qkv"):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-5,
+                                   err_msg=f"d{name} mismatch")
+
+
+def test_flash_grads_match_naive_scan_bf16():
+    """bf16 inputs: flash vjp ~= autodiff-through-scan (the baseline path)."""
+    q, k, v = _mk(1, 8, 24, 4, 2, 8, 8, jnp.bfloat16, seed=5)
+
+    def f_flash(q, k, v):
+        return jnp.sum(flash.flash_attention(q, k, v, True, 8)
+                       .astype(jnp.float32) ** 2)
+
+    def f_scan(q, k, v):
+        return jnp.sum(layers.blockwise_attention(q, k, v, causal=True,
+                                                  block_k=8)
+                       .astype(jnp.float32) ** 2)
+
+    gf = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    gs = jax.grad(f_scan, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gs):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=0.1, atol=0.05)
+
+
+def test_flash_different_value_dim():
+    q, k, v = _mk(2, 12, 12, 4, 2, 16, 8, jnp.float32)  # Dv != D (MLA-style)
+    out = flash.flash_attention(q, k, v, True, 8)
+    ref = layers.attention_ref(q, k, v, causal=True)
+    assert out.shape == (2, 12, 4, 8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_row_with_no_valid_keys():
+    """causal + T < S offsets never happen in our usage, but all-masked rows
+    must still produce zeros, not NaN (first row with causal over empty)."""
+    q, k, v = _mk(1, 4, 4, 2, 2, 8, 8, jnp.float32)
+    out = flash.flash_attention(q, k, v, True, 2)
+    assert bool(jnp.all(jnp.isfinite(out)))

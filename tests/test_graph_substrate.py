@@ -1,0 +1,109 @@
+"""Graph substrate tests: neighbor sampler, triplet builder, partitioner,
+window streams — plus hypothesis property tests on their invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import events as ev
+from repro.graphs import generators as gen
+from repro.graphs import partition as part
+from repro.graphs import sampler as smp
+from repro.graphs import triplets as tri
+from repro.graphs import window as win
+
+
+# ---------------------------------------------------------------- sampler ----
+
+def test_sampler_shapes_and_validity():
+    n, src, dst, w = gen.erdos_renyi(200, 2000, seed=0)
+    s = smp.NeighborSampler(n, src, dst)
+    seeds = np.array([3, 7, 11, 19])
+    sub = s.sample(seeds, fanout=(5, 3), seed=1)
+    n_cap, e_cap = smp.subgraph_capacity(4, (5, 3))
+    assert sub.node_ids.shape == (n_cap,)
+    assert sub.src.shape == (e_cap,)
+    # every real edge connects valid local slots
+    assert (sub.src[sub.edge_mask] < n_cap).all()
+    assert (sub.dst[sub.edge_mask] < n_cap).all()
+    # seeds are the first B slots
+    np.testing.assert_array_equal(sub.node_ids[:4], seeds)
+    # sampled edges are real in-edges of the parent graph
+    gsrc = sub.node_ids[sub.src[sub.edge_mask]]
+    gdst = sub.node_ids[sub.dst[sub.edge_mask]]
+    edge_set = set(zip(src.tolist(), dst.tolist()))
+    assert all((u, v) in edge_set for u, v in zip(gsrc, gdst))
+
+
+def test_sampler_zero_degree_nodes():
+    src = np.array([0, 1]); dst = np.array([1, 2])
+    s = smp.NeighborSampler(4, src, dst)
+    sub = s.sample(np.array([0, 3]), fanout=(2,), seed=0)  # 0,3 have no in-nbrs
+    assert not sub.edge_mask.any()
+
+
+def test_build_batch_masks_labels_to_seeds():
+    n, src, dst, w = gen.erdos_renyi(50, 300, seed=2)
+    s = smp.NeighborSampler(n, src, dst)
+    sub = s.sample(np.array([1, 2]), fanout=(3,), seed=0)
+    feats = np.random.default_rng(0).normal(size=(n, 4)).astype(np.float32)
+    labels = np.arange(n, dtype=np.int64) % 5
+    batch = smp.build_batch(sub, feats, labels)
+    assert batch["label_mask"].sum() == 2
+    assert batch["feats"].shape[1] == 4
+
+
+# --------------------------------------------------------------- triplets ----
+
+def test_triplets_semantics():
+    # path graph 0->1->2->3: triplets (0->1,1->2), (1->2,2->3)
+    src = np.array([0, 1, 2]); dst = np.array([1, 2, 3])
+    t_kj, t_ji, mask = tri.build_triplets(4, src, dst, budget=8,
+                                          per_edge_cap=4)
+    real = list(zip(t_kj[mask].tolist(), t_ji[mask].tolist()))
+    assert sorted(real) == [(0, 1), (1, 2)]
+    # no backtracking: k == i excluded (0->1 then 1->0 would backtrack)
+    src2 = np.array([0, 1]); dst2 = np.array([1, 0])
+    _, _, m2 = tri.build_triplets(2, src2, dst2, budget=8, per_edge_cap=4)
+    assert not m2.any()
+
+
+def test_triplets_budget_cap():
+    n, src, dst, w = gen.erdos_renyi(30, 300, seed=1)
+    t_kj, t_ji, mask = tri.build_triplets(n, src, dst, budget=64,
+                                          per_edge_cap=4, seed=0)
+    assert len(t_kj) == 64
+    assert mask.sum() <= 64
+
+
+# ------------------------------------------------------------- partitioner ----
+
+@given(st.integers(2, 6), st.integers(10, 200))
+@settings(max_examples=20, deadline=None)
+def test_edge_balanced_partition_covers_everything(parts, m):
+    n, src, dst, w = gen.erdos_renyi(37, m, seed=0)
+    bounds = part.edge_balanced_ranges(n, dst, parts)
+    assert bounds[0] == 0 and bounds[-1] == n
+    assert (np.diff(bounds) >= 0).all()
+    owner = part.owner_of(np.arange(n), bounds)
+    assert (owner >= 0).all() and (owner < parts).all()
+
+
+# ----------------------------------------------------------------- window ----
+
+@given(st.floats(0.0, 1.0), st.integers(1, 50))
+@settings(max_examples=15, deadline=None)
+def test_window_stream_invariants(delta, window):
+    n, src, dst, w = gen.erdos_renyi(40, 120, seed=3)
+    log = win.sliding_window_stream(src, dst, w, window=window, delta=delta,
+                                    seed=0)
+    # every deletion deletes a previously-added edge, at most once
+    seen, deleted = set(), set()
+    for k, u, v in zip(log.kind.tolist(), log.src.tolist(), log.dst.tolist()):
+        if k == ev.ADD:
+            seen.add((u, v))
+        elif k == ev.DEL:
+            assert (u, v) in seen
+            assert (u, v) not in deleted
+            deleted.add((u, v))
+    if delta == 0.0:
+        assert not deleted

@@ -1,0 +1,156 @@
+"""Per-kernel allclose tests: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property sweeps and custom-VJP
+gradient checks.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embed_bag.embed_bag import embedding_bag
+from repro.kernels.embed_bag.ops import bag_lookup
+from repro.kernels.embed_bag.ref import embedding_bag_ref
+from repro.kernels.relax.ops import relax_wave
+from repro.kernels.relax.ref import ellpack_relax_ref
+from repro.kernels.relax.relax import ellpack_relax
+from repro.kernels.spmm.ops import neighbor_reduce
+from repro.kernels.spmm.ref import spmm_ell_ref
+from repro.kernels.spmm.spmm import spmm_ell
+
+
+def _ell_case(n, r, k, seed, frac_pad=0.3):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, n, (r, k)).astype(np.int32)
+    w = rng.uniform(0.1, 4.0, (r, k)).astype(np.float32)
+    pad = rng.random((r, k)) < frac_pad
+    w[pad] = np.inf
+    idx[pad] = 0
+    dist = rng.uniform(0, 10, n).astype(np.float32)
+    dist[rng.random(n) < 0.2] = np.inf
+    return jnp.asarray(dist), jnp.asarray(idx), jnp.asarray(w)
+
+
+# ----------------------------------------------------------------- relax ----
+@pytest.mark.parametrize("n,r,k,bm", [
+    (64, 64, 8, 32), (256, 256, 16, 64), (128, 512, 4, 128), (512, 256, 128, 256),
+])
+def test_ellpack_relax_matches_ref(n, r, k, bm):
+    dist, idx, w = _ell_case(n, r, k, seed=n + r + k)
+    best_k, arg_k = ellpack_relax(dist, idx, w, block_rows=min(bm, r),
+                                  interpret=True)
+    best_r, arg_r = ellpack_relax_ref(dist, idx, w)
+    np.testing.assert_allclose(np.nan_to_num(best_k, posinf=1e30),
+                               np.nan_to_num(best_r, posinf=1e30), rtol=1e-6)
+    # argmin must agree where finite (ref ties go to smallest k; kernel too)
+    fin = np.isfinite(np.asarray(best_r))
+    np.testing.assert_array_equal(np.asarray(arg_k)[fin], np.asarray(arg_r)[fin])
+    assert (np.asarray(arg_k)[~fin] == -1).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 200), r=st.sampled_from([16, 32, 64]),
+       k=st.integers(1, 24), seed=st.integers(0, 10_000))
+def test_ellpack_relax_property(n, r, k, seed):
+    dist, idx, w = _ell_case(n, r, k, seed)
+    best_k, arg_k = ellpack_relax(dist, idx, w, block_rows=16, interpret=True)
+    best_r, arg_r = ellpack_relax_ref(dist, idx, w)
+    np.testing.assert_allclose(np.nan_to_num(best_k, posinf=1e30),
+                               np.nan_to_num(best_r, posinf=1e30), rtol=1e-6)
+
+
+def test_relax_wave_improves_monotonically():
+    dist, idx, w = _ell_case(128, 128, 8, seed=7)
+    parent = jnp.full((128,), -1, jnp.int32)
+    d1, p1, imp1 = relax_wave(dist, parent, idx, w, use_kernel=True)
+    assert bool(jnp.all(d1 <= dist))
+    d2, p2, imp2 = relax_wave(d1, p1, idx, w, use_kernel=True)
+    assert bool(jnp.all(d2 <= d1))
+
+
+# ------------------------------------------------------------------ spmm ----
+@pytest.mark.parametrize("agg", ["sum", "mean", "max"])
+@pytest.mark.parametrize("s,r,k,f,dtype", [
+    (64, 64, 8, 128, jnp.float32),
+    (128, 256, 16, 256, jnp.float32),
+    (64, 128, 4, 128, jnp.bfloat16),
+])
+def test_spmm_ell_matches_ref(agg, s, r, k, f, dtype):
+    rng = np.random.default_rng(r + k)
+    feats = jnp.asarray(rng.standard_normal((s, f)), dtype)
+    idx = jnp.asarray(rng.integers(0, s, (r, k)).astype(np.int32))
+    mask = jnp.asarray(rng.random((r, k)) < 0.7)
+    out_k = spmm_ell(feats, idx, mask, agg=agg, block_rows=64, block_feat=128,
+                     interpret=True)
+    out_r = spmm_ell_ref(feats, idx, mask, agg=agg)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_neighbor_reduce_grad_matches_ref_grad():
+    rng = np.random.default_rng(0)
+    feats = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 32, (48, 6)).astype(np.int32))
+    mask = jnp.asarray(rng.random((48, 6)) < 0.8)
+
+    def loss_via(fn):
+        return jax.grad(lambda f: jnp.sum(fn(f) ** 2))(feats)
+
+    g_wrapped = loss_via(lambda f: neighbor_reduce(f, idx, mask, "mean", False, True))
+    g_ref = loss_via(lambda f: spmm_ell_ref(f, idx, mask, agg="mean"))
+    np.testing.assert_allclose(np.asarray(g_wrapped), np.asarray(g_ref), rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.integers(4, 64), k=st.integers(1, 12), seed=st.integers(0, 9999),
+       agg=st.sampled_from(["sum", "mean", "max"]))
+def test_spmm_property(s, k, seed, agg):
+    rng = np.random.default_rng(seed)
+    feats = jnp.asarray(rng.standard_normal((s, 8)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, s, (16, k)).astype(np.int32))
+    mask = jnp.asarray(rng.random((16, k)) < 0.5)
+    out_k = spmm_ell(feats, idx, mask, agg=agg, block_rows=16, block_feat=8,
+                     interpret=True)
+    out_r = spmm_ell_ref(feats, idx, mask, agg=agg)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- embed_bag ----
+@pytest.mark.parametrize("agg", ["sum", "mean"])
+@pytest.mark.parametrize("v,b,l,d,dtype", [
+    (128, 16, 8, 128, jnp.float32),
+    (1024, 32, 20, 128, jnp.float32),
+    (256, 8, 4, 256, jnp.bfloat16),
+])
+def test_embedding_bag_matches_ref(agg, v, b, l, d, dtype):
+    rng = np.random.default_rng(v + b)
+    table = jnp.asarray(rng.standard_normal((v, d)), dtype)
+    idx = rng.integers(0, v, (b, l)).astype(np.int32)
+    idx[rng.random((b, l)) < 0.25] = -1  # padding
+    idx = jnp.asarray(idx)
+    out_k = embedding_bag(table, idx, agg=agg, block_bags=8, interpret=True)
+    out_r = embedding_bag_ref(table, idx, agg=agg)
+    tol = 1e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), rtol=tol, atol=tol)
+
+
+def test_bag_lookup_grad():
+    rng = np.random.default_rng(1)
+    table = jnp.asarray(rng.standard_normal((64, 16)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 64, (8, 5)).astype(np.int32))
+
+    g1 = jax.grad(lambda t: jnp.sum(bag_lookup(t, idx, "sum", False, True) ** 2))(table)
+    g2 = jax.grad(lambda t: jnp.sum(embedding_bag_ref(t, idx, agg="sum") ** 2))(table)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5)
+
+
+def test_embedding_bag_all_padded_bag_is_zero():
+    table = jnp.ones((16, 128), jnp.float32)
+    idx = jnp.full((8, 4), -1, jnp.int32)
+    out = embedding_bag(table, idx, agg="mean", block_bags=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 0.0)

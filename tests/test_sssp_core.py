@@ -1,0 +1,184 @@
+"""End-to-end behaviour tests for the SSSP-Del engine (the paper's system).
+
+Every test validates the engine's (dist, parent) against the independent
+numpy Dijkstra oracle on the *current* snapshot — i.e. exactly the paper's
+correctness claim (Appendix A) at every epoch boundary we probe.
+"""
+import numpy as np
+import pytest
+
+from repro.core import events as ev
+from repro.core.baseline import ReMoBaseline
+from repro.core.engine import EngineConfig, SSSPDelEngine
+from repro.core.oracle import check_tree, dijkstra, edges_of_pool
+from repro.core.state import validate_state
+from repro.graphs import generators, window
+
+
+def _validate(eng: SSSPDelEngine, n: int, source: int):
+    res = eng.query()
+    e = eng.state.edges
+    es, ed, ew = edges_of_pool(e.src, e.dst, e.w, e.active)
+    check_tree(n, es, ed, ew, source, res.dist, res.parent)
+    inv = validate_state(eng.state, n)
+    for k, v in inv.items():
+        assert bool(v), f"invariant {k} violated"
+    return res
+
+
+def test_additions_only_matches_dijkstra():
+    n, src, dst, w = generators.erdos_renyi(120, 700, seed=0)
+    eng = SSSPDelEngine(EngineConfig(n, 1024, source=3))
+    eng.ingest_log(ev.adds(src, dst, w))
+    _validate(eng, n, 3)
+
+
+def test_single_tree_edge_deletion():
+    # path 0->1->2->3 plus detour 0->9->3 (longer); delete 1->2, detour wins.
+    n = 10
+    eng = SSSPDelEngine(EngineConfig(n, 64, source=0))
+    eng.ingest_log(ev.adds([0, 1, 2, 0, 9], [1, 2, 3, 9, 3],
+                           [1.0, 1.0, 1.0, 5.0, 5.0]))
+    r0 = _validate(eng, n, 0)
+    assert r0.dist[3] == pytest.approx(3.0)
+    eng.ingest_log(ev.dels([1], [2]))
+    r1 = _validate(eng, n, 0)
+    assert r1.dist[2] == np.inf
+    assert r1.dist[3] == pytest.approx(10.0)
+    assert r1.parent[3] == 9
+
+
+def test_non_tree_deletion_is_free():
+    n = 6
+    eng = SSSPDelEngine(EngineConfig(n, 64, source=0))
+    eng.ingest_log(ev.adds([0, 0, 1], [1, 2, 2], [1.0, 1.0, 5.0]))
+    rounds_before = eng.n_rounds
+    eng.ingest_log(ev.dels([1], [2]))  # not a tree edge (0->2 is shorter)
+    assert eng.n_rounds == rounds_before  # no algorithmic work
+    _validate(eng, n, 0)
+
+
+def test_disconnection_goes_to_infinity():
+    n = 5
+    eng = SSSPDelEngine(EngineConfig(n, 32, source=0))
+    eng.ingest_log(ev.adds([0, 1], [1, 2], [1.0, 1.0]))
+    eng.ingest_log(ev.dels([0], [1]))
+    res = _validate(eng, n, 0)
+    assert np.isinf(res.dist[1]) and np.isinf(res.dist[2])
+    assert res.parent[1] == -1 and res.parent[2] == -1
+
+
+def test_reinsertion_after_deletion():
+    n = 4
+    eng = SSSPDelEngine(EngineConfig(n, 32, source=0))
+    eng.ingest_log(ev.adds([0, 1], [1, 2], [1.0, 1.0]))
+    eng.ingest_log(ev.dels([0], [1]))
+    eng.ingest_log(ev.adds([0], [1], [2.0]))
+    res = _validate(eng, n, 0)
+    assert res.dist[2] == pytest.approx(3.0)
+
+
+def test_weight_tie_breaking_deterministic():
+    # two equal shortest paths; engine must pick the smaller src id twice
+    n = 4
+    for _ in range(2):
+        eng = SSSPDelEngine(EngineConfig(n, 32, source=0))
+        eng.ingest_log(ev.adds([0, 0, 1, 2], [1, 2, 3, 3],
+                               [1.0, 1.0, 1.0, 1.0]))
+        res = eng.query()
+        assert res.parent[3] == 1  # deterministic tie-break
+
+
+def test_sliding_window_stream_full_replay():
+    n, src, dst, w = generators.power_law_hubs(300, 2500, seed=5)
+    source = int(generators.top_in_degree_sources(n, dst, 1)[0])
+    log = window.sliding_window_stream(src, dst, w, window=600, delta=0.5,
+                                       seed=7, query_every=500)
+    eng = SSSPDelEngine(EngineConfig(n, len(src) + 8, source=source))
+    for batch in log.runs():
+        if batch.kind == ev.ADD:
+            eng._ingest_adds(batch)
+        elif batch.kind == ev.DEL:
+            eng._ingest_dels(batch)
+        else:
+            _validate(eng, n, source)
+    _validate(eng, n, source)
+
+
+def test_batched_deletions_match_sequential():
+    n, src, dst, w = generators.erdos_renyi(80, 500, seed=3)
+    source = 0
+    log = window.sliding_window_stream(src, dst, w, window=120, delta=0.8, seed=4)
+    engs = {
+        "seq": SSSPDelEngine(EngineConfig(n, 600, source, batch_deletions=False)),
+        "bat": SSSPDelEngine(EngineConfig(n, 600, source, batch_deletions=True)),
+    }
+    for e in engs.values():
+        e.ingest_log(log)
+    d0 = engs["seq"].query().dist
+    d1 = engs["bat"].query().dist
+    np.testing.assert_allclose(np.nan_to_num(d0, posinf=1e30),
+                               np.nan_to_num(d1, posinf=1e30), rtol=1e-6)
+
+
+def test_flood_and_doubling_invalidation_agree():
+    n, src, dst, w = generators.erdos_renyi(100, 600, seed=9)
+    log = window.sliding_window_stream(src, dst, w, window=150, delta=0.7, seed=9)
+    res = {}
+    for name, doubling in (("flood", False), ("double", True)):
+        eng = SSSPDelEngine(EngineConfig(n, 700, 0, use_doubling=doubling))
+        eng.ingest_log(log)
+        res[name] = eng.query().dist
+    np.testing.assert_allclose(np.nan_to_num(res["flood"], posinf=1e30),
+                               np.nan_to_num(res["double"], posinf=1e30), rtol=1e-6)
+
+
+def test_remo_baseline_agrees_with_engine():
+    n, src, dst, w = generators.erdos_renyi(150, 900, seed=11)
+    log = window.sliding_window_stream(src, dst, w, window=200, delta=0.4, seed=11)
+    eng = SSSPDelEngine(EngineConfig(n, 1000, 1))
+    eng.ingest_log(log)
+    base = ReMoBaseline(n, 1000, 1)
+    base.ingest_log(log)
+    d_eng = eng.query().dist
+    d_base = base.query().dist
+    np.testing.assert_allclose(np.nan_to_num(d_eng, posinf=1e30),
+                               np.nan_to_num(d_base, posinf=1e30), rtol=1e-6)
+
+
+def test_engine_checkpoint_restore_roundtrip():
+    n, src, dst, w = generators.erdos_renyi(60, 300, seed=2)
+    log = window.sliding_window_stream(src, dst, w, window=100, delta=0.5, seed=2)
+    eng = SSSPDelEngine(EngineConfig(n, 400, 0))
+    half = len(log) // 2
+    eng.ingest_log(log[:half])
+    ckpt = eng.checkpoint()
+
+    # continue original
+    eng.ingest_log(log[half:])
+    want = eng.query().dist
+
+    # restore into a fresh engine (simulated node failure + restart)
+    eng2 = SSSPDelEngine(EngineConfig(n, 400, 0))
+    eng2.restore(ckpt)
+    eng2.ingest_log(log[half:])
+    got = eng2.query().dist
+    np.testing.assert_allclose(np.nan_to_num(want, posinf=1e30),
+                               np.nan_to_num(got, posinf=1e30), rtol=1e-6)
+
+
+def test_stability_metric_bounds():
+    n, src, dst, w = generators.erdos_renyi(100, 800, seed=6)
+    log = window.sliding_window_stream(src, dst, w, window=200, delta=0.3,
+                                       seed=6, query_every=300)
+    eng = SSSPDelEngine(EngineConfig(n, 900, 0))
+    stabilities = []
+    for batch in log.runs():
+        if batch.kind == ev.ADD:
+            eng._ingest_adds(batch)
+        elif batch.kind == ev.DEL:
+            eng._ingest_dels(batch)
+        else:
+            r = eng.query()
+            stabilities.append(eng.stability_vs_prev(r.parent))
+    assert all(0.0 <= s <= 1.0 for s in stabilities)

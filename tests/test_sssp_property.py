@@ -1,0 +1,77 @@
+"""Property-based tests (hypothesis): for *any* valid event stream, after any
+prefix ending at an epoch boundary the engine's distances equal Dijkstra on
+the snapshot and the parent pointers form a tight shortest-path tree.
+
+This is the strongest form of the paper's Appendix A claim we can check
+mechanically.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import events as ev
+from repro.core.engine import EngineConfig, SSSPDelEngine
+from repro.core.oracle import check_tree, edges_of_pool
+
+N = 24  # small vertex universe keeps shrinking effective
+
+
+@st.composite
+def event_streams(draw):
+    n_ev = draw(st.integers(min_value=1, max_value=60))
+    kinds, srcs, dsts, ws = [], [], [], []
+    live: set[tuple[int, int]] = set()
+    for _ in range(n_ev):
+        u = draw(st.integers(0, N - 1))
+        v = draw(st.integers(0, N - 1))
+        if u == v:
+            continue
+        if (u, v) in live and draw(st.booleans()):
+            kinds.append(ev.DEL); srcs.append(u); dsts.append(v); ws.append(0.0)
+            live.discard((u, v))
+        else:
+            w = draw(st.floats(min_value=0.1, max_value=8.0,
+                               allow_nan=False, allow_infinity=False))
+            kinds.append(ev.ADD); srcs.append(u); dsts.append(v); ws.append(w)
+            live.add((u, v))
+    if not kinds:
+        kinds, srcs, dsts, ws = [ev.ADD], [0], [1], [1.0]
+    return ev.EventLog(np.asarray(kinds, np.uint8), np.asarray(srcs, np.int64),
+                       np.asarray(dsts, np.int64), np.asarray(ws, np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(log=event_streams(), source=st.integers(0, N - 1),
+       batch_dels=st.booleans(), doubling=st.booleans())
+def test_engine_matches_oracle_on_any_stream(log, source, batch_dels, doubling):
+    eng = SSSPDelEngine(EngineConfig(
+        num_vertices=N, edge_capacity=4 * len(log) + 8, source=source,
+        batch_deletions=batch_dels, use_doubling=doubling))
+    eng.ingest_log(log)
+    res = eng.query()
+    e = eng.state.edges
+    es, ed, ew = edges_of_pool(e.src, e.dst, e.w, e.active)
+    check_tree(N, es, ed, ew, source, res.dist, res.parent)
+
+
+@settings(max_examples=15, deadline=None)
+@given(log=event_streams(), source=st.integers(0, N - 1),
+       cut=st.integers(1, 50))
+def test_oracle_holds_at_every_prefix(log, source, cut):
+    prefix = log[:min(cut, len(log))]
+    eng = SSSPDelEngine(EngineConfig(N, 4 * len(log) + 8, source))
+    eng.ingest_log(prefix)
+    res = eng.query()
+    e = eng.state.edges
+    es, ed, ew = edges_of_pool(e.src, e.dst, e.w, e.active)
+    check_tree(N, es, ed, ew, source, res.dist, res.parent)
+
+
+@settings(max_examples=10, deadline=None)
+@given(log=event_streams(), source=st.integers(0, N - 1))
+def test_dist_never_negative_and_source_zero(log, source):
+    eng = SSSPDelEngine(EngineConfig(N, 4 * len(log) + 8, source))
+    eng.ingest_log(log)
+    res = eng.query()
+    assert res.dist[source] == 0.0
+    finite = res.dist[np.isfinite(res.dist)]
+    assert (finite >= 0).all()
