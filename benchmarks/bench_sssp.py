@@ -152,7 +152,7 @@ def fig5_throughput(sink: C.CsvSink, small: bool) -> None:
     stop-the-world epoch PER deletion; ``batch_deletions=True`` coalesces a
     run of consecutive deletions into one invalidation+recompute epoch
     (correctness: Appendix A Case 2 covers the union of subtrees — see
-    DESIGN.md §2), trading epoch count for throughput."""
+    DESIGN.md §3), trading epoch count for throughput."""
     for ds in C.datasets(small):
         for delta in (0.01, 0.1, 0.5, 1.0):
             for batched in (False, True):
@@ -198,6 +198,58 @@ def fig6_batch_bsp(sink: C.CsvSink, small: bool) -> None:
                   reduction=f"{C.pctile(lat_bsp,50)/max(C.pctile(lat_ours,50),1e-9):.1f}x")
 
 
+def backend_shootout(sink: C.CsvSink, small: bool) -> None:
+    """Beyond-paper: segment (COO scatter-min) vs ellpack (dense gather +
+    row-min over the incrementally maintained ELL block) on fig5-style
+    dynamic ingest.  Bounded-degree streams — the regime the flat ELL layout
+    targets; power-law hubs need the sliced-ELL path (DESIGN.md §2.6).
+
+    Emits events/s per backend plus query p50 — the acceptance gate for the
+    ELL backend is events/s >= segment with <10% query-latency regression.
+    """
+    import jax
+    from repro.graphs import generators as gen
+
+    n, m = (1 << 11, 1 << 13) if small else (1 << 13, 1 << 15)
+    nv, src, dst, w = gen.erdos_renyi(n, m, seed=13)
+    source = int(gen.top_in_degree_sources(nv, dst, 1)[0])
+    for delta in (0.1, 0.5):
+        log = C.stream_for(
+            C.Dataset("er", nv, src, dst, w,
+                      gen.top_in_degree_sources(nv, dst)),
+            window_frac=1 / 3, delta=delta, query_every=10**9)
+        eps: dict[str, float] = {}
+        engines: dict[str, SSSPDelEngine] = {}
+        for backend in ("segment", "ellpack"):
+            for _timed in (False, True):  # first pass warms every jit shape
+                eng = SSSPDelEngine(EngineConfig(
+                    num_vertices=nv, edge_capacity=m + 64, source=source,
+                    relax_backend=backend))
+                t0 = time.perf_counter()
+                eng.ingest_log(log)
+                jax.block_until_ready(eng.state.sssp.dist)
+                ingest_s = time.perf_counter() - t0
+            eps[backend] = len(log) / ingest_s
+            engines[backend] = eng
+        # query = device->host readback (µs scale): interleave the reps
+        # across backends so clock/GC drift cancels, report p50
+        q_lat: dict[str, list[float]] = {b: [] for b in engines}
+        for _rep in range(105):
+            for b, eng in engines.items():
+                q_lat[b].append(eng.query().latency_s)
+        for backend, eng in engines.items():
+            _check_oracle(eng, sink, "backend_shootout_oracle")
+            sink.emit("backend_shootout", dataset="er", n=nv, edges=m,
+                      delta=delta, backend=backend, events=len(log),
+                      events_per_s=round(eps[backend], 1),
+                      query_p50_ms=round(C.pctile(q_lat[backend][5:], 50) * 1e3, 4),
+                      rounds=eng.n_rounds,
+                      ell_rebuilds=getattr(eng.ellp, "rebuilds", 0),
+                      ell_k=getattr(eng.ellp, "k", 0))
+        sink.emit("backend_shootout_summary", delta=delta,
+                  ell_speedup=round(eps["ellpack"] / eps["segment"], 3))
+
+
 ALL = [table2_static_baseline, fig1_query_latency, fig2_latency_over_time,
        fig3_source_selection, fig4_stability, fig5_throughput,
-       fig6_batch_bsp]
+       fig6_batch_bsp, backend_shootout]

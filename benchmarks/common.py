@@ -57,11 +57,16 @@ def pctile(xs, q):
 
 
 class CsvSink:
+    """Prints CSV-ish rows AND keeps structured records so the harness can
+    serialize a machine-readable artifact (BENCH_sssp.json) at the end."""
+
     def __init__(self):
         self.rows: list[str] = []
+        self.records: list[dict] = []
 
     def emit(self, bench: str, **kv):
         kvs = ",".join(f"{k}={v}" for k, v in kv.items())
         row = f"{bench},{kvs}"
         self.rows.append(row)
+        self.records.append({"bench": bench, **kv})
         print(row, flush=True)

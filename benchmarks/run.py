@@ -101,11 +101,39 @@ def run_roofline_table(sink: C.CsvSink) -> None:
                   "PYTHONPATH=src python -m repro.launch.dryrun --all first")
 
 
+def write_bench_json(sink: C.CsvSink, args, wall_s: float,
+                     path: str = "BENCH_sssp.json") -> None:
+    """Machine-readable artifact so the perf trajectory is tracked across
+    PRs (CI runs ``--small`` and archives this file)."""
+    import platform
+
+    import jax
+
+    payload = {
+        "schema": 1,
+        "suite": "sssp_del",
+        "small": bool(args.small),
+        "only": args.only,
+        "wall_s": round(wall_s, 2),
+        "env": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "python": platform.python_version(),
+        },
+        "records": sink.records,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    print(f"wrote {path} ({len(sink.records)} records)", flush=True)
+
+
 def main() -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--small", action="store_true")
     p.add_argument("--only")
     p.add_argument("--skip-kernels", action="store_true")
+    p.add_argument("--json", default="BENCH_sssp.json",
+                   help="machine-readable output path ('' disables)")
     args = p.parse_args()
     sink = C.CsvSink()
     t0 = time.perf_counter()
@@ -114,8 +142,10 @@ def main() -> int:
         run_kernels(sink, args.small)
     if not args.only:
         run_roofline_table(sink)
-    sink.emit("all_done", wall_s=f"{time.perf_counter() - t0:.1f}",
-              rows=len(sink.rows))
+    wall = time.perf_counter() - t0
+    sink.emit("all_done", wall_s=f"{wall:.1f}", rows=len(sink.rows))
+    if args.json:
+        write_bench_json(sink, args, wall, args.json)
     return 0
 
 

@@ -24,6 +24,10 @@ def main():
     p.add_argument("--scale", type=int, default=11)
     p.add_argument("--delta", type=float, default=0.3)
     p.add_argument("--window-frac", type=float, default=0.3)
+    p.add_argument("--backend", choices=("segment", "ellpack"),
+                   default="segment",
+                   help="relaxation backend (DESIGN.md §2; ellpack is the "
+                        "bounded-degree fast path)")
     args = p.parse_args()
 
     n, src, dst, w = gen.rmat(args.scale, edge_factor=8, seed=7)
@@ -36,7 +40,8 @@ def main():
           f"(delta={args.delta}, window={window}) source={source}")
 
     cap = int(len(src) * 1.3) + 64
-    eng = SSSPDelEngine(EngineConfig(n, cap, source))
+    eng = SSSPDelEngine(EngineConfig(n, cap, source,
+                                     relax_backend=args.backend))
     lat, stab = [], []
     t0 = time.perf_counter()
 

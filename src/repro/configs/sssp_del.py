@@ -17,6 +17,26 @@ class SSSPArchConfig:
     edges_per_part: int
     exchange: str = "allgather"   # paper-faithful; "delta" = beyond-paper
     delta_cap: int = 4096
+    # Relaxation backend for the single-host engine (DESIGN.md §2):
+    # "segment" = COO scatter-min (portable default); "ellpack" = dense
+    # gather + row-min over the incrementally maintained ELLPACK block
+    # (the Pallas kernel's layout — bounded-degree fast path).
+    relax_backend: str = "segment"
+    ell_block_rows: int = 256
+    ell_init_k: int = 8
+
+    def engine_config(self, *, edge_capacity: int, source: int, **overrides):
+        """Bridge to the single-host engine: an ``EngineConfig`` carrying
+        this arch config's backend selection (lazy import keeps configs/
+        free of core dependencies)."""
+        from repro.core.engine import EngineConfig
+        kw = dict(num_vertices=self.num_vertices,
+                  edge_capacity=edge_capacity, source=source,
+                  relax_backend=self.relax_backend,
+                  ell_block_rows=self.ell_block_rows,
+                  ell_init_k=self.ell_init_k)
+        kw.update(overrides)
+        return EngineConfig(**kw)
 
 
 CONFIG = SSSPArchConfig(name=ARCH_ID, num_vertices=1 << 24,

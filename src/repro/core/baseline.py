@@ -56,11 +56,12 @@ class ReMoBaseline:
         results = []
         for batch in log.runs():
             if batch.kind == ev.ADD:
-                slots, src, dst, w = self.alloc.plan_adds(batch.src, batch.dst, batch.w)
-                if len(slots):
+                plan = self.alloc.plan_adds(batch.src, batch.dst, batch.w)
+                if len(plan.slots):
                     self.edges = ingest.apply_adds(
-                        self.edges, jnp.asarray(slots), jnp.asarray(src),
-                        jnp.asarray(dst), jnp.asarray(w))
+                        self.edges, jnp.asarray(plan.slots),
+                        jnp.asarray(plan.src), jnp.asarray(plan.dst),
+                        jnp.asarray(plan.w))
             elif batch.kind == ev.DEL:
                 slots, _, _ = self.alloc.plan_dels(batch.src, batch.dst)
                 if len(slots):

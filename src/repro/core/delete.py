@@ -98,7 +98,12 @@ def invalidate_and_recompute(
     ``seed`` marks heads of deleted tree edges (possibly several — consecutive
     deletions may be batched; Appendix A's argument covers the union of
     subtrees since invalidation completes before any recomputation starts).
+
+    An all-false seed (non-tree deletion) is safe and cheap: the state comes
+    back unchanged and every stat is 0 — so callers need no blocking
+    ``bool(jnp.any(seed))`` check before dispatching (DESIGN.md §2.4).
     """
+    any_seed = jnp.any(seed)
     mark = mark_subtree_doubling if use_doubling else mark_subtree_flood
     aff, inv_rounds = mark(sssp.parent, seed)
     # Never invalidate the source itself (its dist is 0 by definition; a
@@ -129,11 +134,14 @@ def invalidate_and_recompute(
     state2, stats = relax.relax_until_converged(
         state1, edges, improved, num_vertices=num_vertices
     )
+    zero = jnp.int32(0)
     return state2, DeleteStats(
-        invalidation_rounds=inv_rounds,
+        invalidation_rounds=jnp.where(any_seed, inv_rounds, zero),
         affected=jnp.sum(aff.astype(jnp.int32)),
-        recompute_rounds=stats.rounds + 1,
-        recompute_messages=stats.messages + jnp.sum(improved.astype(jnp.int32)),
+        recompute_rounds=jnp.where(any_seed, stats.rounds + 1, zero),
+        recompute_messages=jnp.where(
+            any_seed,
+            stats.messages + jnp.sum(improved.astype(jnp.int32)), zero),
     )
 
 

@@ -32,6 +32,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.6 exposes shard_map at top level (kwarg: check_vma)
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+except AttributeError:  # older jax: experimental module (kwarg: check_rep)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_KW = {"check_rep": False}
+
 from repro.core.state import INF, NO_PARENT
 from repro.graphs import csr as csr_mod
 from repro.graphs import partition as part_mod
@@ -220,11 +227,11 @@ class DistributedSSSP:
         cfg = self.cfg
 
         @jax.jit
-        @partial(jax.shard_map, mesh=self.mesh,
+        @partial(_shard_map, mesh=self.mesh,
                  in_specs=(self.vspec, self.vspec, self.vspec,
                            self.espec, self.espec, self.espec, self.espec),
                  out_specs=(self.vspec, self.vspec, self.rspec),
-                 check_vma=False)
+                 **_SHARD_MAP_KW)
         def epoch(dist, parent, frontier, esrc, edst, ew, eact):
             d, p, r = self._relax_body(dist, parent, frontier, esrc, edst, ew, eact)
             return d, p, r
@@ -242,11 +249,11 @@ class DistributedSSSP:
         ax = self.cfg.mesh_axes
 
         @jax.jit
-        @partial(jax.shard_map, mesh=self.mesh,
+        @partial(_shard_map, mesh=self.mesh,
                  in_specs=(self.vspec, self.vspec, self.vspec,
                            self.espec, self.espec, self.espec, self.espec),
                  out_specs=(self.vspec, self.vspec, self.rspec),
-                 check_vma=False)
+                 **_SHARD_MAP_KW)
         def delete_epoch(dist, parent, seed, esrc, edst, ew, eact):
             row0 = jnp.int32(self._flat_index()) * self.npp
 
@@ -396,10 +403,10 @@ class DistributedSSSP:
         iff it was a tree edge (Listing 4)."""
 
         @jax.jit
-        @partial(jax.shard_map, mesh=self.mesh,
+        @partial(_shard_map, mesh=self.mesh,
                  in_specs=(self.vspec, self.rspec, self.rspec),
                  out_specs=self.vspec,
-                 check_vma=False)
+                 **_SHARD_MAP_KW)
         def seed_fn(parent, del_src, del_dst):
             row0 = jnp.int32(self._flat_index()) * self.npp
             local = (del_dst >= row0) & (del_dst < row0 + self.npp) & (del_dst >= 0)

@@ -1,0 +1,299 @@
+"""Incremental ELLPACK relaxation backend for the dynamic engine.
+
+The segment backend (core/relax.py) scatter-reduces over the flat COO edge
+pool; this module keeps a second, TPU-native view of the same graph — a
+by-destination ELLPACK block ``(nbr_idx, nbr_w)`` of shape (R, K) — and
+maintains it *incrementally* under ADD/DEL batches (DESIGN.md §2):
+
+  * ADD  — the host planner assigns each new edge a (row, k) cell past the
+    row's fill high-water mark; the device patch is one idempotent scatter.
+  * DEL  — resolved entirely on device: each deleted edge's cell is found by
+    matching the source id in its destination row and tombstoned (w := +inf).
+    No host map of ELL positions exists at all.
+  * weight-decrease (``on_duplicate="min"``) — device-side match + min-scatter.
+  * overflow — when a row's fill would exceed K, the planner rebuilds the
+    whole block from the host COO mirror with K doubled (next pow2 of twice
+    the max in-degree) and tombstones compacted away.  O(E) numpy + one
+    transfer, amortized over the doublings.
+
+All patch ops are jitted, tolerate pad_pow2-repeated rows (their scatters are
+idempotent or min/max-combined), and never read device memory back.
+
+Epoch functions mirror core/relax.py and core/delete.py exactly — same
+frontier evolution, same smallest-src-id tie-break — so (dist, parent) are
+bit-identical between the two backends (test_backend_equiv.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import delete as del_mod
+from repro.core.relax import RelaxStats
+from repro.core.state import INF, NO_PARENT, SSSPState
+from repro.graphs import csr as csr_mod
+from repro.kernels.relax.ops import relax_wave
+
+_NEG_INF = jnp.float32(-jnp.inf)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EllState:
+    """Device-resident sliced-ELL view of the active edge set.
+
+    ``fill`` is each row's occupancy high-water mark: cells at k >= fill[r]
+    have never been written; cells below it are live edges or tombstones
+    (w == +inf).  Rows n..R-1 are kernel block padding and stay empty.
+    """
+
+    nbr_idx: jax.Array  # i32[R, K] in-neighbor ids (0 where empty/tombstone)
+    nbr_w: jax.Array    # f32[R, K] weights (+inf where empty/tombstone)
+    fill: jax.Array     # i32[R]
+
+    @property
+    def k(self) -> int:
+        return self.nbr_w.shape[1]
+
+    @property
+    def rows(self) -> int:
+        return self.nbr_w.shape[0]
+
+
+# --------------------------------------------------------------- patch ops --
+@jax.jit
+def ell_append(ell: EllState, rows: jax.Array, kpos: jax.Array,
+               src: jax.Array, w: jax.Array) -> EllState:
+    """Write fresh edges into planner-assigned cells (idempotent scatter —
+    pad_pow2 repeats of the same (row, kpos, src, w) are no-ops)."""
+    return EllState(
+        nbr_idx=ell.nbr_idx.at[rows, kpos].set(src),
+        nbr_w=ell.nbr_w.at[rows, kpos].set(w),
+        fill=ell.fill.at[rows].max(kpos + 1),
+    )
+
+
+def _match_cell(ell: EllState, rows: jax.Array, src: jax.Array):
+    """Locate each (src -> rows) edge's live cell: (kpos, found).
+
+    Live edges are unique per (row, src) — the slot allocator dedups — so at
+    most one finite-weight cell matches.
+    """
+    row_idx = ell.nbr_idx[rows]                      # (m, K)
+    row_w = ell.nbr_w[rows]                          # (m, K)
+    hit = (row_idx == src[:, None]) & jnp.isfinite(row_w)
+    return jnp.argmax(hit, axis=1), jnp.any(hit, axis=1)
+
+
+@jax.jit
+def ell_delete(ell: EllState, rows: jax.Array, src: jax.Array) -> EllState:
+    """Tombstone deleted edges (w := +inf), located on device by source-id
+    match.  Duplicate (row, src) pairs from batch padding collapse to the
+    same cell; the max-combine makes the scatter order-free."""
+    kpos, found = _match_cell(ell, rows, src)
+    val = jnp.where(found, INF, _NEG_INF)            # -inf = no-op under max
+    return dataclasses.replace(
+        ell, nbr_w=ell.nbr_w.at[rows, kpos].max(val))
+
+
+@jax.jit
+def ell_update_min(ell: EllState, rows: jax.Array, src: jax.Array,
+                   w: jax.Array) -> EllState:
+    """Weight-decrease of existing edges (on_duplicate="min"): device-side
+    match + min-scatter (+inf = no-op for unmatched/padded entries)."""
+    kpos, found = _match_cell(ell, rows, src)
+    val = jnp.where(found, w, INF)
+    return dataclasses.replace(
+        ell, nbr_w=ell.nbr_w.at[rows, kpos].min(val))
+
+
+@jax.jit
+def ell_invariants(ell: EllState) -> dict[str, jax.Array]:
+    """Occupancy invariants over the device fill marks (diagnostics/tests):
+    every cell at or past a row's fill mark must be empty (+inf), and fill
+    must stay within the block width.  Guards the device copy of the fill
+    state against drifting from the host planner's."""
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, ell.nbr_w.shape, 1)
+    beyond = k_iota >= ell.fill[:, None]
+    return {
+        "beyond_fill_empty": jnp.all(jnp.where(beyond, jnp.isinf(ell.nbr_w),
+                                               True)),
+        "fill_in_range": jnp.all((ell.fill >= 0)
+                                 & (ell.fill <= ell.nbr_w.shape[1])),
+    }
+
+
+# ------------------------------------------------------------ host planner --
+def _next_pow2(x: int) -> int:
+    m = 1
+    while m < x:
+        m <<= 1
+    return m
+
+
+class EllPlanner:
+    """Host control plane for the ELL block: assigns append cells, detects
+    overflow, and rebuilds (with capacity doubling) from the host COO mirror.
+
+    Keeps only dense per-row fill counts — deletions and weight updates are
+    resolved on device, so there is no host map of ELL cell positions.
+    """
+
+    def __init__(self, num_vertices: int, *, block_rows: int = 256,
+                 init_k: int = 8):
+        self.n = num_vertices
+        bm = min(block_rows, _next_pow2(max(num_vertices, 1)))
+        self.rows = -(-num_vertices // bm) * bm      # ceil to block multiple
+        self.k = max(1, init_k)
+        self.fill = np.zeros(self.rows, np.int32)
+        self.rebuilds = 0
+
+    def empty_state(self) -> EllState:
+        return EllState(
+            nbr_idx=jnp.zeros((self.rows, self.k), jnp.int32),
+            nbr_w=jnp.full((self.rows, self.k), INF, jnp.float32),
+            fill=jnp.zeros((self.rows,), jnp.int32),
+        )
+
+    def plan_appends(self, rows: np.ndarray) -> np.ndarray | None:
+        """Assign a distinct cell past the fill mark to each fresh edge.
+
+        Returns kpos i32[m] (and advances the fill marks), or None when any
+        row would overflow K — the caller must rebuild instead.
+        """
+        m = len(rows)
+        if m == 0:
+            return np.empty(0, np.int32)
+        counts = np.bincount(rows, minlength=self.n)
+        if int((self.fill[:self.n] + counts[:self.n]).max(initial=0)) > self.k:
+            return None
+        order = np.argsort(rows, kind="stable")
+        sr = rows[order]
+        starts = np.nonzero(np.r_[True, sr[1:] != sr[:-1]])[0]
+        sizes = np.diff(np.r_[starts, m])
+        rank = np.empty(m, np.int64)
+        rank[order] = np.arange(m) - np.repeat(starts, sizes)
+        kpos = self.fill[rows] + rank
+        np.maximum.at(self.fill, rows, kpos + 1)
+        return kpos.astype(np.int32)
+
+    def rebuild(self, src: np.ndarray, dst: np.ndarray, w: np.ndarray
+                ) -> EllState:
+        """Rebuild the device block from the live COO edge set (host mirror):
+        compacts tombstones and doubles K to the next pow2 of 2x the max
+        in-degree when the degree itself (not churn) caused the overflow."""
+        deg = np.bincount(dst, minlength=self.n) if len(dst) else \
+            np.zeros(self.n, np.int64)
+        needed = int(deg.max(initial=0))
+        self.k = max(self.k, _next_pow2(max(2 * needed, 1)))
+        idx, ww, fill = csr_mod.ell_from_coo(
+            self.n, src, dst, w, k=self.k, n_rows=self.rows)
+        self.fill = fill
+        self.rebuilds += 1
+        return EllState(nbr_idx=jnp.asarray(idx), nbr_w=jnp.asarray(ww),
+                        fill=jnp.asarray(fill))
+
+
+# ------------------------------------------------------------------ epochs --
+@partial(jax.jit, static_argnames=("num_vertices", "max_rounds",
+                                   "use_kernel", "interpret"))
+def ell_relax_until_converged(
+    sssp: SSSPState,
+    nbr_idx: jax.Array,
+    nbr_w: jax.Array,
+    frontier: jax.Array,
+    *,
+    num_vertices: int,
+    max_rounds: int = 0,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> tuple[SSSPState, RelaxStats]:
+    """ELL rendering of relax.relax_until_converged: frontier-masked waves to
+    fixpoint.  Same candidate sets, same tie-break => bit-identical results."""
+
+    def cond(carry):
+        _, _, frontier, rounds, _ = carry
+        go = jnp.any(frontier)
+        if max_rounds:
+            go = go & (rounds < max_rounds)
+        return go
+
+    def body(carry):
+        dist, parent, frontier, rounds, msgs = carry
+        dist, parent, improved = relax_wave(
+            dist, parent, nbr_idx, nbr_w, frontier=frontier,
+            use_kernel=use_kernel, interpret=interpret)
+        return (dist, parent, improved, rounds + 1,
+                msgs + jnp.sum(improved.astype(jnp.int32)))
+
+    dist, parent, _, rounds, msgs = jax.lax.while_loop(
+        cond, body,
+        (sssp.dist, sssp.parent, frontier, jnp.int32(0), jnp.int32(0)),
+    )
+    return (
+        SSSPState(dist=dist, parent=parent, source=sssp.source),
+        RelaxStats(rounds=rounds, messages=msgs),
+    )
+
+
+@partial(jax.jit, static_argnames=("num_vertices", "use_doubling",
+                                   "use_kernel", "interpret"))
+def ell_invalidate_and_recompute(
+    sssp: SSSPState,
+    nbr_idx: jax.Array,
+    nbr_w: jax.Array,
+    seed: jax.Array,
+    *,
+    num_vertices: int,
+    use_doubling: bool = True,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> tuple[SSSPState, del_mod.DeleteStats]:
+    """Deletion epoch on the ELL block (paper Listings 4/8/9).
+
+    Invalidation reuses the parent-forest marking from core/delete.py (it
+    does not touch edges).  The bulk DistanceQuery pull is ONE ELL wave: every
+    affected row gathers offers from all in-neighbors at once (+inf sources —
+    other affected vertices — and tombstones offer nothing), then ordinary
+    frontier-masked waves drain the epoch.
+
+    Safe to call with an all-false seed (non-tree deletions): the state is
+    returned unchanged and every stat is 0, which lets the engine skip the
+    blocking ``bool(jnp.any(seed))`` host sync entirely (DESIGN.md §2.4).
+    """
+    any_seed = jnp.any(seed)
+    mark = (del_mod.mark_subtree_doubling if use_doubling
+            else del_mod.mark_subtree_flood)
+    aff, inv_rounds = mark(sssp.parent, seed)
+    aff = aff.at[sssp.source].set(False)
+
+    dist = jnp.where(aff, INF, sssp.dist)
+    parent = jnp.where(aff, NO_PARENT, sssp.parent)
+
+    # Bulk pull: one unmasked wave, improvements applied to affected rows
+    # only (matching the segment path's ``aff[dst]`` edge mask; unaffected
+    # rows cannot improve anyway — the pre-deletion state was converged).
+    dist_p, parent_p, improved = relax_wave(
+        dist, parent, nbr_idx, nbr_w,
+        use_kernel=use_kernel, interpret=interpret)
+    improved = improved & aff
+    dist = jnp.where(improved, dist_p, dist)
+    parent = jnp.where(improved, parent_p, parent)
+
+    state1 = SSSPState(dist=dist, parent=parent, source=sssp.source)
+    state2, stats = ell_relax_until_converged(
+        state1, nbr_idx, nbr_w, improved, num_vertices=num_vertices,
+        use_kernel=use_kernel, interpret=interpret)
+    zero = jnp.int32(0)
+    return state2, del_mod.DeleteStats(
+        invalidation_rounds=jnp.where(any_seed, inv_rounds, zero),
+        affected=jnp.sum(aff.astype(jnp.int32)),
+        recompute_rounds=jnp.where(any_seed, stats.rounds + 1, zero),
+        recompute_messages=jnp.where(
+            any_seed,
+            stats.messages + jnp.sum(improved.astype(jnp.int32)), zero),
+    )

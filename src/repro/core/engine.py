@@ -11,9 +11,18 @@ Faithful behaviour (defaults):
 
 Beyond-paper switches:
   * ``batch_deletions=True`` — coalesce a run of consecutive DELs into one
-    invalidation+recompute epoch (union of affected subtrees; see DESIGN.md).
+    invalidation+recompute epoch (union of affected subtrees; DESIGN.md §3).
   * ``use_doubling`` — pointer-doubling invalidation (default True; set False
     for the paper's wave-by-wave flood).
+  * ``relax_backend`` — "segment" (scatter-min over the COO pool) or
+    "ellpack" (dense gather + row-min over an incrementally maintained
+    ELLPACK block; the Pallas kernel's layout — DESIGN.md §2).
+
+Host-sync rules (DESIGN.md §2.4): the ingest loop never blocks on device
+values.  Round/message stats accumulate in device scalars and are only read
+back inside ``query()``; deletion epochs run unconditionally (an all-false
+seed is a cheap device no-op) instead of the old ``bool(jnp.any(seed))``
+round-trip per deletion.
 """
 from __future__ import annotations
 
@@ -26,9 +35,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import delete as del_mod
+from repro.core import ellpack as ell_mod
 from repro.core import events as ev
 from repro.core import ingest, relax
 from repro.core.state import EdgePool, GraphState, SSSPState
+
+RELAX_BACKENDS = ("segment", "ellpack")
 
 
 @dataclasses.dataclass
@@ -40,6 +52,10 @@ class EngineConfig:
     batch_deletions: bool = False
     on_duplicate: str = "ignore"
     validate_every: int = 0     # if >0, run oracle check every k queries (tests)
+    relax_backend: str = "segment"
+    ell_block_rows: int = 256   # relax-kernel row tile (rebuilds pad to this)
+    ell_init_k: int = 8         # initial ELL width; doubles on overflow
+    ell_use_kernel: bool | None = None  # None = Pallas kernel iff on TPU
 
 
 @dataclasses.dataclass
@@ -54,23 +70,50 @@ class SSSPDelEngine:
     """Host orchestrator; all heavy lifting is jitted device code."""
 
     def __init__(self, cfg: EngineConfig):
+        assert cfg.relax_backend in RELAX_BACKENDS, cfg.relax_backend
         self.cfg = cfg
         self.alloc = ingest.SlotAllocator(cfg.edge_capacity, cfg.on_duplicate)
         self.state = GraphState.init(cfg.num_vertices, cfg.edge_capacity, cfg.source)
-        # counters (host-side, for benchmarks)
+        # batch counters (host-side; no device source)
         self.n_epochs = 0
-        self.n_rounds = 0
-        self.n_messages = 0
         self.n_adds = 0
         self.n_dels = 0
+        # round/message counters live ON DEVICE; read back lazily at query()
+        self._dev_rounds = jnp.int32(0)
+        self._dev_messages = jnp.int32(0)
         self._last_parent: np.ndarray | None = None
+        self._init_ell()
+
+    def _init_ell(self) -> None:
+        cfg = self.cfg
+        if cfg.relax_backend != "ellpack":
+            self.ellp = None
+            self.ell = None
+            return
+        self.ellp = ell_mod.EllPlanner(
+            cfg.num_vertices, block_rows=cfg.ell_block_rows,
+            init_k=cfg.ell_init_k)
+        self.ell = self.ellp.empty_state()
+        on_tpu = jax.default_backend() == "tpu"
+        self._ell_kernel = on_tpu if cfg.ell_use_kernel is None else cfg.ell_use_kernel
+        self._ell_interpret = not on_tpu
+
+    # --------------------------------------------------------- lazy counters
+    @property
+    def n_rounds(self) -> int:
+        return int(jax.device_get(self._dev_rounds))
+
+    @property
+    def n_messages(self) -> int:
+        return int(jax.device_get(self._dev_messages))
 
     # ------------------------------------------------------------------ adds
     def _ingest_adds(self, batch: ev.EventBatch) -> None:
-        slots, src, dst, w = self.alloc.plan_adds(batch.src, batch.dst, batch.w)
-        if len(slots) == 0:
+        plan = self.alloc.plan_adds(batch.src, batch.dst, batch.w)
+        if len(plan.slots) == 0:
             return
-        slots_p, src_p, dst_p, w_p = ingest.pad_pow2(slots, src, dst, w)
+        slots_p, src_p, dst_p, w_p = ingest.pad_pow2(
+            plan.slots, plan.src, plan.dst, plan.w)
         edges = ingest.apply_adds(self.state.edges, jnp.asarray(slots_p),
                                   jnp.asarray(src_p), jnp.asarray(dst_p),
                                   jnp.asarray(w_p))
@@ -78,14 +121,50 @@ class SSSPDelEngine:
         # its distance to the head).  Relaxing from the tails delivers exactly
         # those offers (plus no-op re-offers along other out-edges).
         frontier = relax.frontier_from_vertices(
-            jnp.asarray(src), self.cfg.num_vertices)
-        sssp, stats = relax.relax_until_converged(
-            self.state.sssp, edges, frontier, num_vertices=self.cfg.num_vertices)
+            jnp.asarray(plan.src), self.cfg.num_vertices)
+        if self.ellp is not None:
+            self._ell_apply_adds(plan)
+            sssp, stats = ell_mod.ell_relax_until_converged(
+                self.state.sssp, self.ell.nbr_idx, self.ell.nbr_w, frontier,
+                num_vertices=self.cfg.num_vertices,
+                use_kernel=self._ell_kernel, interpret=self._ell_interpret)
+        else:
+            sssp, stats = relax.relax_until_converged(
+                self.state.sssp, edges, frontier,
+                num_vertices=self.cfg.num_vertices)
         self.state = dataclasses.replace(self.state, edges=edges, sssp=sssp)
-        self.n_adds += len(slots)
+        self.n_adds += len(plan.slots)
         self.n_epochs += 1
-        self.n_rounds += int(stats.rounds)
-        self.n_messages += int(stats.messages)
+        self._dev_rounds = self._dev_rounds + stats.rounds
+        self._dev_messages = self._dev_messages + stats.messages
+
+    def _ell_apply_adds(self, plan: ingest.PlannedAdds) -> None:
+        """Incremental ELL maintenance for one ADD batch (DESIGN.md §2.3).
+
+        Fresh edges get planner-assigned cells (one idempotent device
+        scatter); weight-decreases resolve their cell on device.  Overflow of
+        any row's fill mark triggers a full rebuild from the host COO mirror
+        — which already contains this batch, so no patch follows.
+        """
+        fresh = plan.fresh
+        rows = plan.dst[fresh].astype(np.int64)
+        kpos = self.ellp.plan_appends(rows)
+        if kpos is None:
+            self.ell = self.ellp.rebuild(*self.alloc.active_coo())
+            return
+        if len(rows):
+            rows_p, kpos_p, src_p, w_p = ingest.pad_pow2(
+                rows.astype(np.int32), kpos, plan.src[fresh], plan.w[fresh])
+            self.ell = ell_mod.ell_append(
+                self.ell, jnp.asarray(rows_p), jnp.asarray(kpos_p),
+                jnp.asarray(src_p), jnp.asarray(w_p))
+        if not fresh.all():
+            upd = ~fresh
+            rows_p, src_p, w_p = ingest.pad_pow2(
+                plan.dst[upd], plan.src[upd], plan.w[upd])
+            self.ell = ell_mod.ell_update_min(
+                self.ell, jnp.asarray(rows_p), jnp.asarray(src_p),
+                jnp.asarray(w_p))
 
     # ------------------------------------------------------------------ dels
     def _ingest_dels(self, batch: ev.EventBatch) -> None:
@@ -105,16 +184,27 @@ class SSSPDelEngine:
                 self.state.sssp, jnp.asarray(psrc_p), jnp.asarray(pdst_p),
                 self.cfg.num_vertices)
             edges = ingest.apply_dels(self.state.edges, jnp.asarray(slots_p))
-            if bool(jnp.any(seed)):
+            # Non-tree deletions (all-false seed) are a device no-op with
+            # zeroed stats — cheaper than syncing on bool(jnp.any(seed)).
+            if self.ellp is not None:
+                self.ell = ell_mod.ell_delete(
+                    self.ell, jnp.asarray(pdst_p), jnp.asarray(psrc_p))
+                sssp, dstats = ell_mod.ell_invalidate_and_recompute(
+                    self.state.sssp, self.ell.nbr_idx, self.ell.nbr_w, seed,
+                    num_vertices=self.cfg.num_vertices,
+                    use_doubling=self.cfg.use_doubling,
+                    use_kernel=self._ell_kernel,
+                    interpret=self._ell_interpret)
+            else:
                 sssp, dstats = del_mod.invalidate_and_recompute(
                     self.state.sssp, edges, seed,
                     num_vertices=self.cfg.num_vertices,
                     use_doubling=self.cfg.use_doubling)
-                self.n_rounds += int(dstats.invalidation_rounds) + int(dstats.recompute_rounds)
-                self.n_messages += int(dstats.recompute_messages) + int(dstats.affected)
-            else:
-                sssp = self.state.sssp  # non-tree deletion: no algorithmic work
             self.state = dataclasses.replace(self.state, edges=edges, sssp=sssp)
+            self._dev_rounds = (self._dev_rounds + dstats.invalidation_rounds
+                                + dstats.recompute_rounds)
+            self._dev_messages = (self._dev_messages + dstats.recompute_messages
+                                  + dstats.affected)
             self.n_dels += len(slots)
             self.n_epochs += 1
 
@@ -165,7 +255,8 @@ class SSSPDelEngine:
     # ------------------------------------------------------------ checkpoint
     def checkpoint(self) -> dict[str, np.ndarray]:
         """O(N+E) snapshot for fault tolerance (see train/checkpoint.py for
-        the sharded writer used at scale)."""
+        the sharded writer used at scale).  The ELL block is NOT serialized —
+        it is a derived view, rebuilt from the pool on restore."""
         e, s = self.state.edges, self.state.sssp
         return {
             "src": np.asarray(e.src), "dst": np.asarray(e.dst),
@@ -182,10 +273,10 @@ class SSSPDelEngine:
                            jnp.asarray(ckpt["source"])),
             cursor=jnp.asarray(ckpt["cursor"]),
         )
-        # rebuild host allocator from the pool
-        self.alloc = ingest.SlotAllocator(self.cfg.edge_capacity, self.cfg.on_duplicate)
-        act = np.asarray(ckpt["active"])
-        src = np.asarray(ckpt["src"]); dst = np.asarray(ckpt["dst"])
-        self.alloc.free = [i for i in range(self.cfg.edge_capacity - 1, -1, -1) if not act[i]]
-        self.alloc.slot_of = {(int(src[i]), int(dst[i])): i
-                              for i in np.nonzero(act)[0].tolist()}
+        # rebuild host planner state (slot map + mirror) from the pool
+        self.alloc = ingest.SlotAllocator.from_pool(
+            self.cfg.edge_capacity, self.cfg.on_duplicate,
+            ckpt["src"], ckpt["dst"], ckpt["w"], ckpt["active"])
+        if self.ellp is not None:
+            self._init_ell()
+            self.ell = self.ellp.rebuild(*self.alloc.active_coo())

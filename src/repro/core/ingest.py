@@ -6,14 +6,21 @@ free-list) plans where each topology event lands, and the data plane applies
 whole batches functionally on device.  The device never sees hash maps —
 only dense ``(slots, src, dst, w)`` arrays.
 
+The planner is numpy-vectorized (DESIGN.md §2.5): per-batch work is a handful
+of array ops plus O(batch) dict membership probes — the dict is consulted only
+for *collisions* (duplicate adds, deletions of known edges), never iterated.
+The allocator also keeps a host **mirror** of the device pool (src/dst/w/
+active as numpy arrays); the ELL maintenance path rebuilds its device layout
+from the mirror without ever reading device memory back.
+
 Duplicate policy: the paper preprocesses inputs to simple graphs; adds of an
 already-present edge are dropped by default (``on_duplicate="ignore"``) or
-treated as weight-decrease updates (``"min"`` — still monotone, still safe for
-insertion mode).
+treated as weight-*decrease* updates (``"min"`` — still monotone, still safe
+for insertion mode; increases are dropped).
 """
 from __future__ import annotations
 
-from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -22,8 +29,20 @@ import numpy as np
 from repro.core.state import EdgePool, GraphState
 
 
+class PlannedAdds(NamedTuple):
+    slots: np.ndarray  # i32[m] pool slots to write
+    src: np.ndarray    # i32[m]
+    dst: np.ndarray    # i32[m]
+    w: np.ndarray      # f32[m]
+    fresh: np.ndarray  # bool[m]; False = weight-decrease of an existing edge
+
+
 class SlotAllocator:
-    """Host-side (u,v) -> slot map + free list over the fixed edge pool."""
+    """Host-side (u,v) -> slot map + free list over the fixed edge pool.
+
+    Also maintains the host mirror of the pool (``m*`` arrays) so layout
+    rebuilds (CSR/ELL) never require a device readback.
+    """
 
     def __init__(self, capacity: int, on_duplicate: str = "ignore"):
         assert on_duplicate in ("ignore", "min")
@@ -31,38 +50,120 @@ class SlotAllocator:
         self.slot_of: dict[tuple[int, int], int] = {}
         self.free: list[int] = list(range(capacity - 1, -1, -1))
         self.on_duplicate = on_duplicate
+        self.msrc = np.zeros(capacity, np.int32)
+        self.mdst = np.zeros(capacity, np.int32)
+        self.mw = np.zeros(capacity, np.float32)
+        self.mactive = np.zeros(capacity, np.bool_)
 
-    def plan_adds(self, src: np.ndarray, dst: np.ndarray, w: np.ndarray):
-        """Returns (slots, src, dst, w) for the accepted adds."""
-        slots, ps, pd, pw = [], [], [], []
-        for u, v, wt in zip(src.tolist(), dst.tolist(), w.tolist()):
-            key = (u, v)
-            if key in self.slot_of:
-                if self.on_duplicate == "ignore":
-                    continue
-                # "min": re-emit the slot with the smaller weight; device-side
-                # apply takes elementwise min via overwrite (weight monotone).
-                slots.append(self.slot_of[key]); ps.append(u); pd.append(v); pw.append(wt)
-                continue
-            if not self.free:
+    @classmethod
+    def from_pool(cls, capacity: int, on_duplicate: str, src: np.ndarray,
+                  dst: np.ndarray, w: np.ndarray, active: np.ndarray
+                  ) -> "SlotAllocator":
+        """Rebuild planner state from a checkpointed pool snapshot."""
+        a = cls(capacity, on_duplicate)
+        act = np.asarray(active, bool)
+        a.msrc[:] = src; a.mdst[:] = dst; a.mw[:] = w; a.mactive[:] = act
+        live = np.nonzero(act)[0]
+        a.slot_of = {(int(src[i]), int(dst[i])): int(i) for i in live}
+        a.free = [i for i in range(capacity - 1, -1, -1) if not act[i]]
+        return a
+
+    def active_coo(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(src, dst, w) of the live edges, from the host mirror."""
+        act = self.mactive
+        return self.msrc[act], self.mdst[act], self.mw[act]
+
+    # ------------------------------------------------------------------ adds
+    def plan_adds(self, src: np.ndarray, dst: np.ndarray, w: np.ndarray
+                  ) -> PlannedAdds:
+        """Plan a batch of insertions; returns the accepted writes."""
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int64)
+        w = np.asarray(w, np.float32)
+        m = len(src)
+        if m == 0:
+            return self._empty_adds()
+        # Collapse within-batch duplicates: one row per (u,v), first-occurrence
+        # order; "min" keeps the smallest weight among the duplicates.
+        key = (src << 32) | dst
+        uniq, first, inv = np.unique(key, return_index=True,
+                                     return_inverse=True)
+        if len(uniq) != m and self.on_duplicate == "min":
+            wmin = np.full(len(uniq), np.inf, np.float32)
+            np.minimum.at(wmin, inv, w)
+        else:
+            wmin = w[first]
+        order = np.argsort(first, kind="stable")
+        uu = (uniq >> 32).astype(np.int32)[order]
+        vv = (uniq & 0xFFFFFFFF).astype(np.int32)[order]
+        ww = wmin[order]
+
+        # Collision probe against the live-edge map (the only dict use).
+        slot_of = self.slot_of
+        hit = np.fromiter(
+            ((int(u), int(v)) in slot_of for u, v in zip(uu, vv)),
+            np.bool_, count=len(uu))
+
+        out: list[tuple[np.ndarray, ...]] = []
+        new_u, new_v, new_w = uu[~hit], vv[~hit], ww[~hit]
+        k = len(new_u)
+        if k:
+            if k > len(self.free):
                 raise RuntimeError("edge pool capacity exhausted")
-            s = self.free.pop()
-            self.slot_of[key] = s
-            slots.append(s); ps.append(u); pd.append(v); pw.append(wt)
-        return (np.asarray(slots, np.int32), np.asarray(ps, np.int32),
-                np.asarray(pd, np.int32), np.asarray(pw, np.float32))
+            new_slots = np.asarray(self.free[-k:][::-1], np.int32)
+            del self.free[-k:]
+            slot_of.update(zip(zip(new_u.tolist(), new_v.tolist()),
+                               new_slots.tolist()))
+            self.msrc[new_slots] = new_u
+            self.mdst[new_slots] = new_v
+            self.mw[new_slots] = new_w
+            self.mactive[new_slots] = True
+            out.append((new_slots, new_u, new_v, new_w,
+                        np.ones(k, np.bool_)))
 
+        if hit.any() and self.on_duplicate == "min":
+            du, dv, dw = uu[hit], vv[hit], ww[hit]
+            dslots = np.fromiter(
+                (slot_of[(int(u), int(v))] for u, v in zip(du, dv)),
+                np.int32, count=len(du))
+            better = dw < self.mw[dslots]  # weight increases are dropped
+            if better.any():
+                dslots, du, dv, dw = (dslots[better], du[better],
+                                      dv[better], dw[better])
+                self.mw[dslots] = dw
+                out.append((dslots, du, dv, dw,
+                            np.zeros(len(dslots), np.bool_)))
+
+        if not out:
+            return self._empty_adds()
+        return PlannedAdds(*(np.concatenate(parts) for parts in zip(*out)))
+
+    @staticmethod
+    def _empty_adds() -> PlannedAdds:
+        z32 = np.empty(0, np.int32)
+        return PlannedAdds(z32, z32, z32, np.empty(0, np.float32),
+                           np.empty(0, np.bool_))
+
+    # ------------------------------------------------------------------ dels
     def plan_dels(self, src: np.ndarray, dst: np.ndarray):
-        """Returns (slots, src, dst) for deletions of edges that exist."""
-        slots, ps, pd = [], [], []
-        for u, v in zip(src.tolist(), dst.tolist()):
-            s = self.slot_of.pop((u, v), None)
-            if s is None:
-                continue  # deleting a non-existent edge is a no-op
-            self.free.append(s)
-            slots.append(s); ps.append(u); pd.append(v)
-        return (np.asarray(slots, np.int32), np.asarray(ps, np.int32),
-                np.asarray(pd, np.int32))
+        """Returns (slots, src, dst) for deletions of edges that exist.
+        Deleting a non-existent edge (or the same edge twice in one batch)
+        is a no-op."""
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int64)
+        pop = self.slot_of.pop
+        found = [(s, int(u), int(v))
+                 for u, v in zip(src.tolist(), dst.tolist())
+                 if (s := pop((u, v), None)) is not None]
+        if not found:
+            z32 = np.empty(0, np.int32)
+            return z32, z32.copy(), z32.copy()
+        slots = np.asarray([f[0] for f in found], np.int32)
+        ps = np.asarray([f[1] for f in found], np.int32)
+        pd = np.asarray([f[2] for f in found], np.int32)
+        self.free.extend(slots.tolist())
+        self.mactive[slots] = False
+        return slots, ps, pd
 
 
 def pad_pow2(*arrays: np.ndarray) -> tuple[np.ndarray, ...]:
@@ -70,15 +171,22 @@ def pad_pow2(*arrays: np.ndarray) -> tuple[np.ndarray, ...]:
     element (idempotent for slot writes: re-setting the same slot to the
     same value is a no-op).  Keeps the number of distinct jitted shapes —
     and therefore compilations — at O(log max_batch) instead of O(#sizes),
-    which is what keeps the ingestion throughput benchmarks honest."""
+    which is what keeps the ingestion throughput benchmarks honest.
+
+    Contract (uniform across all input lengths): returns a fresh tuple of
+    arrays, all of length ``next_pow2(n)``; a zero-length or already-pow2
+    batch passes through with the *same* array objects (no copy).  All
+    inputs must share the same leading length.
+    """
     n = len(arrays[0])
+    assert all(len(a) == n for a in arrays), [len(a) for a in arrays]
     if n == 0:
-        return arrays
+        return tuple(arrays)
     m = 1
     while m < n:
         m <<= 1
     if m == n:
-        return arrays
+        return tuple(arrays)
     return tuple(np.concatenate([a, np.repeat(a[-1:], m - n, axis=0)])
                  for a in arrays)
 

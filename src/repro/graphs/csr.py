@@ -4,6 +4,10 @@ kernels/ and core/).
 The TPU-native relaxation kernel consumes a *by-destination* sliced-ELLPACK
 view: for every dst row, a padded list of (in-neighbor id, weight).  Padding
 entries point at row 0 with +inf weight so they never win a min.
+
+All builders are fancy-indexed scatters — no per-row Python loops — so the
+dynamic engine can afford full rebuilds on ELL capacity overflow (DESIGN.md
+§2.3): a rebuild is O(E) numpy work plus one host->device transfer.
 """
 from __future__ import annotations
 
@@ -25,25 +29,36 @@ def coo_to_csr(n: int, src: np.ndarray, dst: np.ndarray, w: np.ndarray,
     return indptr, cols_s, w_s, perm
 
 
-def csr_to_ell(n: int, indptr: np.ndarray, cols: np.ndarray, w: np.ndarray,
-               *, k: int | None = None, pad_col: int = 0):
-    """Dense ELLPACK (n, K) from CSR; K defaults to max row degree.
+def _csr_positions(indptr: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(row, column-within-row) for every CSR entry, vectorized."""
+    deg = np.diff(indptr)
+    rows = np.repeat(np.arange(len(deg)), deg)
+    kpos = np.arange(indptr[-1]) - np.repeat(indptr[:-1], deg)
+    return rows, kpos
 
-    Returns (nbr_idx i32[n,K], nbr_w f32[n,K]); pad weight +inf.
+
+def csr_to_ell(n: int, indptr: np.ndarray, cols: np.ndarray, w: np.ndarray,
+               *, k: int | None = None, pad_col: int = 0, n_rows: int | None = None):
+    """Dense ELLPACK (n_rows, K) from CSR; K defaults to max row degree.
+
+    Returns (nbr_idx i32[n_rows,K], nbr_w f32[n_rows,K]); pad weight +inf.
     Rows longer than K are truncated (callers pick K >= max degree unless
-    deliberately sketching).
+    deliberately sketching).  ``n_rows >= n`` pads extra all-inf rows at the
+    bottom — the engine uses this to round the row count up to the relax
+    kernel's block size.
     """
     deg = np.diff(indptr)
     kmax = int(deg.max()) if n and len(cols) else 0
     K = kmax if k is None else k
     K = max(K, 1)
-    idx = np.full((n, K), pad_col, np.int32)
-    ww = np.full((n, K), PAD_W, np.float32)
-    for r in range(n):
-        a, b = indptr[r], indptr[r + 1]
-        take = min(K, b - a)
-        idx[r, :take] = cols[a:a + take]
-        ww[r, :take] = w[a:a + take]
+    R = n if n_rows is None else n_rows
+    assert R >= n, (R, n)
+    idx = np.full((R, K), pad_col, np.int32)
+    ww = np.full((R, K), PAD_W, np.float32)
+    rows, kpos = _csr_positions(indptr)
+    keep = kpos < K
+    idx[rows[keep], kpos[keep]] = cols[keep]
+    ww[rows[keep], kpos[keep]] = w[keep]
     return idx, ww
 
 
@@ -53,6 +68,7 @@ def csr_to_sliced_ell(n: int, indptr: np.ndarray, cols: np.ndarray,
     padded to its own max degree.  Returns a list of
     (row_offset, nbr_idx [s,Ks], nbr_w [s,Ks]) — VMEM-friendly blocks with far
     less padding than global ELL on power-law graphs."""
+    rows, kpos = _csr_positions(indptr)
     out = []
     for r0 in range(0, n, slice_rows):
         r1 = min(r0 + slice_rows, n)
@@ -60,9 +76,27 @@ def csr_to_sliced_ell(n: int, indptr: np.ndarray, cols: np.ndarray,
         Ks = max(1, int(deg.max()) if len(deg) else 1)
         idx = np.zeros((r1 - r0, Ks), np.int32)
         ww = np.full((r1 - r0, Ks), PAD_W, np.float32)
-        for i, r in enumerate(range(r0, r1)):
-            a, b = indptr[r], indptr[r + 1]
-            idx[i, : b - a] = cols[a:b]
-            ww[i, : b - a] = w[a:b]
+        a, b = indptr[r0], indptr[r1]
+        idx[rows[a:b] - r0, kpos[a:b]] = cols[a:b]
+        ww[rows[a:b] - r0, kpos[a:b]] = w[a:b]
         out.append((r0, idx, ww))
     return out
+
+
+def ell_from_coo(n: int, src: np.ndarray, dst: np.ndarray, w: np.ndarray,
+                 *, k: int, n_rows: int | None = None):
+    """By-destination ELL directly from COO: (nbr_idx, nbr_w, fill).
+
+    ``fill`` is the per-row occupancy (== in-degree; the incremental
+    maintenance path treats it as a high-water mark).  Requires
+    ``k >= max in-degree`` — the engine's rebuild policy guarantees it.
+    """
+    indptr, cols, ws, _ = coo_to_csr(n, np.asarray(src), np.asarray(dst),
+                                     np.asarray(w), by="dst")
+    deg = np.diff(indptr)
+    assert int(deg.max(initial=0)) <= k, (int(deg.max(initial=0)), k)
+    idx, ww = csr_to_ell(n, indptr, cols, ws, k=k, n_rows=n_rows)
+    R = n if n_rows is None else n_rows
+    fill = np.zeros(R, np.int32)
+    fill[:n] = deg
+    return idx, ww, fill

@@ -3,7 +3,14 @@
 ``relax_wave`` composes the kernel (or the jnp ref) with the engine-level
 update rule: take the elementwise min against current distances, emit the
 improved mask (next frontier) and updated parents.  The host-side ELL builder
-lives in repro.graphs.csr.
+lives in repro.graphs.csr; the dynamic engine's incremental ELL maintenance
+lives in repro.core.ellpack.
+
+Frontier masking (work-efficiency, DESIGN.md §2.2): sources outside the
+frontier are masked to +inf *before* the gather, so a wave only delivers
+offers from vertices that improved last round — the ELL rendering of the
+segment path's ``active & frontier[src]`` edge mask.  The mask costs one O(N)
+``where``; the kernel itself stays a dense gather + row-min.
 """
 from __future__ import annotations
 
@@ -15,19 +22,26 @@ import jax.numpy as jnp
 from repro.kernels.relax.ref import ellpack_relax_ref
 from repro.kernels.relax.relax import ellpack_relax
 
+_INF = jnp.float32(jnp.inf)
+
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
 def relax_wave(dist: jax.Array, parent: jax.Array, nbr_idx: jax.Array,
-               nbr_w: jax.Array, *, use_kernel: bool = True,
-               interpret: bool = True):
-    """One full (non-frontier-masked) relaxation wave in ELL layout.
+               nbr_w: jax.Array, *, frontier: jax.Array | None = None,
+               use_kernel: bool = True, interpret: bool = True):
+    """One relaxation wave in ELL layout (frontier-masked when given).
 
+    ``nbr_idx``/``nbr_w`` may have more rows than ``dist`` (kernel block
+    padding); the extra rows are all-+inf and are sliced off the outputs.
     Returns (dist', parent', improved).  CPU container: interpret=True.
     """
+    n = dist.shape[0]
+    offers = dist if frontier is None else jnp.where(frontier, dist, _INF)
     if use_kernel:
-        best, arg = ellpack_relax(dist, nbr_idx, nbr_w, interpret=interpret)
+        best, arg = ellpack_relax(offers, nbr_idx, nbr_w, interpret=interpret)
     else:
-        best, arg = ellpack_relax_ref(dist, nbr_idx, nbr_w)
+        best, arg = ellpack_relax_ref(offers, nbr_idx, nbr_w)
+    best, arg = best[:n], arg[:n]
     improved = best < dist
     return (jnp.where(improved, best, dist),
             jnp.where(improved, arg, parent),

@@ -3,12 +3,12 @@
 Semantics (one bulk "DistanceUpdate" wave in ELL layout):
 
     cand[i, k] = dist[nbr_idx[i, k]] + nbr_w[i, k]
-    best[i]    = min_k cand[i, k]                (+inf padded entries lose)
-    arg[i]     = nbr_idx[i, argmin_k cand[i,k]]  (-1 if best == +inf)
+    best[i]    = min_k cand[i, k]                      (+inf padded entries lose)
+    arg[i]     = min {nbr_idx[i,k] : cand[i,k] == best[i]}   (-1 if best == +inf)
 
-Ties break toward the smallest k (jnp.argmin convention) — the host ELL
-builder sorts each row's neighbors by id, so this matches the engine's
-smallest-src-id rule.
+Ties break toward the smallest *neighbor id* — identical to the engine's
+segment_min path (smallest-src-id rule), so the ELL relaxation backend
+produces bit-identical parent trees (DESIGN.md §2.2).
 """
 from __future__ import annotations
 
@@ -17,9 +17,9 @@ import jax.numpy as jnp
 
 def ellpack_relax_ref(dist: jnp.ndarray, nbr_idx: jnp.ndarray,
                       nbr_w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    cand = dist[nbr_idx] + nbr_w                       # (N, K)
+    cand = dist[nbr_idx] + nbr_w                       # (R, K)
     best = jnp.min(cand, axis=1)
-    kstar = jnp.argmin(cand, axis=1)
-    arg = jnp.take_along_axis(nbr_idx, kstar[:, None], axis=1)[:, 0]
+    is_min = cand == best[:, None]
+    arg = jnp.min(jnp.where(is_min, nbr_idx, jnp.int32(2**31 - 1)), axis=1)
     arg = jnp.where(jnp.isfinite(best), arg, -1)
     return best, arg.astype(jnp.int32)

@@ -34,11 +34,11 @@ def _relax_kernel(dist_ref, idx_ref, w_ref, best_ref, arg_ref):
     w = w_ref[...]                             # (bm, K)
     cand = jnp.take(dist, idx, axis=0) + w     # dense gather + add
     best = jnp.min(cand, axis=1)               # (bm,)
-    # row-argmin via 2D iota (1D iota is not legal on TPU)
-    k_iota = jax.lax.broadcasted_iota(jnp.int32, cand.shape, 1)
+    # row-argmin with ties broken toward the SMALLEST NEIGHBOR ID — the same
+    # rule the segment_min engine path uses, so both relaxation backends pick
+    # bit-identical parents.  (min over masked ids; no iota/argmin needed.)
     is_min = cand == best[:, None]
-    kstar = jnp.min(jnp.where(is_min, k_iota, jnp.int32(2**31 - 1)), axis=1)
-    arg = jnp.take_along_axis(idx, kstar[:, None].astype(jnp.int32), axis=1)[:, 0]
+    arg = jnp.min(jnp.where(is_min, idx, jnp.int32(2**31 - 1)), axis=1)
     best_ref[...] = best
     arg_ref[...] = jnp.where(jnp.isfinite(best), arg, -1).astype(jnp.int32)
 

@@ -1,0 +1,176 @@
+"""Relaxation-backend equivalence: the ELLPACK backend must be a drop-in for
+the segment backend — bit-identical (dist, parent) on any dynamic stream, and
+both must satisfy the Dijkstra oracle at every query point (DESIGN.md §2.2).
+
+The sweep crosses backend-relevant switches (doubling vs flood invalidation,
+batched vs per-event deletions) and runs with a deliberately tiny initial ELL
+width so the capacity-doubling rebuild path is exercised repeatedly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import events as ev
+from repro.core.engine import EngineConfig, SSSPDelEngine
+from repro.core.oracle import check_tree, edges_of_pool
+from repro.graphs import generators, window
+
+
+def _dynamic_stream(seed: int, *, n=90, m=520, delta=0.6):
+    n, src, dst, w = generators.erdos_renyi(n, m, seed=seed)
+    log = window.sliding_window_stream(src, dst, w, window=m // 3,
+                                       delta=delta, seed=seed,
+                                       query_every=m // 2)
+    return n, len(src), log
+
+
+def _run(backend: str, n: int, cap: int, log, source: int, *,
+         use_doubling: bool, batch_deletions: bool, **kw) -> SSSPDelEngine:
+    eng = SSSPDelEngine(EngineConfig(
+        n, cap + 64, source, relax_backend=backend,
+        use_doubling=use_doubling, batch_deletions=batch_deletions, **kw))
+    eng.ingest_log(log)
+    return eng
+
+
+def _oracle_check(eng: SSSPDelEngine, n: int, source: int):
+    q = eng.query()
+    e = eng.state.edges
+    es, ed, ew = edges_of_pool(e.src, e.dst, e.w, e.active)
+    check_tree(n, es, ed, ew, source, q.dist, q.parent)
+    if eng.ell is not None:
+        from repro.core.ellpack import ell_invariants
+        for k, ok in ell_invariants(eng.ell).items():
+            assert bool(ok), f"ELL invariant violated: {k}"
+        # the device fill marks must track the host planner's exactly
+        np.testing.assert_array_equal(np.asarray(eng.ell.fill),
+                                      eng.ellp.fill)
+    return q
+
+
+@pytest.mark.parametrize("use_doubling", [False, True])
+@pytest.mark.parametrize("batch_deletions", [False, True])
+def test_backends_bit_identical_on_dynamic_stream(use_doubling, batch_deletions):
+    n, m, log = _dynamic_stream(seed=11 + 2 * use_doubling + batch_deletions)
+    source = 3
+    # ell_init_k=2 forces the capacity-doubling rebuild path several times
+    ell = _run("ellpack", n, m, log, source, use_doubling=use_doubling,
+               batch_deletions=batch_deletions, ell_init_k=2)
+    seg = _run("segment", n, m, log, source, use_doubling=use_doubling,
+               batch_deletions=batch_deletions)
+    q_ell = _oracle_check(ell, n, source)
+    q_seg = _oracle_check(seg, n, source)
+    np.testing.assert_array_equal(q_seg.dist, q_ell.dist)
+    np.testing.assert_array_equal(q_seg.parent, q_ell.parent)
+    # same waves, same improvements — the stats must agree too
+    assert seg.n_rounds == ell.n_rounds
+    assert seg.n_messages == ell.n_messages
+    assert ell.ellp.rebuilds >= 1, "rebuild path not exercised"
+
+
+def test_backends_identical_parents_under_pervasive_ties():
+    """Unit weights make equal-cost predecessors pervasive (paper §5.4); the
+    smallest-src-id rule must make both backends pick the same parent."""
+    n, src, dst, w = generators.erdos_renyi(100, 900, seed=21)
+    w = np.ones_like(w)
+    log = window.sliding_window_stream(src, dst, w, window=300, delta=0.5,
+                                       seed=21, query_every=400)
+    res = {}
+    for backend in ("segment", "ellpack"):
+        eng = SSSPDelEngine(EngineConfig(n, len(src) + 64, 2,
+                                         relax_backend=backend, ell_init_k=2))
+        eng.ingest_log(log)
+        res[backend] = _oracle_check(eng, n, 2)
+    np.testing.assert_array_equal(res["segment"].dist, res["ellpack"].dist)
+    np.testing.assert_array_equal(res["segment"].parent, res["ellpack"].parent)
+
+
+def test_capacity_doubling_under_degree_growth():
+    """A hub whose in-degree doubles batch over batch must force repeated
+    capacity-doubling rebuilds, each preserving oracle-exactness."""
+    n, hub = 130, 0
+    eng = SSSPDelEngine(EngineConfig(n, 512, 1, relax_backend="ellpack",
+                                     ell_init_k=2))
+    eng.ingest_log(ev.adds([1], [hub], [10.0]))
+    k_seen = {eng.ellp.k}
+    nxt = 2
+    for size in (4, 8, 16, 32, 64):
+        tails = np.arange(nxt, nxt + size)
+        nxt += size
+        eng.ingest_log(ev.adds([1] * size, tails, [1.0] * size))  # reach tails
+        eng.ingest_log(ev.adds(tails, [hub] * size,
+                               np.linspace(2.0, 3.0, size)))
+        k_seen.add(eng.ellp.k)
+        _oracle_check(eng, n, 1)
+    assert eng.ellp.rebuilds >= 3
+    assert len(k_seen) >= 3, f"ELL width never doubled: {sorted(k_seen)}"
+
+
+def test_ellpack_oracle_at_every_query_point():
+    n, m, log = _dynamic_stream(seed=5, delta=0.8)
+    eng = SSSPDelEngine(EngineConfig(n, m + 64, 0, relax_backend="ellpack",
+                                     ell_init_k=2))
+    for batch in log.runs():
+        if batch.kind == ev.ADD:
+            eng._ingest_adds(batch)
+        elif batch.kind == ev.DEL:
+            eng._ingest_dels(batch)
+        else:
+            _oracle_check(eng, n, 0)
+    _oracle_check(eng, n, 0)
+
+
+def test_ellpack_min_duplicate_policy_matches_segment():
+    # repeated adds of the same edge with shrinking weights must propagate
+    # as weight-decreases under on_duplicate="min" in both backends
+    n = 8
+    res = {}
+    for backend in ("segment", "ellpack"):
+        eng = SSSPDelEngine(EngineConfig(n, 32, 0, relax_backend=backend,
+                                         on_duplicate="min", ell_init_k=2))
+        eng.ingest_log(ev.adds([0, 1, 0, 0], [1, 2, 2, 1],
+                               [4.0, 1.0, 9.0, 2.0]))
+        eng.ingest_log(ev.adds([0], [1], [1.0]))   # decrease 0->1 to 1.0
+        eng.ingest_log(ev.adds([0], [2], [20.0]))  # increase is dropped
+        res[backend] = _oracle_check(eng, n, 0)
+    np.testing.assert_array_equal(res["segment"].dist, res["ellpack"].dist)
+    np.testing.assert_array_equal(res["segment"].parent, res["ellpack"].parent)
+    assert res["segment"].dist[2] == pytest.approx(2.0)
+
+
+def test_ellpack_checkpoint_restore_roundtrip():
+    n, m, log = _dynamic_stream(seed=9)
+    eng = SSSPDelEngine(EngineConfig(n, m + 64, 0, relax_backend="ellpack",
+                                     ell_init_k=2))
+    half = len(log) // 2
+    eng.ingest_log(log[:half])
+    ckpt = eng.checkpoint()
+    eng.ingest_log(log[half:])
+    want = eng.query()
+
+    eng2 = SSSPDelEngine(EngineConfig(n, m + 64, 0, relax_backend="ellpack"))
+    eng2.restore(ckpt)
+    eng2.ingest_log(log[half:])
+    got = eng2.query()
+    np.testing.assert_array_equal(want.dist, got.dist)
+    np.testing.assert_array_equal(want.parent, got.parent)
+
+
+def test_arch_config_bridges_backend_selection():
+    import dataclasses
+    from repro.configs import sssp_del as c_sssp
+    arch = dataclasses.replace(c_sssp.REDUCED, relax_backend="ellpack",
+                               num_vertices=64, ell_init_k=2)
+    eng = SSSPDelEngine(arch.engine_config(edge_capacity=256, source=0))
+    assert eng.ellp is not None
+    eng.ingest_log(ev.adds([0, 1, 2], [1, 2, 3], [1.0, 1.0, 1.0]))
+    _oracle_check(eng, 64, 0)
+
+
+def test_ellpack_non_tree_deletion_is_free():
+    n = 6
+    eng = SSSPDelEngine(EngineConfig(n, 64, 0, relax_backend="ellpack"))
+    eng.ingest_log(ev.adds([0, 0, 1], [1, 2, 2], [1.0, 1.0, 5.0]))
+    rounds_before = eng.n_rounds
+    eng.ingest_log(ev.dels([1], [2]))  # not a tree edge (0->2 is shorter)
+    assert eng.n_rounds == rounds_before  # stats stay zero without a host sync
+    _oracle_check(eng, n, 0)

@@ -2,7 +2,7 @@
 window streams — plus hypothesis property tests on their invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st  # hypothesis or fallback sampler
 
 from repro.core import events as ev
 from repro.graphs import generators as gen

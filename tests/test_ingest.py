@@ -1,0 +1,109 @@
+"""Ingestion-layer unit tests: pad_pow2 contract, vectorized slot planning,
+and the host COO mirror the ELL rebuild path depends on."""
+import numpy as np
+import pytest
+
+from repro.core import ingest
+
+
+# ---------------------------------------------------------------- pad_pow2 --
+def test_pad_pow2_empty_batch_is_identity():
+    a = np.empty(0, np.int32)
+    b = np.empty(0, np.float32)
+    out = ingest.pad_pow2(a, b)
+    assert isinstance(out, tuple) and len(out) == 2
+    assert out[0] is a and out[1] is b  # no copy on the no-op path
+    assert len(out[0]) == 0
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 8, 64])
+def test_pad_pow2_already_pow2_is_identity(n):
+    a = np.arange(n, dtype=np.int32)
+    out = ingest.pad_pow2(a)
+    assert isinstance(out, tuple)
+    assert out[0] is a
+
+
+@pytest.mark.parametrize("n,m", [(3, 4), (5, 8), (9, 16), (1023, 1024)])
+def test_pad_pow2_pads_by_repeating_tail(n, m):
+    a = np.arange(n, dtype=np.int32)
+    b = np.arange(n, dtype=np.float32) * 0.5
+    pa, pb = ingest.pad_pow2(a, b)
+    assert len(pa) == len(pb) == m
+    np.testing.assert_array_equal(pa[:n], a)
+    assert (pa[n:] == a[-1]).all()
+    assert (pb[n:] == b[-1]).all()
+
+
+def test_pad_pow2_rejects_mismatched_lengths():
+    with pytest.raises(AssertionError):
+        ingest.pad_pow2(np.arange(3), np.arange(4))
+
+
+# ----------------------------------------------------------- SlotAllocator --
+def _alloc(cap=32, dup="ignore"):
+    return ingest.SlotAllocator(cap, dup)
+
+
+def test_plan_adds_assigns_distinct_slots_and_mirror():
+    a = _alloc()
+    plan = a.plan_adds(np.array([0, 1, 2]), np.array([1, 2, 3]),
+                       np.array([1.0, 2.0, 3.0]))
+    assert len(np.unique(plan.slots)) == 3
+    assert plan.fresh.all()
+    ms, md, mw = a.active_coo()
+    assert sorted(zip(ms.tolist(), md.tolist())) == [(0, 1), (1, 2), (2, 3)]
+    np.testing.assert_allclose(np.sort(mw), [1.0, 2.0, 3.0])
+
+
+def test_plan_adds_ignore_drops_duplicates_within_and_across_batches():
+    a = _alloc()
+    p1 = a.plan_adds(np.array([0, 0, 0]), np.array([1, 1, 2]),
+                     np.array([1.0, 9.0, 2.0]))
+    assert len(p1.slots) == 2  # in-batch dup of (0,1) collapsed to first
+    p2 = a.plan_adds(np.array([0]), np.array([1]), np.array([5.0]))
+    assert len(p2.slots) == 0  # cross-batch duplicate dropped
+
+
+def test_plan_adds_min_keeps_decreases_drops_increases():
+    a = _alloc(dup="min")
+    a.plan_adds(np.array([0]), np.array([1]), np.array([4.0]))
+    p = a.plan_adds(np.array([0, 0]), np.array([1, 1]), np.array([9.0, 3.0]))
+    # in-batch min is 3.0 < 4.0 -> one non-fresh decrease emitted
+    assert len(p.slots) == 1 and not p.fresh[0]
+    assert p.w[0] == pytest.approx(3.0)
+    p2 = a.plan_adds(np.array([0]), np.array([1]), np.array([7.0]))
+    assert len(p2.slots) == 0  # increase dropped
+    _, _, mw = a.active_coo()
+    assert mw[0] == pytest.approx(3.0)
+
+
+def test_plan_dels_pops_and_frees():
+    a = _alloc(cap=4)
+    p = a.plan_adds(np.array([0, 1]), np.array([1, 2]), np.array([1.0, 1.0]))
+    slots, ps, pd = a.plan_dels(np.array([0, 0, 5]), np.array([1, 1, 6]))
+    assert slots.tolist() == [p.slots[0]]  # dup del + missing edge are no-ops
+    assert (ps[0], pd[0]) == (0, 1)
+    assert not a.mactive[slots[0]]
+    # freed slot is reusable
+    p2 = a.plan_adds(np.array([7, 8]), np.array([8, 9]), np.array([1.0, 1.0]))
+    assert len(p2.slots) == 2
+
+
+def test_capacity_exhaustion_raises():
+    a = _alloc(cap=2)
+    a.plan_adds(np.array([0, 1]), np.array([1, 2]), np.array([1.0, 1.0]))
+    with pytest.raises(RuntimeError):
+        a.plan_adds(np.array([2]), np.array([3]), np.array([1.0]))
+
+
+def test_from_pool_roundtrip():
+    a = _alloc(cap=8)
+    a.plan_adds(np.array([0, 1, 2]), np.array([1, 2, 3]),
+                np.array([1.0, 2.0, 3.0]))
+    a.plan_dels(np.array([1]), np.array([2]))
+    b = ingest.SlotAllocator.from_pool(8, "ignore", a.msrc, a.mdst, a.mw,
+                                       a.mactive)
+    assert b.slot_of == a.slot_of
+    assert sorted(b.free) == sorted(a.free)
+    np.testing.assert_array_equal(b.mactive, a.mactive)

@@ -4,7 +4,7 @@ gradient checks.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st  # hypothesis or fallback sampler
 
 import jax
 import jax.numpy as jnp

@@ -59,8 +59,8 @@ def test_flash_matches_scan_attention():
 
 def test_act_sharding_context_is_noop_on_single_device():
     cfg, params, batch = _setup()
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _mk  # AxisType compat across jax versions
+    mesh = _mk((1,), ("data",))
     l1, _ = _loss_and_grads(cfg, params, batch)
     with tfm.activation_sharding(mesh, ("data",)):
         l2, _ = _loss_and_grads(cfg, params, batch)

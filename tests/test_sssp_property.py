@@ -6,7 +6,7 @@ This is the strongest form of the paper's Appendix A claim we can check
 mechanically.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st  # hypothesis or fallback sampler
 
 from repro.core import events as ev
 from repro.core.engine import EngineConfig, SSSPDelEngine
