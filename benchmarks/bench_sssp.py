@@ -250,6 +250,72 @@ def backend_shootout(sink: C.CsvSink, small: bool) -> None:
                   ell_speedup=round(eps["ellpack"] / eps["segment"], 3))
 
 
+def dist_engine(sink: C.CsvSink, small: bool) -> None:
+    """Beyond-paper (DESIGN.md §5): the sharded dynamic engine vs the
+    single-device engine on the same mixed ADD/DEL stream — ingest
+    throughput and query p50.  P = local device count (1 on the CI runner;
+    8 when the process is started with forced host devices), so on one
+    device this measures the pure sharding overhead: shard_map epochs plus
+    per-partition host planning, with bit-identical results as the gate.
+    """
+    import jax
+    from repro.core.dist_engine import (ShardedEngineConfig,
+                                        ShardedSSSPDelEngine)
+    from repro.graphs import generators as gen
+
+    n, m = (1 << 11, 1 << 13) if small else (1 << 13, 1 << 15)
+    nv, src, dst, w = gen.erdos_renyi(n, m, seed=17)
+    source = int(gen.top_in_degree_sources(nv, dst, 1)[0])
+    n_parts = len(jax.devices())
+
+    def _mk_engine(name):
+        if name == "single":
+            return SSSPDelEngine(EngineConfig(
+                num_vertices=nv, edge_capacity=m + 64, source=source))
+        return ShardedSSSPDelEngine(ShardedEngineConfig(
+            num_vertices=nv, edges_per_part=m + 64, source=source))
+
+    for delta in (0.1, 0.5):
+        log = C.stream_for(
+            C.Dataset("er", nv, src, dst, w,
+                      gen.top_in_degree_sources(nv, dst)),
+            window_frac=1 / 3, delta=delta, query_every=10**9)
+        eps: dict[str, float] = {}
+        engines: dict[str, object] = {}
+        for name in ("single", "sharded"):
+            for _timed in (False, True):  # first pass warms every jit shape
+                eng = _mk_engine(name)
+                t0 = time.perf_counter()
+                eng.ingest_log(log)
+                jax.block_until_ready(
+                    eng.state.sssp.dist if name == "single" else eng.dist)
+                ingest_s = time.perf_counter() - t0
+            eps[name] = len(log) / ingest_s
+            engines[name] = eng
+        q_lat: dict[str, list[float]] = {b: [] for b in engines}
+        res: dict[str, object] = {}
+        for _rep in range(55):
+            for b, eng in engines.items():
+                res[b] = eng.query()
+                q_lat[b].append(res[b].latency_s)
+        # the equivalence contract, checked on the benchmark stream too
+        np.testing.assert_array_equal(res["single"].dist, res["sharded"].dist)
+        np.testing.assert_array_equal(res["single"].parent,
+                                      res["sharded"].parent)
+        _check_oracle(engines["single"], sink, "dist_engine_oracle")
+        for name, eng in engines.items():
+            sink.emit("dist_engine", dataset="er", n=nv, edges=m,
+                      parts=(1 if name == "single" else n_parts),
+                      delta=delta, engine=name, events=len(log),
+                      events_per_s=round(eps[name], 1),
+                      query_p50_ms=round(
+                          C.pctile(q_lat[name][5:], 50) * 1e3, 4),
+                      rounds=eng.n_rounds)
+        sink.emit("dist_engine_summary", delta=delta, parts=n_parts,
+                  sharded_vs_single=round(eps["sharded"] / eps["single"], 3),
+                  identical=True)
+
+
 ALL = [table2_static_baseline, fig1_query_latency, fig2_latency_over_time,
        fig3_source_selection, fig4_stability, fig5_throughput,
-       fig6_batch_bsp, backend_shootout]
+       fig6_batch_bsp, backend_shootout, dist_engine]

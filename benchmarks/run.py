@@ -21,8 +21,9 @@ from benchmarks import common as C
 
 def run_sssp(sink: C.CsvSink, small: bool, only: str | None) -> None:
     from benchmarks import bench_sssp
+    wanted = only.split(",") if only else None
     for fn in bench_sssp.ALL:
-        if only and only not in fn.__name__:
+        if wanted and not any(tok and tok in fn.__name__ for tok in wanted):
             continue
         t0 = time.perf_counter()
         fn(sink, small)
@@ -130,7 +131,8 @@ def write_bench_json(sink: C.CsvSink, args, wall_s: float,
 def main() -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--small", action="store_true")
-    p.add_argument("--only")
+    p.add_argument("--only", help="comma-separated name substrings, e.g. "
+                                  "'backend_shootout,dist_engine'")
     p.add_argument("--skip-kernels", action="store_true")
     p.add_argument("--json", default="BENCH_sssp.json",
                    help="machine-readable output path ('' disables)")

@@ -1,0 +1,325 @@
+"""ShardedSSSPDelEngine — the fully dynamic engine over the vertex-partitioned
+device mesh (DESIGN.md §5).
+
+This is the convergence of the repo's two halves: ``core/engine.py`` ingests
+ADD/DEL/QUERY streams on one device; ``core/distributed.py`` solves static
+graphs over a shard_map mesh.  Here the *same* ``EventLog`` stream drives
+per-partition edge pools living across the mesh:
+
+  * **Ownership**: vertices are range-partitioned over the flattened mesh
+    axes (``npp`` per shard); an edge lives with the owner of its **dst** so
+    the per-round scatter-min is shard-local (paper §3's shared-nothing
+    mapping, same as ``DistributedSSSP``).
+  * **Control plane**: one host-side ``SlotAllocator`` per partition (the
+    ingest.py mirror/planning machinery, keyed by dst-owner) plans where each
+    topology event lands in its owner's fixed ``Epp``-slot pool.  Global slot
+    ``p*Epp + local`` addresses the sharded device arrays directly.
+  * **Data plane**: one jitted shard_map epoch per batch patches the pools in
+    place (masked writes routed through a sacrificial slot so foreign batch
+    entries never collide with real ones) and immediately runs the
+    relaxation / deletion epoch seeded from the batch — frontier = tails of
+    inserted edges; seeds = heads of deleted tree edges — reusing
+    ``DistributedSSSP``'s allgather/delta exchange rounds.
+  * **Host-sync rules** (DESIGN.md §2.4): the ingest loop never blocks on a
+    device value.  Round/message counters thread through the epochs as
+    replicated device scalars and are read back only in ``query()``;
+    deletion epochs dispatch unconditionally (all-false seed = cheap no-op).
+
+Equivalence contract: with ``exchange="allgather"`` the engine is
+**bit-identical** in ``(dist, parent)`` — and equal in rounds/messages — to
+``SSSPDelEngine`` on any event stream, for any partition count (frontier
+evolution, candidate sets and smallest-src-id tie-breaks are the same wave
+for wave; float min is exact).  The ``"delta"`` exchange reaches the same
+``(dist, parent)`` fixpoint with compressed traffic (overflow rounds fall
+back to dense gathers — still exact, see tests/test_sssp_distributed.py).
+
+Optional **edge-balanced placement**: pass the ``(perm, inv, npp)`` triple
+from ``graphs.partition.edge_balanced_relabeling`` (built for this mesh's
+partition count) as ``relabel`` — events are permuted on ingest and results
+un-permuted at query, so shards own ~equal in-edge mass instead of ~equal
+vertex counts.  Distances are unchanged (same paths, same float sums);
+parent ties may resolve differently (smallest *relabeled* id).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import events as ev
+from repro.core import ingest
+from repro.core.distributed import (DistConfig, DistributedSSSP,
+                                    _SHARD_MAP_KW, _shard_map,
+                                    inactive_dst_layout)
+from repro.core.state import INF, NO_PARENT
+from repro.core.stream import QueryResult, StreamEngineBase
+from repro.launch import mesh as mesh_mod
+
+
+EXCHANGES = ("allgather", "delta")
+
+# Jitted epoch builders keyed by everything their traces depend on, shared
+# across engine instances: the closures are per-instance, so without this a
+# fresh engine (benchmark warm/timed pairs, test sweeps) would re-trace and
+# re-lower every batch shape it has already seen.
+_EPOCH_CACHE: dict[tuple, tuple] = {}
+
+
+@dataclasses.dataclass
+class ShardedEngineConfig:
+    num_vertices: int        # logical |V| (pre-padding, pre-relabel)
+    edges_per_part: int      # static per-partition edge-pool capacity (Epp)
+    source: int
+    exchange: str = "allgather"   # or "delta" (DESIGN.md §5.3)
+    delta_cap: int = 4096    # per-part (idx,val) slots for "delta" exchange
+    use_doubling: bool = True     # False = paper's wave-by-wave flood
+    batch_deletions: bool = False
+    on_duplicate: str = "ignore"  # or "min" (weight decreases)
+
+
+class ShardedSSSPDelEngine(StreamEngineBase):
+    """Host orchestrator over shard_map ingest+epoch device code.
+
+    ``mesh=None`` flattens every local device onto one "graph" axis; any
+    explicit mesh works — all its axes are flattened into the vertex
+    partition (launch/mesh.graph_axes), exactly like ``DistributedSSSP``.
+    """
+
+    def __init__(self, cfg: ShardedEngineConfig, mesh: Mesh | None = None,
+                 relabel: tuple[np.ndarray, np.ndarray, int] | None = None):
+        assert cfg.exchange in EXCHANGES, cfg.exchange
+        super().__init__()
+        self.cfg = cfg
+        if mesh is None:
+            mesh = mesh_mod._mk((len(jax.devices()),), ("graph",))
+        axes = tuple(mesh.axis_names)
+        P_ = 1
+        for a in axes:
+            P_ *= mesh.shape[a]
+        if relabel is not None:
+            perm, inv, npp_r = relabel
+            self.perm = np.asarray(perm, np.int32)
+            self.inv = np.asarray(inv, np.int32)
+            assert len(self.perm) == cfg.num_vertices, "perm must cover |V|"
+            assert npp_r * P_ == len(self.inv), (
+                f"relabeling was built for {len(self.inv) // max(npp_r, 1)} "
+                f"partitions (npp={npp_r}); this mesh flattens to P={P_} — "
+                "rebuild with edge_balanced_relabeling(n, dst, P)")
+            n_pad = len(self.inv)
+        else:
+            self.perm = self.inv = None
+            n_pad = P_ * (-(-cfg.num_vertices // P_))
+        self.ds = DistributedSSSP(mesh, DistConfig(
+            num_vertices=n_pad, edges_per_part=cfg.edges_per_part,
+            mesh_axes=axes, exchange=cfg.exchange, delta_cap=cfg.delta_cap))
+        self.P, self.npp, self.epp = self.ds.P, self.ds.npp, cfg.edges_per_part
+        self._source_pad = int(cfg.source if self.perm is None
+                               else self.perm[cfg.source])
+        # control plane: one planner per partition, local Epp-slot pools
+        self.allocs = [ingest.SlotAllocator(cfg.edges_per_part,
+                                            cfg.on_duplicate)
+                       for _ in range(self.P)]
+        # data plane: sharded vertex + edge-pool arrays
+        self.dist, self.parent = self.ds.init_vertex_arrays(self._source_pad)
+        self.esrc, self.edst, self.ew, self.eact = self.ds.put_edges(
+            np.zeros(self.P * self.epp, np.int32),
+            inactive_dst_layout(self.P, self.npp, self.epp),
+            np.zeros(self.P * self.epp, np.float32),
+            np.zeros(self.P * self.epp, np.bool_))
+        key = (mesh, n_pad, cfg.edges_per_part, cfg.exchange, cfg.delta_cap,
+               cfg.use_doubling, self._source_pad)
+        if key not in _EPOCH_CACHE:
+            _EPOCH_CACHE[key] = _build_epochs(
+                self.ds, self.epp, cfg.use_doubling, self._source_pad)
+        self._add_epoch, self._del_epoch = _EPOCH_CACHE[key]
+
+    # ------------------------------------------------------------------ adds
+    def _ingest_adds(self, batch: ev.EventBatch) -> None:
+        src, dst, w = batch.src, batch.dst, batch.w
+        if self.perm is not None:
+            src, dst = self.perm[src], self.perm[dst]
+        owner = np.asarray(dst, np.int64) // self.npp
+        parts = []
+        for p in np.unique(owner):
+            sel = owner == p
+            plan = self.allocs[p].plan_adds(src[sel], dst[sel], w[sel])
+            if len(plan.slots):
+                parts.append((int(p) * self.epp + plan.slots.astype(np.int64),
+                              plan.src, plan.dst, plan.w))
+        if not parts:
+            return
+        gslot, bsrc, bdst, bw = (np.concatenate(x) for x in zip(*parts))
+        n_acc = len(gslot)
+        gslot, bsrc, bdst, bw = ingest.pad_pow2(
+            gslot.astype(np.int32), bsrc, bdst, bw)
+        (self.dist, self.parent, self.esrc, self.edst, self.ew, self.eact,
+         self._dev_rounds, self._dev_messages) = self._add_epoch(
+            self.dist, self.parent, self.esrc, self.edst, self.ew, self.eact,
+            jnp.asarray(gslot), jnp.asarray(bsrc), jnp.asarray(bdst),
+            jnp.asarray(bw), self._dev_rounds, self._dev_messages)
+        self.n_adds += n_acc
+        self.n_epochs += 1
+
+    # ------------------------------------------------------------------ dels
+    def _ingest_dels(self, batch: ev.EventBatch) -> None:
+        if self.cfg.batch_deletions:
+            groups = [(batch.src, batch.dst)]
+        else:
+            groups = [(batch.src[i:i + 1], batch.dst[i:i + 1])
+                      for i in range(len(batch.src))]
+        for gsrc, gdst in groups:
+            if self.perm is not None:
+                gsrc, gdst = self.perm[gsrc], self.perm[gdst]
+            owner = np.asarray(gdst, np.int64) // self.npp
+            parts = []
+            for p in np.unique(owner):
+                sel = owner == p
+                slots, psrc, pdst = self.allocs[p].plan_dels(
+                    gsrc[sel], gdst[sel])
+                if len(slots):
+                    parts.append((int(p) * self.epp + slots.astype(np.int64),
+                                  psrc, pdst))
+            if not parts:
+                continue
+            gslot, psrc, pdst = (np.concatenate(x) for x in zip(*parts))
+            n_del = len(gslot)
+            gslot, psrc, pdst = ingest.pad_pow2(
+                gslot.astype(np.int32), psrc, pdst)
+            (self.dist, self.parent, self.eact,
+             self._dev_rounds, self._dev_messages) = self._del_epoch(
+                self.dist, self.parent, self.esrc, self.edst, self.ew,
+                self.eact, jnp.asarray(gslot), jnp.asarray(psrc),
+                jnp.asarray(pdst), self._dev_rounds, self._dev_messages)
+            self.n_dels += n_del
+            self.n_epochs += 1
+
+    # ----------------------------------------------------------------- query
+    def query(self) -> QueryResult:
+        """State collection: epoch already enforced (every batch ran to
+        convergence) — cost is the sharded device->host readback plus the
+        inverse relabeling, if any."""
+        t0 = time.perf_counter()
+        dist = np.asarray(jax.device_get(self.dist))
+        parent = np.asarray(jax.device_get(self.parent))
+        n = self.cfg.num_vertices
+        if self.perm is not None:
+            dist = dist[self.perm]
+            p = parent[self.perm]
+            parent = np.where(p >= 0, self.inv[np.clip(p, 0, None)],
+                              NO_PARENT).astype(np.int32)
+        else:
+            dist, parent = dist[:n], parent[:n]
+        dt = time.perf_counter() - t0
+        return QueryResult(dist=dist, parent=parent, latency_s=dt,
+                           epoch_stats=self._stream_stats())
+
+    # ------------------------------------------------------------ diagnostics
+    def partition_fill(self) -> np.ndarray:
+        """Live edges per partition, from the host mirrors (no device sync)."""
+        return np.array([int(a.mactive.sum()) for a in self.allocs])
+
+
+def _build_epochs(ds: DistributedSSSP, epp: int, use_doubling: bool,
+                  source_pad: int):
+    """Build the (add_epoch, del_epoch) jitted shard_map pair.
+
+    Module-level on purpose: the closures capture only ``ds`` (mesh + config
+    + specs, no device buffers) and scalars, so ``_EPOCH_CACHE`` entries
+    never pin an engine's device state or host mirrors.
+    """
+    npp = ds.npp
+    ax = ds.cfg.mesh_axes
+    exchange = ds.cfg.exchange
+    v, e, r = ds.vspec, ds.espec, ds.rspec
+
+    def masked_write(arr, loc, val):
+        """Scatter batch values into this shard's pool slice.  Foreign batch
+        entries are routed to a sacrificial extra slot (index epp) instead of
+        a masked in-range index — a masked write at a real index would race
+        with a genuine write to the same slot."""
+        pad = jnp.zeros((1,), arr.dtype)
+        return jnp.concatenate([arr, pad]).at[loc].set(
+            val.astype(arr.dtype))[:epp]
+
+    def local_slots(gslot, my_p):
+        mine = (gslot // epp) == my_p
+        return jnp.where(mine, gslot - my_p * epp, epp)
+
+    @jax.jit
+    @partial(_shard_map, mesh=ds.mesh,
+             in_specs=(v, v, e, e, e, e, r, r, r, r, r, r),
+             out_specs=(v, v, e, e, e, e, r, r),
+             **_SHARD_MAP_KW)
+    def add_epoch(dist, parent, esrc, edst, ew, eact,
+                  gslot, bsrc, bdst, bw, racc, macc):
+        """patch pools + relax from the inserted tails, one fused epoch."""
+        my_p = jnp.int32(ds._flat_index())
+        row0 = my_p * npp
+        loc = local_slots(gslot, my_p)
+        esrc = masked_write(esrc, loc, bsrc)
+        edst = masked_write(edst, loc, bdst)
+        ew = masked_write(ew, loc, bw)
+        eact = masked_write(eact, loc, jnp.ones_like(gslot, jnp.bool_))
+        # Frontier = tails of the inserted edges (paper Listing 3); each
+        # shard keeps its own window of the global bool frontier.
+        in_r = (bsrc >= row0) & (bsrc < row0 + npp)
+        fr = jnp.zeros((npp,), jnp.bool_).at[
+            jnp.clip(bsrc - row0, 0, npp - 1)].max(in_r)
+        dist, parent, rounds, msgs = ds._relax_body(
+            dist, parent, fr, esrc, edst, ew, eact)
+        return (dist, parent, esrc, edst, ew, eact,
+                racc + rounds, macc + msgs)
+
+    @jax.jit
+    @partial(_shard_map, mesh=ds.mesh,
+             in_specs=(v, v, e, e, e, e, r, r, r, r, r),
+             out_specs=(v, v, e, r, r),
+             **_SHARD_MAP_KW)
+    def del_epoch(dist, parent, esrc, edst, ew, eact,
+                  gslot, psrc, pdst, racc, macc):
+        """seed from pre-deletion tree + deactivate + invalidate + recompute,
+        one fused epoch.  Stats mirror core/delete.DeleteStats exactly."""
+        my_p = jnp.int32(ds._flat_index())
+        row0 = my_p * npp
+        # Listing 4: only deletions of tree edges (parent[head]==tail)
+        # seed invalidation — judged against the PRE-deletion tree.
+        in_r = (pdst >= row0) & (pdst < row0 + npp)
+        lds = jnp.clip(pdst - row0, 0, npp - 1)
+        seed = jnp.zeros((npp,), jnp.bool_).at[lds].max(
+            in_r & (parent[lds] == psrc))
+        any_seed = jax.lax.psum(jnp.sum(seed.astype(jnp.int32)), ax) > 0
+        # deactivate the deleted slots (dst stays in-range)
+        loc = local_slots(gslot, my_p)
+        eact = masked_write(eact, loc, jnp.zeros_like(gslot, jnp.bool_))
+        # --- invalidation over the parent forest
+        if use_doubling:
+            aff, inv_rounds = ds._invalidate_doubling(parent, seed)
+        elif exchange == "delta":
+            aff, inv_rounds = ds._invalidate_delta(parent, seed, row0)
+        else:
+            aff, inv_rounds = ds._invalidate_flood_dense(parent, seed)
+        # never invalidate the source (parity with single-device engine)
+        local_ids = row0 + jnp.arange(npp, dtype=jnp.int32)
+        aff = aff & (local_ids != source_pad)
+        affected = jax.lax.psum(jnp.sum(aff.astype(jnp.int32)), ax)
+        dist = jnp.where(aff, INF, dist)
+        parent = jnp.where(aff, NO_PARENT, parent)
+        # --- recomputation (shared with the static delete epoch; the
+        # distributed rendering of delete.invalidate_and_recompute)
+        if exchange == "delta":
+            dist, parent, rec_rounds, rec_msgs = ds._recompute_delta(
+                dist, parent, aff, esrc, edst, ew, eact, row0)
+        else:
+            dist, parent, rec_rounds, rec_msgs = ds._recompute_pull_push(
+                dist, parent, aff, esrc, edst, ew, eact, row0)
+        zero = jnp.int32(0)
+        d_rounds = jnp.where(any_seed, inv_rounds + rec_rounds, zero)
+        d_msgs = jnp.where(any_seed, rec_msgs, zero) + affected
+        return dist, parent, eact, racc + d_rounds, macc + d_msgs
+
+    return add_epoch, del_epoch

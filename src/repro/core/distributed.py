@@ -46,6 +46,15 @@ from repro.graphs import partition as part_mod
 BIG = jnp.int32(2**31 - 1)
 
 
+def inactive_dst_layout(P: int, npp: int, epp: int) -> np.ndarray:
+    """dst ids for an all-inactive (or padding) pool slot range: every slot
+    points at its owner partition's first row, keeping the shard-local
+    segment ids ``dst - row0`` inside [0, npp).  The single source of truth
+    for the padding-row invariant (place_edges, the sharded engine's empty
+    pools)."""
+    return np.repeat(np.arange(P, dtype=np.int64) * npp, epp).astype(np.int32)
+
+
 @dataclasses.dataclass(frozen=True)
 class DistConfig:
     num_vertices: int        # padded: divisible by P
@@ -91,30 +100,29 @@ class DistributedSSSP:
         """Host-side: bucket edges by dst partition, pad each bucket to Epp.
 
         Returns (src, dst, w, active) of shape (P*Epp,) in partition-major
-        order — the layout the edge sharding expects.
+        order — the layout the edge sharding expects.  Fully numpy-vectorized
+        (DESIGN.md §2.5): a stable owner sort plus a per-owner rank gives each
+        edge its flat output position — no per-partition Python copy loop.
         """
-        cfg, P_, npp, epp = self.cfg, self.P, self.npp, self.cfg.edges_per_part
-        owner = np.minimum(dst // npp, P_ - 1)
-        order = np.argsort(owner, kind="stable")
-        src_s, dst_s, w_s, owner_s = src[order], dst[order], w[order], owner[order]
-        out_src = np.zeros(P_ * epp, np.int32)
-        out_dst = np.zeros(P_ * epp, np.int32)
-        out_w = np.zeros(P_ * epp, np.float32)
-        out_act = np.zeros(P_ * epp, np.bool_)
-        counts = np.bincount(owner_s, minlength=P_)
-        if counts.max() > epp:
+        P_, npp, epp = self.P, self.npp, self.cfg.edges_per_part
+        owner = np.minimum(np.asarray(dst, np.int64) // npp, P_ - 1)
+        counts = np.bincount(owner, minlength=P_)
+        if len(owner) and counts.max() > epp:
             raise ValueError(f"partition overflow: max {counts.max()} > Epp {epp}"
                              " — raise edges_per_part or rebalance")
-        starts = np.concatenate([[0], np.cumsum(counts)])
-        for p in range(P_):
-            a, b = starts[p], starts[p + 1]
-            o = p * epp
-            out_src[o:o + b - a] = src_s[a:b]
-            out_dst[o:o + b - a] = dst_s[a:b]
-            out_w[o:o + b - a] = w_s[a:b]
-            out_act[o:o + b - a] = True
-            # padding rows: dst points at the partition's first row, inactive
-            out_dst[o + b - a:o + epp] = p * npp
+        order = np.argsort(owner, kind="stable")
+        owner_s = owner[order]
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        rank = np.arange(len(order)) - starts[owner_s]
+        pos = owner_s * epp + rank
+        out_src = np.zeros(P_ * epp, np.int32)
+        out_dst = inactive_dst_layout(P_, npp, epp)
+        out_w = np.zeros(P_ * epp, np.float32)
+        out_act = np.zeros(P_ * epp, np.bool_)
+        out_src[pos] = src[order]
+        out_dst[pos] = dst[order]
+        out_w[pos] = w[order]
+        out_act[pos] = True
         return out_src, out_dst, out_w, out_act
 
     # --------------------------------------------------------------- epochs
@@ -189,30 +197,34 @@ class DistributedSSSP:
         return dist_sh, parent_sh, improved
 
     def _relax_body(self, dist_sh, parent_sh, frontier_sh, esrc, edst, ew, eact):
+        """Relaxation rounds to fixpoint.  Returns (dist, parent, rounds,
+        messages); ``messages`` counts DistanceUpdate deliveries (improvements
+        summed over partitions) — same semantics as core/relax.RelaxStats."""
         ax = self.cfg.mesh_axes
         row0 = (jnp.int32(self._flat_index()) * self.npp)
         rnd = (self._round_delta if self.cfg.exchange == "delta"
                else self._round_allgather)
 
         def cond(carry):
-            _, _, _, go, rounds = carry
+            _, _, _, go, rounds, _ = carry
             keep = go
             if self.cfg.max_rounds:
                 keep = keep & (rounds < self.cfg.max_rounds)
             return keep
 
         def body(carry):
-            dist, parent, frontier, _, rounds = carry
+            dist, parent, frontier, _, rounds, msgs = carry
             dist, parent, improved = rnd(dist, parent, frontier,
                                          esrc, edst, ew, eact, row0)
             n_imp = jax.lax.psum(jnp.sum(improved.astype(jnp.int32)), ax)
-            return dist, parent, improved, n_imp > 0, rounds + 1
+            return dist, parent, improved, n_imp > 0, rounds + 1, msgs + n_imp
 
         init_go = jax.lax.psum(
             jnp.sum(frontier_sh.astype(jnp.int32)), ax) > 0
-        dist_sh, parent_sh, _, _, rounds = jax.lax.while_loop(
-            cond, body, (dist_sh, parent_sh, frontier_sh, init_go, jnp.int32(0)))
-        return dist_sh, parent_sh, rounds
+        dist_sh, parent_sh, _, _, rounds, msgs = jax.lax.while_loop(
+            cond, body, (dist_sh, parent_sh, frontier_sh, init_go,
+                         jnp.int32(0), jnp.int32(0)))
+        return dist_sh, parent_sh, rounds, msgs
 
     def _flat_index(self):
         """Flattened partition index from the (possibly multiple) mesh axes."""
@@ -233,7 +245,8 @@ class DistributedSSSP:
                  out_specs=(self.vspec, self.vspec, self.rspec),
                  **_SHARD_MAP_KW)
         def epoch(dist, parent, frontier, esrc, edst, ew, eact):
-            d, p, r = self._relax_body(dist, parent, frontier, esrc, edst, ew, eact)
+            d, p, r, _ = self._relax_body(dist, parent, frontier,
+                                          esrc, edst, ew, eact)
             return d, p, r
 
         return epoch
@@ -266,60 +279,76 @@ class DistributedSSSP:
             parent = jnp.where(aff, NO_PARENT, parent)
 
             if self.cfg.exchange == "delta":
-                # --- bulk DistanceQuery, message form (paper Listing 9):
-                # each partition broadcasts the ids of the srcs its affected
-                # vertices need offers from (packed, delta_cap); owners of
-                # queried valid vertices become the PUSH frontier and normal
-                # delta relaxation delivers the offers.  Same fixpoint as the
-                # dense pull (Appendix A); O(P*cap) bytes instead of O(N).
-                dl = edst - row0
-                req = eact & aff[dl]
-                cap = self.cfg.delta_cap
-                order = jnp.argsort(~req)
-                take = order[:cap]
-                sel = req[take]
-                pack = jnp.where(sel, esrc[take], -1)
-                overflow = jax.lax.psum(
-                    (jnp.sum(req.astype(jnp.int32)) > cap).astype(jnp.int32),
-                    ax) > 0
-                all_q = jax.lax.all_gather(pack, ax, tiled=True)
-
-                def sparse_front():
-                    base = jnp.zeros((self.cfg.num_vertices,), jnp.bool_)
-                    safe = jnp.clip(all_q, 0, self.cfg.num_vertices - 1)
-                    base = base.at[safe].max(all_q >= 0)
-                    local_ids = row0 + jnp.arange(self.npp, dtype=jnp.int32)
-                    return base[local_ids]
-
-                def dense_front():
-                    # overflow fallback: every valid vertex pushes once
-                    return jnp.ones((self.npp,), jnp.bool_)
-
-                queried = jax.lax.cond(overflow, dense_front, sparse_front)
-                frontier0 = queried & jnp.isfinite(dist)
-                dist, parent, rounds = self._relax_body(
-                    dist, parent, frontier0, esrc, edst, ew, eact)
-                return dist, parent, rounds + inv_rounds
-            # --- dense pull wave (bulk DistanceQuery): affected dsts pull
-            # from any valid src (dist gathered once; inf srcs offer nothing)
-            dist_full = jax.lax.all_gather(dist, ax, tiled=True)
-            dl = edst - row0
-            live = eact & aff[dl]
-            cand = jnp.where(live, dist_full[esrc] + ew, INF)
-            best = jax.ops.segment_min(cand, dl, num_segments=self.npp)
-            improved = best < dist
-            hit = live & (cand == best[dl]) & improved[dl]
-            cand_src = jnp.where(hit, esrc, BIG)
-            new_par = jax.ops.segment_min(cand_src, dl, num_segments=self.npp)
-            dist = jnp.where(improved, best, dist)
-            parent = jnp.where(improved, new_par, parent)
-
-            # --- push to fixpoint
-            dist, parent, rounds = self._relax_body(
-                dist, parent, improved, esrc, edst, ew, eact)
-            return dist, parent, rounds + inv_rounds + 1
+                dist, parent, rounds, _ = self._recompute_delta(
+                    dist, parent, aff, esrc, edst, ew, eact, row0)
+            else:
+                dist, parent, rounds, _ = self._recompute_pull_push(
+                    dist, parent, aff, esrc, edst, ew, eact, row0)
+            return dist, parent, rounds + inv_rounds
 
         return delete_epoch
+
+    # -------------------------------------------------- recomputation impls
+    # Shared by the static delete epoch above and the sharded dynamic
+    # engine's deletion epochs (core/dist_engine.py) — one implementation so
+    # the bit-identical equivalence contract has a single source of truth.
+    # Both return (dist, parent, rounds, messages) with the same semantics
+    # as core/delete.DeleteStats' recompute_{rounds,messages}.
+
+    def _recompute_pull_push(self, dist, parent, aff, esrc, edst, ew, eact,
+                             row0):
+        """Dense pull wave (bulk DistanceQuery: affected dsts pull from
+        valid finite-dist srcs; counted as one round) + push to fixpoint."""
+        ax = self.cfg.mesh_axes
+        dist_full = jax.lax.all_gather(dist, ax, tiled=True)
+        dl = edst - row0
+        live = eact & aff[dl] & jnp.isfinite(dist_full[esrc])
+        cand = jnp.where(live, dist_full[esrc] + ew, INF)
+        best = jax.ops.segment_min(cand, dl, num_segments=self.npp)
+        improved = best < dist
+        hit = live & (cand == best[dl]) & improved[dl]
+        cand_src = jnp.where(hit, esrc, BIG)
+        new_par = jax.ops.segment_min(cand_src, dl, num_segments=self.npp)
+        dist = jnp.where(improved, best, dist)
+        parent = jnp.where(improved, new_par, parent)
+        n_pull = jax.lax.psum(jnp.sum(improved.astype(jnp.int32)), ax)
+        dist, parent, rounds, msgs = self._relax_body(
+            dist, parent, improved, esrc, edst, ew, eact)
+        return dist, parent, rounds + 1, msgs + n_pull
+
+    def _recompute_delta(self, dist, parent, aff, esrc, edst, ew, eact, row0):
+        """Bulk DistanceQuery, message form (paper Listing 9): each partition
+        broadcasts the ids of the srcs its affected vertices need offers from
+        (packed, delta_cap); owners of queried valid vertices become the PUSH
+        frontier and normal delta relaxation delivers the offers.  Same
+        fixpoint as the dense pull (Appendix A); O(P*cap) bytes instead of
+        O(N).  Overflow falls back to every valid vertex pushing once."""
+        ax = self.cfg.mesh_axes
+        dl = edst - row0
+        req = eact & aff[dl]
+        cap = self.cfg.delta_cap
+        order = jnp.argsort(~req)
+        take = order[:cap]
+        sel = req[take]
+        pack = jnp.where(sel, esrc[take], -1)
+        overflow = jax.lax.psum(
+            (jnp.sum(req.astype(jnp.int32)) > cap).astype(jnp.int32),
+            ax) > 0
+        all_q = jax.lax.all_gather(pack, ax, tiled=True)
+
+        def sparse_front():
+            base = jnp.zeros((self.cfg.num_vertices,), jnp.bool_)
+            safe = jnp.clip(all_q, 0, self.cfg.num_vertices - 1)
+            base = base.at[safe].max(all_q >= 0)
+            local_ids = row0 + jnp.arange(self.npp, dtype=jnp.int32)
+            return base[local_ids]
+
+        def dense_front():
+            return jnp.ones((self.npp,), jnp.bool_)
+
+        queried = jax.lax.cond(overflow, dense_front, sparse_front)
+        frontier0 = queried & jnp.isfinite(dist)
+        return self._relax_body(dist, parent, frontier0, esrc, edst, ew, eact)
 
     # --------------------------------------------------- invalidation impls
     def _invalidate_doubling(self, parent, seed):
@@ -346,6 +375,30 @@ class DistributedSSSP:
 
         aff, _, _, inv_rounds = jax.lax.while_loop(
             dcond, dbody, (seed, parent, jnp.bool_(True), jnp.int32(0)))
+        return aff, inv_rounds
+
+    def _invalidate_flood_dense(self, parent, seed):
+        """Paper-faithful level-by-level SetToInfinity flood with dense aff
+        gathers — one round per tree level.  The distributed rendering of
+        ``delete.mark_subtree_flood`` (identical wave/round structure, so the
+        sharded engine's stats match the single-device flood path exactly)."""
+        ax = self.cfg.mesh_axes
+
+        def dcond(carry):
+            _, grew, _ = carry
+            return grew
+
+        def dbody(carry):
+            aff, _, rounds = carry
+            aff_full = jax.lax.all_gather(aff, ax, tiled=True)
+            join = jnp.where(parent >= 0, aff_full[jnp.clip(parent, 0)], False)
+            new = aff | join
+            grew = jax.lax.psum(
+                jnp.sum((new != aff).astype(jnp.int32)), ax) > 0
+            return new, grew, rounds + 1
+
+        aff, _, inv_rounds = jax.lax.while_loop(
+            dcond, dbody, (seed, jnp.bool_(True), jnp.int32(0)))
         return aff, inv_rounds
 
     def _invalidate_delta(self, parent, seed, row0):

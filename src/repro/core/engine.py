@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +38,9 @@ from repro.core import ellpack as ell_mod
 from repro.core import events as ev
 from repro.core import ingest, relax
 from repro.core.state import EdgePool, GraphState, SSSPState
+from repro.core.stream import QueryResult, StreamEngineBase
+
+__all__ = ["EngineConfig", "QueryResult", "SSSPDelEngine", "RELAX_BACKENDS"]
 
 RELAX_BACKENDS = ("segment", "ellpack")
 
@@ -58,30 +60,19 @@ class EngineConfig:
     ell_use_kernel: bool | None = None  # None = Pallas kernel iff on TPU
 
 
-@dataclasses.dataclass
-class QueryResult:
-    dist: np.ndarray
-    parent: np.ndarray
-    latency_s: float
-    epoch_stats: dict[str, Any]
+class SSSPDelEngine(StreamEngineBase):
+    """Host orchestrator; all heavy lifting is jitted device code.
 
-
-class SSSPDelEngine:
-    """Host orchestrator; all heavy lifting is jitted device code."""
+    Stream dispatch, lazy device-scalar stats, and the stability metric are
+    shared with the sharded engine via ``StreamEngineBase`` (core/stream.py).
+    """
 
     def __init__(self, cfg: EngineConfig):
         assert cfg.relax_backend in RELAX_BACKENDS, cfg.relax_backend
+        super().__init__()
         self.cfg = cfg
         self.alloc = ingest.SlotAllocator(cfg.edge_capacity, cfg.on_duplicate)
         self.state = GraphState.init(cfg.num_vertices, cfg.edge_capacity, cfg.source)
-        # batch counters (host-side; no device source)
-        self.n_epochs = 0
-        self.n_adds = 0
-        self.n_dels = 0
-        # round/message counters live ON DEVICE; read back lazily at query()
-        self._dev_rounds = jnp.int32(0)
-        self._dev_messages = jnp.int32(0)
-        self._last_parent: np.ndarray | None = None
         self._init_ell()
 
     def _init_ell(self) -> None:
@@ -97,15 +88,6 @@ class SSSPDelEngine:
         on_tpu = jax.default_backend() == "tpu"
         self._ell_kernel = on_tpu if cfg.ell_use_kernel is None else cfg.ell_use_kernel
         self._ell_interpret = not on_tpu
-
-    # --------------------------------------------------------- lazy counters
-    @property
-    def n_rounds(self) -> int:
-        return int(jax.device_get(self._dev_rounds))
-
-    @property
-    def n_messages(self) -> int:
-        return int(jax.device_get(self._dev_messages))
 
     # ------------------------------------------------------------------ adds
     def _ingest_adds(self, batch: ev.EventBatch) -> None:
@@ -168,12 +150,7 @@ class SSSPDelEngine:
 
     # ------------------------------------------------------------------ dels
     def _ingest_dels(self, batch: ev.EventBatch) -> None:
-        if self.cfg.batch_deletions:
-            groups = [(batch.src, batch.dst)]
-        else:
-            groups = [(batch.src[i:i + 1], batch.dst[i:i + 1])
-                      for i in range(len(batch.src))]
-        for gsrc, gdst in groups:
+        for gsrc, gdst in self._deletion_groups(batch):
             slots, psrc, pdst = self.alloc.plan_dels(gsrc, gdst)
             if len(slots) == 0:
                 continue
@@ -208,23 +185,6 @@ class SSSPDelEngine:
             self.n_dels += len(slots)
             self.n_epochs += 1
 
-    # ---------------------------------------------------------------- stream
-    def ingest_log(self, log: ev.EventLog,
-                   on_query: Callable[[QueryResult], None] | None = None) -> list[QueryResult]:
-        """Drive the engine over an event log; returns query results."""
-        results: list[QueryResult] = []
-        for batch in log.runs():
-            if batch.kind == ev.ADD:
-                self._ingest_adds(batch)
-            elif batch.kind == ev.DEL:
-                self._ingest_dels(batch)
-            else:
-                res = self.query()
-                results.append(res)
-                if on_query is not None:
-                    on_query(res)
-        return results
-
     # ----------------------------------------------------------------- query
     def query(self) -> QueryResult:
         """State collection (paper §3): epoch is already enforced (every batch
@@ -234,23 +194,8 @@ class SSSPDelEngine:
         dist = np.asarray(jax.device_get(self.state.sssp.dist))
         parent = np.asarray(jax.device_get(self.state.sssp.parent))
         dt = time.perf_counter() - t0
-        stats = {
-            "epochs": self.n_epochs, "rounds": self.n_rounds,
-            "messages": self.n_messages, "adds": self.n_adds, "dels": self.n_dels,
-        }
-        return QueryResult(dist=dist, parent=parent, latency_s=dt, epoch_stats=stats)
-
-    def stability_vs_prev(self, parent: np.ndarray) -> float:
-        """Paper §5.4: fraction of vertices whose predecessor is unchanged
-        (over vertices present in both results)."""
-        if self._last_parent is None:
-            self._last_parent = parent.copy()
-            return 1.0
-        prev = self._last_parent
-        both = (prev >= 0) & (parent >= 0)
-        frac = float(np.mean(prev[both] == parent[both])) if both.any() else 1.0
-        self._last_parent = parent.copy()
-        return frac
+        return QueryResult(dist=dist, parent=parent, latency_s=dt,
+                           epoch_stats=self._stream_stats())
 
     # ------------------------------------------------------------ checkpoint
     def checkpoint(self) -> dict[str, np.ndarray]:

@@ -1,0 +1,118 @@
+"""Shared event-stream plumbing for the dynamic engines.
+
+Both the single-device ``SSSPDelEngine`` (core/engine.py) and the sharded
+``ShardedSSSPDelEngine`` (core/dist_engine.py) are host orchestrators over
+jitted device epochs that consume the same ``EventLog`` stream.  Everything
+that is *stream* logic rather than *epoch* logic lives here:
+
+  * the driver loop (``ingest_log``) that coalesces the log into runs and
+    dispatches ADD/DEL batches and QUERY markers;
+  * the ``QueryResult`` record returned at every QUERY marker;
+  * lazy device-scalar stats counters (DESIGN.md §2.4: the ingest loop never
+    blocks on a device value — rounds/messages accumulate on device and are
+    only read back inside ``query()``);
+  * the paper's §5.4 predecessor-stability metric.
+
+Subclasses implement ``_ingest_adds`` / ``_ingest_dels`` / ``query`` and keep
+``_dev_rounds`` / ``_dev_messages`` as device scalars.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import events as ev
+
+
+@dataclasses.dataclass
+class QueryResult:
+    dist: np.ndarray
+    parent: np.ndarray
+    latency_s: float
+    epoch_stats: dict[str, Any]
+
+
+class StreamEngineBase:
+    """Host-side driver over jitted device epochs; subclasses own the state."""
+
+    def __init__(self) -> None:
+        # batch counters (host-side; no device source)
+        self.n_epochs = 0
+        self.n_adds = 0
+        self.n_dels = 0
+        # round/message counters live ON DEVICE; read back lazily at query()
+        self._dev_rounds = jnp.int32(0)
+        self._dev_messages = jnp.int32(0)
+        self._last_parent: np.ndarray | None = None
+
+    # --------------------------------------------------------- lazy counters
+    @property
+    def n_rounds(self) -> int:
+        return int(jax.device_get(self._dev_rounds))
+
+    @property
+    def n_messages(self) -> int:
+        return int(jax.device_get(self._dev_messages))
+
+    def _stream_stats(self) -> dict[str, Any]:
+        return {
+            "epochs": self.n_epochs, "rounds": self.n_rounds,
+            "messages": self.n_messages, "adds": self.n_adds,
+            "dels": self.n_dels,
+        }
+
+    # ------------------------------------------------------------- interface
+    def _deletion_groups(self, batch: ev.EventBatch
+                         ) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Paper-faithful: one stop-the-world epoch PER deletion;
+        ``batch_deletions=True`` coalesces the whole run into one epoch
+        (union of affected subtrees — DESIGN.md §3).  Both engines must
+        group identically or the equivalence contract breaks."""
+        if self.cfg.batch_deletions:
+            return [(batch.src, batch.dst)]
+        return [(batch.src[i:i + 1], batch.dst[i:i + 1])
+                for i in range(len(batch.src))]
+
+    def _ingest_adds(self, batch: ev.EventBatch) -> None:
+        raise NotImplementedError
+
+    def _ingest_dels(self, batch: ev.EventBatch) -> None:
+        raise NotImplementedError
+
+    def query(self) -> QueryResult:
+        raise NotImplementedError
+
+    # ---------------------------------------------------------------- stream
+    def ingest_log(self, log: ev.EventLog,
+                   on_query: Callable[[QueryResult], None] | None = None
+                   ) -> list[QueryResult]:
+        """Drive the engine over an event log; returns query results."""
+        results: list[QueryResult] = []
+        for batch in log.runs():
+            if batch.kind == ev.ADD:
+                self._ingest_adds(batch)
+            elif batch.kind == ev.DEL:
+                self._ingest_dels(batch)
+            else:
+                res = self.query()
+                results.append(res)
+                if on_query is not None:
+                    on_query(res)
+        return results
+
+    # ------------------------------------------------------------- stability
+    def stability_vs_prev(self, parent: np.ndarray) -> float:
+        """Paper §5.4: fraction of vertices whose predecessor is unchanged
+        (over vertices present in both results)."""
+        if self._last_parent is None:
+            self._last_parent = parent.copy()
+            return 1.0
+        prev = self._last_parent
+        both = (prev >= 0) & (parent >= 0)
+        frac = float(np.mean(prev[both] == parent[both])) if both.any() else 1.0
+        self._last_parent = parent.copy()
+        return frac

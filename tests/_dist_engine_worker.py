@@ -1,0 +1,71 @@
+"""Subprocess worker for the sharded-engine equivalence tests (P=8).
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 (set by the
+parent test process).  Replays the same mixed ADD/DEL/QUERY stream through
+the single-device ``SSSPDelEngine`` and the 8-partition
+``ShardedSSSPDelEngine`` on a (2,2,2) mesh — the production axis layout —
+and asserts bit-identical (dist, parent) at every query point, plus
+matching round/message stats for the allgather exchange.
+
+Usage: _dist_engine_worker.py <exchange> [batch_deletions] [use_doubling]
+Prints "OK <queries> <rounds>" on success.
+"""
+import os
+import sys
+
+# must precede any jax import in this process
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.dist_engine import (ShardedEngineConfig,  # noqa: E402
+                                    ShardedSSSPDelEngine)
+from repro.core.engine import EngineConfig, SSSPDelEngine  # noqa: E402
+from repro.graphs import generators, window  # noqa: E402
+from repro.launch.mesh import _mk  # noqa: E402
+
+
+def main(exchange: str, batch_deletions: bool, use_doubling: bool) -> None:
+    assert len(jax.devices()) == 8, f"expected 8 devices, got {len(jax.devices())}"
+    mesh = _mk((2, 2, 2), ("pod", "data", "model"))
+    n, src, dst, w = generators.erdos_renyi(120, 700, seed=23)
+    source = int(generators.top_in_degree_sources(n, dst, 1)[0])
+    log = window.sliding_window_stream(src, dst, w, window=len(src) // 3,
+                                       delta=0.6, seed=23,
+                                       query_every=len(src) // 4)
+
+    ref = SSSPDelEngine(EngineConfig(
+        n, len(src) + 64, source, batch_deletions=batch_deletions,
+        use_doubling=use_doubling))
+    # tiny delta_cap so the delta exchange exercises its overflow fallback
+    eng = ShardedSSSPDelEngine(
+        ShardedEngineConfig(n, len(src) + 64, source, exchange=exchange,
+                            delta_cap=16, batch_deletions=batch_deletions,
+                            use_doubling=use_doubling),
+        mesh=mesh)
+
+    res_ref = ref.ingest_log(log) + [ref.query()]
+    res_eng = eng.ingest_log(log) + [eng.query()]
+    assert len(res_ref) == len(res_eng) and len(res_ref) > 2
+    for i, (a, b) in enumerate(zip(res_ref, res_eng)):
+        np.testing.assert_array_equal(a.dist, b.dist,
+                                      err_msg=f"dist mismatch at query {i}")
+        np.testing.assert_array_equal(a.parent, b.parent,
+                                      err_msg=f"parent mismatch at query {i}")
+    if exchange == "allgather":
+        assert ref.n_rounds == eng.n_rounds, (ref.n_rounds, eng.n_rounds)
+        assert ref.n_messages == eng.n_messages, (
+            ref.n_messages, eng.n_messages)
+    assert eng.partition_fill().sum() == int(np.asarray(
+        ref.state.edges.active).sum()), "pool mirror divergence"
+    print(f"OK {len(res_eng)} {eng.n_rounds}")
+
+
+if __name__ == "__main__":
+    exchange = sys.argv[1] if len(sys.argv) > 1 else "allgather"
+    bd = bool(int(sys.argv[2])) if len(sys.argv) > 2 else False
+    ud = bool(int(sys.argv[3])) if len(sys.argv) > 3 else True
+    main(exchange, bd, ud)

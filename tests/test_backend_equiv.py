@@ -5,11 +5,17 @@ both must satisfy the Dijkstra oracle at every query point (DESIGN.md §2.2).
 The sweep crosses backend-relevant switches (doubling vs flood invalidation,
 batched vs per-event deletions) and runs with a deliberately tiny initial ELL
 width so the capacity-doubling rebuild path is exercised repeatedly.
+
+The same contract extends across the *partition-count* axis: the sharded
+engine (core/dist_engine.py, DESIGN.md §5) must be bit-identical to both
+single-device backends on the same streams — P=1 here, P=8 forced host
+devices in tests/test_dist_engine.py.
 """
 import numpy as np
 import pytest
 
 from repro.core import events as ev
+from repro.core.dist_engine import ShardedEngineConfig, ShardedSSSPDelEngine
 from repro.core.engine import EngineConfig, SSSPDelEngine
 from repro.core.oracle import check_tree, edges_of_pool
 from repro.graphs import generators, window
@@ -65,6 +71,27 @@ def test_backends_bit_identical_on_dynamic_stream(use_doubling, batch_deletions)
     assert seg.n_rounds == ell.n_rounds
     assert seg.n_messages == ell.n_messages
     assert ell.ellp.rebuilds >= 1, "rebuild path not exercised"
+
+
+def test_sharded_engine_joins_the_equivalence_contract():
+    """Partition axis: segment == ellpack == sharded (P=1) — same dist,
+    parent, and wave stats on the same dynamic stream (DESIGN.md §5.4)."""
+    n, m, log = _dynamic_stream(seed=11)
+    source = 3
+    seg = _run("segment", n, m, log, source,
+               use_doubling=True, batch_deletions=False)
+    ell = _run("ellpack", n, m, log, source,
+               use_doubling=True, batch_deletions=False, ell_init_k=2)
+    shd = ShardedSSSPDelEngine(ShardedEngineConfig(n, m + 64, source))
+    shd.ingest_log(log)
+    q_seg, q_shd = seg.query(), shd.query()
+    q_ell = ell.query()
+    np.testing.assert_array_equal(q_seg.dist, q_shd.dist)
+    np.testing.assert_array_equal(q_seg.parent, q_shd.parent)
+    np.testing.assert_array_equal(q_ell.dist, q_shd.dist)
+    np.testing.assert_array_equal(q_ell.parent, q_shd.parent)
+    assert seg.n_rounds == shd.n_rounds == ell.n_rounds
+    assert seg.n_messages == shd.n_messages == ell.n_messages
 
 
 def test_backends_identical_parents_under_pervasive_ties():

@@ -1,0 +1,179 @@
+"""Sharded dynamic engine: equivalence with the single-device engine across
+the partition-count axis (DESIGN.md §5).
+
+P=1 runs inline on the default device (the trivial mesh still goes through
+every shard_map code path).  P=8 runs in a subprocess with forced host
+devices — and also inline when the test process itself was started with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI step does).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import events as ev
+from repro.core.dist_engine import ShardedEngineConfig, ShardedSSSPDelEngine
+from repro.core.engine import EngineConfig, SSSPDelEngine
+from repro.core.oracle import check_tree, edges_of_pool
+from repro.graphs import generators, window
+from repro.graphs import partition as part_mod
+from repro.launch.mesh import _mk
+
+HERE = os.path.dirname(__file__)
+
+
+def _dynamic_stream(seed, *, n=90, m=520, delta=0.6):
+    n, src, dst, w = generators.erdos_renyi(n, m, seed=seed)
+    log = window.sliding_window_stream(src, dst, w, window=m // 3,
+                                       delta=delta, seed=seed,
+                                       query_every=m // 2)
+    return n, len(src), log, dst
+
+
+def _assert_results_equal(res_a, res_b):
+    assert len(res_a) == len(res_b)
+    for i, (a, b) in enumerate(zip(res_a, res_b)):
+        np.testing.assert_array_equal(a.dist, b.dist,
+                                      err_msg=f"dist mismatch at query {i}")
+        np.testing.assert_array_equal(a.parent, b.parent,
+                                      err_msg=f"parent mismatch at query {i}")
+
+
+@pytest.mark.parametrize("use_doubling", [False, True])
+@pytest.mark.parametrize("batch_deletions", [False, True])
+def test_sharded_matches_single_device(use_doubling, batch_deletions):
+    """P=1 mesh: bit-identical (dist, parent) at every query point, and the
+    device round/message counters agree (same waves, same improvements)."""
+    n, m, log, _ = _dynamic_stream(seed=31 + 2 * use_doubling + batch_deletions)
+    source = 3
+    ref = SSSPDelEngine(EngineConfig(
+        n, m + 64, source, use_doubling=use_doubling,
+        batch_deletions=batch_deletions))
+    eng = ShardedSSSPDelEngine(ShardedEngineConfig(
+        n, m + 64, source, use_doubling=use_doubling,
+        batch_deletions=batch_deletions))
+    _assert_results_equal(ref.ingest_log(log) + [ref.query()],
+                          eng.ingest_log(log) + [eng.query()])
+    assert ref.n_rounds == eng.n_rounds
+    assert ref.n_messages == eng.n_messages
+    assert ref.n_epochs == eng.n_epochs
+    assert ref.n_adds == eng.n_adds and ref.n_dels == eng.n_dels
+
+
+def test_sharded_delta_exchange_matches_single_device():
+    """The delta exchange (tiny cap -> overflow fallbacks exercised) reaches
+    the same (dist, parent) as the single-device engine on a mixed stream."""
+    n, m, log, _ = _dynamic_stream(seed=7)
+    ref = SSSPDelEngine(EngineConfig(n, m + 64, 3))
+    eng = ShardedSSSPDelEngine(ShardedEngineConfig(
+        n, m + 64, 3, exchange="delta", delta_cap=8))
+    _assert_results_equal(ref.ingest_log(log) + [ref.query()],
+                          eng.ingest_log(log) + [eng.query()])
+
+
+def test_sharded_min_duplicate_policy():
+    n = 8
+    res = {}
+    for cls, cfg in (
+            (SSSPDelEngine, EngineConfig(n, 32, 0, on_duplicate="min")),
+            (ShardedSSSPDelEngine,
+             ShardedEngineConfig(n, 32, 0, on_duplicate="min"))):
+        eng = cls(cfg)
+        eng.ingest_log(ev.adds([0, 1, 0, 0], [1, 2, 2, 1],
+                               [4.0, 1.0, 9.0, 2.0]))
+        eng.ingest_log(ev.adds([0], [1], [1.0]))   # decrease 0->1 to 1.0
+        eng.ingest_log(ev.adds([0], [2], [20.0]))  # increase is dropped
+        res[cls.__name__] = eng.query()
+    _assert_results_equal([res["SSSPDelEngine"]],
+                          [res["ShardedSSSPDelEngine"]])
+    assert res["SSSPDelEngine"].dist[2] == pytest.approx(2.0)
+
+
+def test_sharded_ingest_never_reads_device_values(monkeypatch):
+    """DESIGN.md §2.4 for the sharded loop: no device->host readback between
+    QUERY markers — stats stay in device scalars until query()."""
+    n, m, log, _ = _dynamic_stream(seed=13)
+    eng = ShardedSSSPDelEngine(ShardedEngineConfig(n, m + 64, 0))
+    topo = log[np.asarray(log.kind) != ev.QUERY]
+
+    def trap(*a, **k):
+        raise AssertionError("device_get during ingest (host sync)")
+
+    monkeypatch.setattr(jax, "device_get", trap)
+    eng.ingest_log(topo)  # only ADD/DEL runs: must not sync
+    monkeypatch.undo()
+    q = eng.query()
+    e_src, e_dst, e_w = [], [], []
+    for p, a in enumerate(eng.allocs):
+        s, d, w_ = a.active_coo()
+        e_src.append(s); e_dst.append(d); e_w.append(w_)
+    check_tree(n, np.concatenate(e_src), np.concatenate(e_dst),
+               np.concatenate(e_w), 0, q.dist, q.parent)
+
+
+def test_sharded_edge_balanced_relabeling():
+    """Edge-balanced placement via the relabeling permutation: identical
+    distances (same paths, same float sums), valid tree, and the planner
+    pools actually carry the relabeled in-edge mass."""
+    n, m, log, dst_ref = _dynamic_stream(seed=17)
+    source = 3
+    # the relabeling must target the engine's partition count (default mesh
+    # flattens every local device)
+    relabel = part_mod.edge_balanced_relabeling(n, dst_ref, len(jax.devices()))
+    ref = SSSPDelEngine(EngineConfig(n, m + 64, source))
+    eng = ShardedSSSPDelEngine(ShardedEngineConfig(n, m + 64, source),
+                               relabel=relabel)
+    # a relabeling built for the wrong partition count must be rejected
+    wrong = part_mod.edge_balanced_relabeling(n, dst_ref,
+                                              2 * len(jax.devices()))
+    with pytest.raises(AssertionError, match="partitions"):
+        ShardedSSSPDelEngine(ShardedEngineConfig(n, m + 64, source),
+                             relabel=wrong)
+    res_ref = ref.ingest_log(log) + [ref.query()]
+    res_eng = eng.ingest_log(log) + [eng.query()]
+    for a, b in zip(res_ref, res_eng):
+        np.testing.assert_array_equal(a.dist, b.dist)
+    e = ref.state.edges
+    es, ed, ew = edges_of_pool(e.src, e.dst, e.w, e.active)
+    check_tree(n, es, ed, ew, source, res_eng[-1].dist, res_eng[-1].parent)
+    assert eng.partition_fill().sum() == len(es)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs 8 devices (CI runs this module with "
+                           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+@pytest.mark.parametrize("exchange", ["allgather", "delta"])
+def test_sharded_p8_inprocess(exchange):
+    """P=8 on a (2,2,2) mesh, in-process (active under the CI 8-device step)."""
+    mesh = _mk((2, 2, 2), ("pod", "data", "model"))
+    n, m, log, _ = _dynamic_stream(seed=29, n=120, m=700)
+    ref = SSSPDelEngine(EngineConfig(n, m + 64, 5))
+    eng = ShardedSSSPDelEngine(
+        ShardedEngineConfig(n, m + 64, 5, exchange=exchange, delta_cap=16),
+        mesh=mesh)
+    assert eng.P == 8
+    _assert_results_equal(ref.ingest_log(log) + [ref.query()],
+                          eng.ingest_log(log) + [eng.query()])
+    if exchange == "allgather":
+        assert ref.n_rounds == eng.n_rounds
+        assert ref.n_messages == eng.n_messages
+
+
+@pytest.mark.parametrize("exchange,batched,doubling", [
+    ("allgather", 0, 1), ("allgather", 1, 0), ("delta", 0, 1)])
+def test_sharded_p8_subprocess(exchange, batched, doubling):
+    """Full equivalence contract at P=8 forced host devices (subprocess —
+    XLA device count must be set before jax initialises)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    out = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_dist_engine_worker.py"),
+         exchange, str(batched), str(doubling)],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert out.stdout.strip().startswith("OK"), out.stdout

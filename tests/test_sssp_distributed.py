@@ -9,6 +9,8 @@ import os
 import subprocess
 import sys
 
+import types
+
 import numpy as np
 import pytest
 
@@ -18,6 +20,7 @@ import jax.numpy as jnp
 from repro.core.distributed import DistConfig, DistributedSSSP
 from repro.core.oracle import dijkstra
 from repro.graphs import generators
+from repro.graphs import partition as part_mod
 from repro.launch.mesh import _mk
 
 HERE = os.path.dirname(__file__)
@@ -70,6 +73,145 @@ def test_edge_placement_layout():
     es, ed, ew, ea = ds.place_edges(src, dst, w)
     assert ea.sum() == 3
     assert es.shape == (4,)  # P=1, Epp=4
+
+
+def _fake_ds(P, npp, epp):
+    """Host-only stand-in exposing the attributes place_edges reads — lets
+    the layout tests cover P>1 bucketing without an 8-device mesh."""
+    return types.SimpleNamespace(
+        P=P, npp=npp,
+        cfg=types.SimpleNamespace(edges_per_part=epp, num_vertices=P * npp))
+
+
+def test_place_edges_vectorized_matches_loop_reference():
+    """The numpy-bucketing placement must reproduce the per-partition copy
+    loop it replaced: same slots, same padding rows (DESIGN.md §2.5)."""
+    rng = np.random.default_rng(3)
+    P, npp, epp, m = 8, 16, 48, 250
+    src = rng.integers(0, P * npp, m).astype(np.int64)
+    dst = rng.integers(0, P * npp, m).astype(np.int64)
+    w = rng.random(m).astype(np.float32)
+    got = DistributedSSSP.place_edges(_fake_ds(P, npp, epp), src, dst, w)
+
+    # reference: the original per-partition copy loop
+    owner = np.minimum(dst // npp, P - 1)
+    order = np.argsort(owner, kind="stable")
+    src_s, dst_s, w_s, owner_s = src[order], dst[order], w[order], owner[order]
+    ref_src = np.zeros(P * epp, np.int32)
+    ref_dst = np.zeros(P * epp, np.int32)
+    ref_w = np.zeros(P * epp, np.float32)
+    ref_act = np.zeros(P * epp, np.bool_)
+    counts = np.bincount(owner_s, minlength=P)
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    for p in range(P):
+        a, b = starts[p], starts[p + 1]
+        o = p * epp
+        ref_src[o:o + b - a] = src_s[a:b]
+        ref_dst[o:o + b - a] = dst_s[a:b]
+        ref_w[o:o + b - a] = w_s[a:b]
+        ref_act[o:o + b - a] = True
+        ref_dst[o + b - a:o + epp] = p * npp
+    for g, r in zip(got, (ref_src, ref_dst, ref_w, ref_act)):
+        np.testing.assert_array_equal(g, r)
+
+    # empty input: all-padding layout, no crash
+    es, ed, ew, ea = DistributedSSSP.place_edges(
+        _fake_ds(P, npp, epp), src[:0], dst[:0], w[:0])
+    assert not ea.any()
+    np.testing.assert_array_equal(
+        ed, np.repeat(np.arange(P) * npp, epp))
+
+    # overflow still raises
+    with pytest.raises(ValueError, match="overflow"):
+        DistributedSSSP.place_edges(
+            _fake_ds(P, npp, 2), np.zeros(24, np.int64),
+            np.zeros(24, np.int64), np.ones(24, np.float32))
+
+
+def test_edge_balanced_relabel_roundtrip():
+    """Owner/relabel round trip: perm packs each edge-balanced range at its
+    partition base, inv inverts it exactly, padding ids are inert (-1)."""
+    rng = np.random.default_rng(11)
+    n, parts = 113, 8
+    # skewed in-degrees so uniform ranges would be badly unbalanced
+    dst = (rng.pareto(1.0, 4000) * 7).astype(np.int64) % n
+    bounds = part_mod.edge_balanced_ranges(n, dst, parts)
+    perm, inv, npp = part_mod.edge_balanced_relabeling(n, dst, parts)
+    v = np.arange(n)
+    np.testing.assert_array_equal(inv[perm], v)           # exact inverse
+    np.testing.assert_array_equal(perm // npp,
+                                  part_mod.owner_of(v, bounds))
+    assert len(inv) == parts * npp
+    assert (inv >= 0).sum() == n                          # padding marked -1
+    assert npp == part_mod.pad_ranges_to_equal(bounds)
+    # balance: no partition carries more than target + one vertex's degree
+    deg = np.bincount(dst, minlength=n)
+    mass = np.bincount(perm[dst] // npp, minlength=parts)
+    assert mass.max() <= -(-len(dst) // parts) + deg.max()
+
+
+def test_edge_balanced_relabel_wires_into_placement():
+    """Relabeled placement: every edge lands in the partition that owns its
+    relabeled dst, and a relaxation epoch on the relabeled graph matches the
+    oracle on the original ids."""
+    rng = np.random.default_rng(5)
+    n_raw, src, dst, w = generators.power_law_hubs(150, 900, seed=5)
+    parts = 8
+    perm, inv, npp = part_mod.edge_balanced_relabeling(n_raw, dst, parts)
+    es, ed, ew, ea = DistributedSSSP.place_edges(
+        _fake_ds(parts, npp, 400), perm[src], perm[dst], w)
+    live = np.nonzero(ea)[0]
+    np.testing.assert_array_equal(live // 400, ed[live] // npp)
+
+    # end-to-end on the (trivial) mesh: relabel, solve, un-relabel, check
+    mesh = _mk((1,), ("graph",))
+    cfg = DistConfig(num_vertices=len(inv), edges_per_part=4096,
+                     mesh_axes=("graph",))
+    ds = DistributedSSSP(mesh, cfg)
+    eput = ds.put_edges(*ds.place_edges(perm[src], perm[dst], w))
+    d, p = ds.init_vertex_arrays(source=int(perm[0]))
+    front = ds.frontier_of(np.array([int(perm[0])]))
+    d, p, _ = ds.make_relax_epoch()(d, p, front, *eput)
+    ref, _ = dijkstra(n_raw, src, dst, w, 0)
+    np.testing.assert_allclose(np.nan_to_num(ref, posinf=1e30),
+                               np.nan_to_num(np.asarray(d)[perm], posinf=1e30),
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("delta_cap", [2, 4096])
+def test_delta_overflow_fallback_matches_allgather(delta_cap):
+    """Satellite contract: delta_cap exceeded -> dense all_gather fallback
+    round.  Either way the delta exchange must equal the allgather strategy
+    *exactly* — dist bitwise and parent tie-breaks included.  cap=2 forces
+    the overflow fallback nearly every round; cap=4096 stays sparse."""
+    mesh = _mk((1,), ("graph",))
+    n_raw, src, dst, w = generators.erdos_renyi(150, 900, seed=4)
+    out = {}
+    for exchange in ("allgather", "delta"):
+        cfg = DistConfig(num_vertices=n_raw, edges_per_part=2048,
+                         mesh_axes=("graph",), exchange=exchange,
+                         delta_cap=delta_cap)
+        ds = DistributedSSSP(mesh, cfg)
+        eput = ds.put_edges(*ds.place_edges(src, dst, w))
+        dist, parent = ds.init_vertex_arrays(source=0)
+        front = ds.frontier_of(np.array([0]))
+        dist, parent, _ = ds.make_relax_epoch()(dist, parent, front, *eput)
+
+        # deletion epoch on top: drop 3 tree edges, recompute
+        par = np.asarray(parent)
+        heads = np.nonzero(par >= 0)[0][:3]
+        tails = par[heads]
+        mask = np.ones(len(src), np.bool_)
+        for u, v in zip(tails, heads):
+            mask &= ~((src == u) & (dst == v))
+        e2 = ds.put_edges(*ds.place_edges(src[mask], dst[mask], w[mask]))
+        pad = lambda a: jnp.asarray(np.pad(  # noqa: E731
+            a.astype(np.int32), (0, 4 - len(a)), constant_values=-1))
+        seed = ds.make_seed_from_deletions()(parent, pad(tails), pad(heads))
+        dist, parent, _ = ds.make_delete_epoch()(dist, parent, seed, *e2)
+        out[exchange] = (np.asarray(dist), np.asarray(parent))
+    np.testing.assert_array_equal(out["allgather"][0], out["delta"][0])
+    np.testing.assert_array_equal(out["allgather"][1], out["delta"][1])
 
 
 @pytest.mark.parametrize("exchange", ["allgather", "delta"])
