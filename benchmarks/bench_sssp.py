@@ -202,7 +202,8 @@ def backend_shootout(sink: C.CsvSink, small: bool) -> None:
     """Beyond-paper: segment (COO scatter-min) vs ellpack (dense gather +
     row-min over the incrementally maintained ELL block) on fig5-style
     dynamic ingest.  Bounded-degree streams — the regime the flat ELL layout
-    targets; power-law hubs need the sliced-ELL path (DESIGN.md §2.6).
+    targets; power-law hubs run the sliced/hybrid path instead (DESIGN.md
+    §6, ``hub_shootout``).
 
     Emits events/s per backend plus query p50 — the acceptance gate for the
     ELL backend is events/s >= segment with <10% query-latency regression.
@@ -248,6 +249,84 @@ def backend_shootout(sink: C.CsvSink, small: bool) -> None:
                       ell_k=getattr(eng.ellp, "k", 0))
         sink.emit("backend_shootout_summary", delta=delta,
                   ell_speedup=round(eps["ellpack"] / eps["segment"], 3))
+
+
+def hub_shootout(sink: C.CsvSink, small: bool) -> None:
+    """Beyond-paper (DESIGN.md §6): the three relaxation backends on an
+    in-degree power-law hub stream — the regime the sliced/hybrid layout
+    exists for.  Dense ELL pads every row to the (huge) global max
+    in-degree; the sliced backend pays per-slice K plus a COO overflow lane
+    for hub surplus.  Emits ingest events/s, query p50, and the device
+    32-bit value count of each layout (memory proxy) per backend.
+
+    The acceptance gate (benchmarks/check_regression.py) is sliced ingest
+    >= 0.95x segment on these streams with query p50 within noise and the
+    sliced layout strictly smaller than dense ELL; the sliced-vs-ellpack
+    ratio is the headline the layout was built for.
+    """
+    import jax
+    from repro.graphs import generators as gen
+
+    n = (1 << 10) if small else (1 << 12)
+    m = 8 * n
+    nv, src, dst, w = gen.power_law_hubs(n, m, n_hubs=4, seed=23,
+                                         orientation="in")
+    source = int(gen.top_in_degree_sources(nv, dst, 1)[0])
+    max_indeg = int(np.bincount(dst, minlength=nv).max())
+    backends = ("segment", "ellpack", "sliced")
+    for delta in (0.1, 0.5):
+        log = C.stream_for(
+            C.Dataset("plaw", nv, src, dst, w,
+                      gen.top_in_degree_sources(nv, dst)),
+            window_frac=1 / 3, delta=delta, query_every=10**9)
+        eps: dict[str, float] = {}
+        engines: dict[str, SSSPDelEngine] = {}
+        for backend in backends:
+            # first pass warms every jit shape; every backend then takes
+            # best-of-2 timed passes (one-sided noise on a shared runner
+            # only ever slows a pass down — best-of is the stable ratio
+            # estimator, and all ratios compare like for like)
+            rates = []
+            for timed in (False, True, True):
+                eng = SSSPDelEngine(EngineConfig(
+                    num_vertices=nv, edge_capacity=m + 64, source=source,
+                    relax_backend=backend))
+                t0 = time.perf_counter()
+                eng.ingest_log(log)
+                jax.block_until_ready(eng.state.sssp.dist)
+                if timed:
+                    rates.append(len(log) / (time.perf_counter() - t0))
+            eps[backend] = max(rates)
+            engines[backend] = eng
+        q_lat: dict[str, list[float]] = {b: [] for b in engines}
+        for _rep in range(55):
+            for b, eng in engines.items():
+                q_lat[b].append(eng.query().latency_s)
+        # layout memory proxy in 32-bit VALUES, not cells: an ELL cell is
+        # (idx, w) = 2, an overflow/pool entry (src, dst, w) = 3
+        sell = engines["sliced"].sell
+        cells = {
+            "segment": 3 * (m + 64),
+            "ellpack": 2 * int(engines["ellpack"].ell.nbr_w.size),
+            "sliced": 2 * int(sell.flat_w.size) + 3 * int(sell.ow.size),
+        }
+        for backend, eng in engines.items():
+            _check_oracle(eng, sink, "hub_shootout_oracle")
+            sp = getattr(eng, "slicedp", None)
+            sink.emit("hub_shootout", dataset="plaw", n=nv, edges=m,
+                      max_indeg=max_indeg, delta=delta, backend=backend,
+                      events=len(log), events_per_s=round(eps[backend], 1),
+                      query_p50_ms=round(
+                          C.pctile(q_lat[backend][5:], 50) * 1e3, 4),
+                      rounds=eng.n_rounds, device_values=cells[backend],
+                      spills=getattr(sp, "spills", 0),
+                      rebuilds=getattr(sp, "rebuilds",
+                                       getattr(eng.ellp, "rebuilds", 0)))
+        sink.emit("hub_shootout_summary", delta=delta,
+                  sliced_vs_segment=round(eps["sliced"] / eps["segment"], 3),
+                  sliced_vs_ellpack=round(eps["sliced"] / eps["ellpack"], 3),
+                  cells_vs_ellpack=round(
+                      cells["sliced"] / max(cells["ellpack"], 1), 4))
 
 
 def dist_engine(sink: C.CsvSink, small: bool) -> None:
@@ -318,4 +397,4 @@ def dist_engine(sink: C.CsvSink, small: bool) -> None:
 
 ALL = [table2_static_baseline, fig1_query_latency, fig2_latency_over_time,
        fig3_source_selection, fig4_stability, fig5_throughput,
-       fig6_batch_bsp, backend_shootout, dist_engine]
+       fig6_batch_bsp, backend_shootout, hub_shootout, dist_engine]

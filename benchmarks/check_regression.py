@@ -1,0 +1,150 @@
+"""Perf/parity regression gates over BENCH_sssp.json (the CI artifact).
+
+Replaces the inline heredoc that used to live in ci.yml: one gate function
+per benchmark section, stdlib-only, exit 1 on any violation so the workflow
+step fails.  Thresholds are deliberately loose (CI runners are noisy); the
+sharp correctness gates — oracle cross-checks and sharded-vs-single
+bit-identity — are asserted *inside* the benchmark run itself, and this
+script additionally refuses to pass if those parity records are missing.
+
+Run: ``python -m benchmarks.check_regression [--json BENCH_sssp.json]
+[--sections backend_shootout,dist_engine,hub_shootout]``
+
+Gates (per delta value found in the section):
+  * backend_shootout — ellpack ingest >= 0.95x segment; ellpack query p50
+    <= 1.5x segment.
+  * hub_shootout — sliced ingest >= 0.95x segment on the power-law stream;
+    sliced query p50 <= 1.5x segment; sliced device cells < ellpack's
+    (the layout's reason to exist).
+  * dist_engine — the summary row must report ``identical=True``
+    (sharded == single bit-parity was asserted in-run); at P=1 the sharded
+    ingest must hold >= 0.9x single-device (pure sharding overhead bound).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_SECTIONS = ("backend_shootout", "dist_engine", "hub_shootout")
+
+
+def _rows(records: list[dict], bench: str) -> list[dict]:
+    return [r for r in records if r.get("bench") == bench]
+
+
+def _by(rows: list[dict], *keys: str) -> dict[tuple, dict]:
+    return {tuple(r[k] for k in keys): r for r in rows}
+
+
+def _ratio_gate(errors: list[str], name: str, num: float, den: float,
+                floor: float | None = None, ceil: float | None = None
+                ) -> float:
+    ratio = num / max(den, 1e-9)
+    if floor is not None and ratio < floor:
+        errors.append(f"{name}: {ratio:.3f}x < required {floor}x")
+    if ceil is not None and ratio > ceil:
+        errors.append(f"{name}: {ratio:.3f}x > allowed {ceil}x")
+    return ratio
+
+
+def gate_backend_shootout(records: list[dict]) -> list[str]:
+    errors: list[str] = []
+    rows = _rows(records, "backend_shootout")
+    if not rows:
+        return ["backend_shootout: no records found"]
+    by = _by(rows, "delta", "backend")
+    for d in sorted({r["delta"] for r in rows}):
+        ing = _ratio_gate(errors, f"backend_shootout d={d} ell/seg ingest",
+                          float(by[(d, "ellpack")]["events_per_s"]),
+                          float(by[(d, "segment")]["events_per_s"]),
+                          floor=0.95)
+        q = _ratio_gate(errors, f"backend_shootout d={d} ell/seg query",
+                        float(by[(d, "ellpack")]["query_p50_ms"]),
+                        float(by[(d, "segment")]["query_p50_ms"]),
+                        ceil=1.5)
+        print(f"backend_shootout delta={d}: ell/seg ingest {ing:.2f}x, "
+              f"query {q:.2f}x")
+    return errors
+
+
+def gate_hub_shootout(records: list[dict]) -> list[str]:
+    errors: list[str] = []
+    rows = _rows(records, "hub_shootout")
+    if not rows:
+        return ["hub_shootout: no records found"]
+    by = _by(rows, "delta", "backend")
+    for d in sorted({r["delta"] for r in rows}):
+        ing = _ratio_gate(errors, f"hub_shootout d={d} sliced/seg ingest",
+                          float(by[(d, "sliced")]["events_per_s"]),
+                          float(by[(d, "segment")]["events_per_s"]),
+                          floor=0.95)
+        q = _ratio_gate(errors, f"hub_shootout d={d} sliced/seg query",
+                        float(by[(d, "sliced")]["query_p50_ms"]),
+                        float(by[(d, "segment")]["query_p50_ms"]),
+                        ceil=1.5)
+        cells = _ratio_gate(errors, f"hub_shootout d={d} sliced/ell values",
+                            float(by[(d, "sliced")]["device_values"]),
+                            float(by[(d, "ellpack")]["device_values"]),
+                            ceil=1.0)
+        print(f"hub_shootout delta={d}: sliced/seg ingest {ing:.2f}x, "
+              f"query {q:.2f}x, cells vs ellpack {cells:.3f}x")
+    return errors
+
+
+def gate_dist_engine(records: list[dict]) -> list[str]:
+    errors: list[str] = []
+    rows = _rows(records, "dist_engine")
+    summaries = _rows(records, "dist_engine_summary")
+    if not rows or not summaries:
+        return ["dist_engine: no records found"]
+    by = _by(rows, "delta", "engine")
+    for s in summaries:
+        d = s["delta"]
+        if str(s.get("identical")) != "True":
+            errors.append(f"dist_engine d={d}: sharded/single parity record "
+                          f"missing or false: identical={s.get('identical')}")
+        ratio = float(by[(d, "sharded")]["events_per_s"]) \
+            / max(float(by[(d, "single")]["events_per_s"]), 1e-9)
+        parts = int(s.get("parts", 0))
+        if parts == 1 and ratio < 0.9:
+            errors.append(f"dist_engine d={d}: sharded P=1 ingest {ratio:.3f}x "
+                          f"single < required 0.9x")
+        print(f"dist_engine delta={d} P={parts}: sharded/single ingest "
+              f"{ratio:.2f}x, identical={s.get('identical')}")
+    return errors
+
+
+GATES = {
+    "backend_shootout": gate_backend_shootout,
+    "dist_engine": gate_dist_engine,
+    "hub_shootout": gate_hub_shootout,
+}
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--json", default="BENCH_sssp.json")
+    p.add_argument("--sections", default=",".join(DEFAULT_SECTIONS),
+                   help="comma-separated gate names (default: all)")
+    args = p.parse_args()
+    sections = [s for s in args.sections.split(",") if s]
+    unknown = [s for s in sections if s not in GATES]
+    if unknown:
+        print(f"error: unknown gate section(s): {','.join(unknown)} "
+              f"(known: {','.join(GATES)})", file=sys.stderr)
+        return 2
+    with open(args.json) as f:
+        records = json.load(f)["records"]
+    errors: list[str] = []
+    for s in sections:
+        errors += GATES[s](records)
+    for e in errors:
+        print(f"REGRESSION: {e}", file=sys.stderr)
+    if not errors:
+        print(f"all gates passed: {','.join(sections)}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

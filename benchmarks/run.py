@@ -6,7 +6,8 @@ Sections:
   * kernel micro-benchmarks (Pallas interpret-mode vs jnp reference);
   * roofline table distilled from the dry-run reports (if reports/ exists).
 
-``--small`` shrinks graphs for CI-speed runs; ``--only <prefix>`` filters.
+``--small`` shrinks graphs for CI-speed runs; ``--only <prefix>`` filters
+(unknown names are an error — exit 2); ``--list`` prints the sections.
 """
 from __future__ import annotations
 
@@ -19,11 +20,31 @@ import time
 from benchmarks import common as C
 
 
+def section_names() -> list[str]:
+    from benchmarks import bench_sssp
+    return [fn.__name__ for fn in bench_sssp.ALL]
+
+
+def _token_matches(tok: str, name: str) -> bool:
+    """THE --only matching rule (substring), shared by the pre-run
+    validation and the section filter so the two can never drift."""
+    return bool(tok) and tok in name
+
+
+def check_only(only: str | None) -> list[str]:
+    """Validate --only tokens against the section list; returns the unknown
+    tokens (each token must match at least one section)."""
+    names = section_names()
+    return [tok for tok in (only.split(",") if only else [])
+            if not any(_token_matches(tok, name) for name in names)]
+
+
 def run_sssp(sink: C.CsvSink, small: bool, only: str | None) -> None:
     from benchmarks import bench_sssp
     wanted = only.split(",") if only else None
     for fn in bench_sssp.ALL:
-        if wanted and not any(tok and tok in fn.__name__ for tok in wanted):
+        if wanted and not any(_token_matches(tok, fn.__name__)
+                              for tok in wanted):
             continue
         t0 = time.perf_counter()
         fn(sink, small)
@@ -136,7 +157,18 @@ def main() -> int:
     p.add_argument("--skip-kernels", action="store_true")
     p.add_argument("--json", default="BENCH_sssp.json",
                    help="machine-readable output path ('' disables)")
+    p.add_argument("--list", action="store_true",
+                   help="print available section names and exit")
     args = p.parse_args()
+    if args.list:
+        for name in section_names():
+            print(name)
+        return 0
+    unknown = check_only(args.only)
+    if unknown:
+        print(f"error: unknown --only section(s): {','.join(unknown)}; "
+              f"--list prints the available names", file=sys.stderr)
+        return 2
     sink = C.CsvSink()
     t0 = time.perf_counter()
     run_sssp(sink, args.small, args.only)

@@ -24,13 +24,22 @@ def main():
     p.add_argument("--scale", type=int, default=11)
     p.add_argument("--delta", type=float, default=0.3)
     p.add_argument("--window-frac", type=float, default=0.3)
-    p.add_argument("--backend", choices=("segment", "ellpack"),
+    p.add_argument("--backend", choices=("segment", "ellpack", "sliced"),
                    default="segment",
-                   help="relaxation backend (DESIGN.md §2; ellpack is the "
-                        "bounded-degree fast path)")
+                   help="relaxation backend (DESIGN.md §2/§6; ellpack is "
+                        "the bounded-degree fast path, sliced the hub-aware "
+                        "hybrid for power-law in-degrees)")
+    p.add_argument("--power-law", action="store_true",
+                   help="stream in-degree power-law hubs instead of RMAT "
+                        "(the sliced backend's target workload)")
     args = p.parse_args()
 
-    n, src, dst, w = gen.rmat(args.scale, edge_factor=8, seed=7)
+    if args.power_law:
+        n = 1 << args.scale
+        n, src, dst, w = gen.power_law_hubs(n, 10 * n, n_hubs=4, seed=7,
+                                            orientation="in")
+    else:
+        n, src, dst, w = gen.rmat(args.scale, edge_factor=8, seed=7)
     source = int(gen.top_in_degree_sources(n, dst)[0])
     window = int(len(src) * args.window_frac)
     log = win.sliding_window_stream(src, dst, w, window=window,

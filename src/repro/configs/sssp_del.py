@@ -17,13 +17,18 @@ class SSSPArchConfig:
     edges_per_part: int
     exchange: str = "allgather"   # paper-faithful; "delta" = beyond-paper
     delta_cap: int = 4096
-    # Relaxation backend for the single-host engine (DESIGN.md §2):
+    # Relaxation backend for the single-host engine (DESIGN.md §2, §6):
     # "segment" = COO scatter-min (portable default); "ellpack" = dense
     # gather + row-min over the incrementally maintained ELLPACK block
-    # (the Pallas kernel's layout — bounded-degree fast path).
+    # (the Pallas kernel's layout — bounded-degree fast path); "sliced" =
+    # hub-aware hybrid (per-slice-width ELL + overflow COO lane) for
+    # power-law in-degree graphs.
     relax_backend: str = "segment"
     ell_block_rows: int = 256
     ell_init_k: int = 8
+    sliced_slice_rows: int = 256
+    sliced_hub_k: int = 32
+    sliced_init_k: int = 2
 
     def engine_config(self, *, edge_capacity: int, source: int, **overrides):
         """Bridge to the single-host engine: an ``EngineConfig`` carrying
@@ -34,7 +39,10 @@ class SSSPArchConfig:
                   edge_capacity=edge_capacity, source=source,
                   relax_backend=self.relax_backend,
                   ell_block_rows=self.ell_block_rows,
-                  ell_init_k=self.ell_init_k)
+                  ell_init_k=self.ell_init_k,
+                  sliced_slice_rows=self.sliced_slice_rows,
+                  sliced_hub_k=self.sliced_hub_k,
+                  sliced_init_k=self.sliced_init_k)
         kw.update(overrides)
         return EngineConfig(**kw)
 

@@ -1,9 +1,18 @@
-"""Incremental ELLPACK relaxation backend for the dynamic engine.
+"""Incremental ELLPACK relaxation backends for the dynamic engine.
 
 The segment backend (core/relax.py) scatter-reduces over the flat COO edge
-pool; this module keeps a second, TPU-native view of the same graph — a
-by-destination ELLPACK block ``(nbr_idx, nbr_w)`` of shape (R, K) — and
-maintains it *incrementally* under ADD/DEL batches (DESIGN.md §2):
+pool; this module keeps a second, TPU-native view of the same graph and
+maintains it *incrementally* under ADD/DEL batches.  Two layouts:
+
+  * ``EllState`` — the dense by-destination ELLPACK block ``(nbr_idx,
+    nbr_w)`` of shape (R, K), one global K (DESIGN.md §2);
+  * ``SlicedEllState`` — the hub-aware hybrid (DESIGN.md §6): rows bucketed
+    into degree slices with per-slice pow2 K (capped at a hub threshold),
+    flattened into one 1-D cell buffer, plus a device COO *overflow* segment
+    holding hub rows' surplus in-edges, relaxed with the segment-min kernel
+    and min-combined with the per-slice ELL waves.
+
+Dense-ELL maintenance (the sliced ops mirror it cell-for-cell):
 
   * ADD  — the host planner assigns each new edge a (row, k) cell past the
     row's fill high-water mark; the device patch is one idempotent scatter.
@@ -27,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +54,8 @@ _NEG_INF = jnp.float32(-jnp.inf)
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class EllState:
-    """Device-resident sliced-ELL view of the active edge set.
+    """Device-resident dense-ELL view of the active edge set (one global K;
+    the hub-aware sliced/hybrid variant is ``SlicedEllState`` below).
 
     ``fill`` is each row's occupancy high-water mark: cells at k >= fill[r]
     have never been written; cells below it are live edges or tombstones
@@ -128,11 +139,21 @@ def ell_invariants(ell: EllState) -> dict[str, jax.Array]:
 
 
 # ------------------------------------------------------------ host planner --
-def _next_pow2(x: int) -> int:
-    m = 1
-    while m < x:
-        m <<= 1
-    return m
+_next_pow2 = csr_mod.next_pow2
+
+
+def _rank_within_rows(rows: np.ndarray) -> np.ndarray:
+    """Rank of each batch entry among the entries targeting the same row,
+    in stable batch order — the cell-offset assignment both planners use
+    (kpos candidate = fill[row] + rank)."""
+    m = len(rows)
+    order = np.argsort(rows, kind="stable")
+    sr = rows[order]
+    starts = np.nonzero(np.r_[True, sr[1:] != sr[:-1]])[0]
+    sizes = np.diff(np.r_[starts, m])
+    rank = np.empty(m, np.int64)
+    rank[order] = np.arange(m) - np.repeat(starts, sizes)
+    return rank
 
 
 class EllPlanner:
@@ -171,13 +192,7 @@ class EllPlanner:
         counts = np.bincount(rows, minlength=self.n)
         if int((self.fill[:self.n] + counts[:self.n]).max(initial=0)) > self.k:
             return None
-        order = np.argsort(rows, kind="stable")
-        sr = rows[order]
-        starts = np.nonzero(np.r_[True, sr[1:] != sr[:-1]])[0]
-        sizes = np.diff(np.r_[starts, m])
-        rank = np.empty(m, np.int64)
-        rank[order] = np.arange(m) - np.repeat(starts, sizes)
-        kpos = self.fill[rows] + rank
+        kpos = self.fill[rows] + _rank_within_rows(rows)
         np.maximum.at(self.fill, rows, kpos + 1)
         return kpos.astype(np.int32)
 
@@ -297,3 +312,442 @@ def ell_invalidate_and_recompute(
             any_seed,
             stats.messages + jnp.sum(improved.astype(jnp.int32)), zero),
     )
+
+
+# ===========================================================================
+# Sliced hybrid backend (DESIGN.md §6): per-slice-K ELL + hub overflow COO
+# ===========================================================================
+_INT_MAX = jnp.int32(2**31 - 1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SlicedEllState:
+    """Device-resident hybrid sliced-ELL + overflow-COO view of the edge set.
+
+    The ELL cells of all slices live in ONE flat buffer (``flat_idx``,
+    ``flat_w``): row r's cells occupy ``[base[r], base[r] + rowk[r])`` where
+    ``rowk[r]`` is r's slice width.  ``fill`` is the per-row occupancy
+    high-water mark, exactly as in ``EllState``.  Hub rows (in-degree above
+    the planner's hub threshold) keep their surplus in-edges in the COO
+    overflow segment ``(osrc, odst, ow)``; empty/tombstoned entries there
+    carry w=+inf (src=dst=0) and never win a min.
+    """
+
+    flat_idx: jax.Array  # i32[L] in-neighbor ids (0 where empty/tombstone)
+    flat_w: jax.Array    # f32[L] weights (+inf where empty/tombstone)
+    fill: jax.Array      # i32[R]
+    base: jax.Array      # i32[R] flat offset of each row's first cell
+    rowk: jax.Array      # i32[R] each row's slice width
+    osrc: jax.Array      # i32[C] overflow in-neighbor ids
+    odst: jax.Array      # i32[C] overflow destination rows
+    ow: jax.Array        # f32[C] overflow weights (+inf empty/tombstone)
+
+
+# --------------------------------------------------------------- patch ops --
+@jax.jit
+def sliced_append(st: SlicedEllState, pos: jax.Array, rows: jax.Array,
+                  kpos: jax.Array, src: jax.Array, w: jax.Array
+                  ) -> SlicedEllState:
+    """Write fresh edges into planner-assigned flat cells (idempotent scatter
+    — pad_pow2 repeats are no-ops).  ``pos == base[rows] + kpos``; the
+    planner passes both so the device fill marks stay in sync."""
+    return dataclasses.replace(
+        st,
+        flat_idx=st.flat_idx.at[pos].set(src),
+        flat_w=st.flat_w.at[pos].set(w),
+        fill=st.fill.at[rows].max(kpos + 1),
+    )
+
+
+@jax.jit
+def sliced_spill(st: SlicedEllState, opos: jax.Array, src: jax.Array,
+                 rows: jax.Array, w: jax.Array) -> SlicedEllState:
+    """Append hub-surplus edges into planner-assigned overflow entries
+    (idempotent scatter, same pad_pow2 contract as ``sliced_append``)."""
+    return dataclasses.replace(
+        st,
+        osrc=st.osrc.at[opos].set(src),
+        odst=st.odst.at[opos].set(rows),
+        ow=st.ow.at[opos].set(w),
+    )
+
+
+def _sliced_match(st: SlicedEllState, rows: jax.Array, src: jax.Array,
+                  width: int):
+    """Locate each (src -> rows) edge's live ELL cell: (flat_pos, found).
+
+    Gathers a ``width``-wide window per row (``width`` = max slice width,
+    static) masked to the row's actual slice width — the sliced rendering of
+    ``_match_cell``.  Live edges are unique per (row, src), so at most one
+    finite-weight cell matches; edges living in the overflow segment simply
+    don't match here."""
+    m = rows.shape[0]
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (m, width), 1)
+    pos = jnp.clip(st.base[rows][:, None] + k_iota, 0,
+                   st.flat_w.shape[0] - 1)
+    in_row = k_iota < st.rowk[rows][:, None]
+    hit = (in_row & (st.flat_idx[pos] == src[:, None])
+           & jnp.isfinite(st.flat_w[pos]))
+    kbest = jnp.argmax(hit, axis=1)
+    sel = jnp.take_along_axis(pos, kbest[:, None], axis=1)[:, 0]
+    return sel, jnp.any(hit, axis=1)
+
+
+def _overflow_match(st: SlicedEllState, rows: jax.Array, src: jax.Array):
+    """Locate each (src -> rows) edge's live overflow entry: (opos, found)."""
+    live = jnp.isfinite(st.ow)[None, :]
+    hit = (live & (st.osrc[None, :] == src[:, None])
+           & (st.odst[None, :] == rows[:, None]))
+    return jnp.argmax(hit, axis=1), jnp.any(hit, axis=1)
+
+
+@partial(jax.jit, static_argnames=("width",))
+def sliced_delete(st: SlicedEllState, rows: jax.Array, src: jax.Array,
+                  *, width: int) -> SlicedEllState:
+    """Tombstone deleted edges (w := +inf) wherever they live — ELL cell or
+    overflow entry — located on device by source-id match.  The max-combine
+    (-inf = no-op) makes both scatters order-free under batch padding."""
+    sel, found = _sliced_match(st, rows, src, width)
+    opos, ofound = _overflow_match(st, rows, src)
+    return dataclasses.replace(
+        st,
+        flat_w=st.flat_w.at[sel].max(jnp.where(found, INF, _NEG_INF)),
+        ow=st.ow.at[opos].max(jnp.where(ofound, INF, _NEG_INF)),
+    )
+
+
+@partial(jax.jit, static_argnames=("width",))
+def sliced_update_min(st: SlicedEllState, rows: jax.Array, src: jax.Array,
+                      w: jax.Array, *, width: int) -> SlicedEllState:
+    """Weight-decrease of existing edges (on_duplicate="min"): device-side
+    match + min-scatter in both lanes (+inf = no-op when unmatched)."""
+    sel, found = _sliced_match(st, rows, src, width)
+    opos, ofound = _overflow_match(st, rows, src)
+    return dataclasses.replace(
+        st,
+        flat_w=st.flat_w.at[sel].min(jnp.where(found, w, INF)),
+        ow=st.ow.at[opos].min(jnp.where(ofound, w, INF)),
+    )
+
+
+@partial(jax.jit, static_argnames=("width",))
+def sliced_invariants(st: SlicedEllState, *, width: int
+                      ) -> dict[str, jax.Array]:
+    """Occupancy invariants over the flat buffer (mirrors ``ell_invariants``):
+    cells between a row's fill mark and its slice width must be empty."""
+    R = st.fill.shape[0]
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (R, width), 1)
+    pos = jnp.clip(st.base[:, None] + k_iota, 0, st.flat_w.shape[0] - 1)
+    beyond = (k_iota < st.rowk[:, None]) & (k_iota >= st.fill[:, None])
+    return {
+        "beyond_fill_empty": jnp.all(
+            jnp.where(beyond, jnp.isinf(st.flat_w[pos]), True)),
+        "fill_in_range": jnp.all((st.fill >= 0) & (st.fill <= st.rowk)),
+    }
+
+
+# ------------------------------------------------------------------- waves --
+@partial(jax.jit, static_argnames=("widths", "slice_rows", "num_vertices",
+                                   "use_kernel", "interpret"))
+def sliced_relax_wave(dist: jax.Array, parent: jax.Array,
+                      st: SlicedEllState, *, widths: tuple[int, ...],
+                      slice_rows: int, num_vertices: int,
+                      frontier: jax.Array | None = None,
+                      use_kernel: bool = False, interpret: bool = True):
+    """One hybrid relaxation wave: per-slice ELL gather+row-min (the relax
+    kernel, one block per slice) min-combined with a segment-min over the
+    overflow COO lane.  Parent ties break toward the smallest in-neighbor id
+    ACROSS both lanes — each lane already reports its smallest minimizing id,
+    so the combine is a scalar min per row — which keeps (dist, parent)
+    bit-identical to the segment and dense-ELL backends."""
+    from repro.kernels.relax.ref import ellpack_relax_ref
+    from repro.kernels.relax.relax import ellpack_relax
+
+    n = dist.shape[0]
+    offers = dist if frontier is None else jnp.where(frontier, dist, INF)
+
+    # runs of equal-width slices are contiguous row-major (R_g, k) blocks in
+    # the flat buffer — merge them so the common all-settled-on-one-width
+    # case is a single dense wave, not one dispatch per slice.  The Pallas
+    # kernel tiles rows in 256-row blocks and requires R_g % min(256, R_g)
+    # == 0, so a merged run is split into a multiple-of-256-rows main block
+    # plus a sub-256-row remainder block.
+    per_blk = max(1, 256 // slice_rows)
+    runs: list[list[int]] = []
+    for k in widths:
+        if runs and runs[-1][0] == k:
+            runs[-1][1] += 1
+        else:
+            runs.append([k, 1])
+    groups: list[tuple[int, int]] = []
+    for k, cnt in runs:
+        main = (cnt // per_blk) * per_blk
+        if main:
+            groups.append((k, main))
+        if cnt - main:
+            groups.append((k, cnt - main))
+    bests, args_ = [], []
+    off = 0
+    for k, cnt in groups:                  # static unroll: one block per run
+        rows_g = slice_rows * cnt
+        blk = slice(off, off + rows_g * k)
+        blk_idx = st.flat_idx[blk].reshape(rows_g, k)
+        blk_w = st.flat_w[blk].reshape(rows_g, k)
+        if use_kernel:
+            b, a = ellpack_relax(offers, blk_idx, blk_w, interpret=interpret)
+        else:
+            b, a = ellpack_relax_ref(offers, blk_idx, blk_w)
+        bests.append(b)
+        args_.append(a)
+        off += rows_g * k
+    best = jnp.concatenate(bests)[:n]
+    arg = jnp.concatenate(args_)[:n]
+
+    # overflow lane: the segment backend's scatter-min, on the hub surplus
+    ocand = offers[st.osrc] + st.ow        # +inf entries can never win
+    obest = jnp.minimum(
+        jax.ops.segment_min(ocand, st.odst, num_segments=num_vertices), INF)
+    ohit = (ocand == obest[st.odst]) & (ocand < INF)
+    oarg = jax.ops.segment_min(jnp.where(ohit, st.osrc, _INT_MAX), st.odst,
+                               num_segments=num_vertices)
+
+    comb = jnp.minimum(best, obest)
+    improved = comb < dist
+    ell_key = jnp.where((best == comb) & (best < INF), arg, _INT_MAX)
+    coo_key = jnp.where((obest == comb) & (obest < INF), oarg, _INT_MAX)
+    new_parent = jnp.minimum(ell_key, coo_key)
+    return (jnp.where(improved, comb, dist),
+            jnp.where(improved, new_parent, parent),
+            improved)
+
+
+# ------------------------------------------------------------------ epochs --
+@partial(jax.jit, static_argnames=("widths", "slice_rows", "num_vertices",
+                                   "max_rounds", "use_kernel", "interpret"))
+def sliced_relax_until_converged(
+    sssp: SSSPState,
+    st: SlicedEllState,
+    frontier: jax.Array,
+    *,
+    widths: tuple[int, ...],
+    slice_rows: int,
+    num_vertices: int,
+    max_rounds: int = 0,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> tuple[SSSPState, RelaxStats]:
+    """Sliced rendering of relax.relax_until_converged: frontier-masked
+    hybrid waves to fixpoint.  Same candidate sets, same tie-break =>
+    bit-identical results and stats."""
+
+    def cond(carry):
+        _, _, frontier, rounds, _ = carry
+        go = jnp.any(frontier)
+        if max_rounds:
+            go = go & (rounds < max_rounds)
+        return go
+
+    def body(carry):
+        dist, parent, frontier, rounds, msgs = carry
+        dist, parent, improved = sliced_relax_wave(
+            dist, parent, st, widths=widths, slice_rows=slice_rows,
+            num_vertices=num_vertices, frontier=frontier,
+            use_kernel=use_kernel, interpret=interpret)
+        return (dist, parent, improved, rounds + 1,
+                msgs + jnp.sum(improved.astype(jnp.int32)))
+
+    dist, parent, _, rounds, msgs = jax.lax.while_loop(
+        cond, body,
+        (sssp.dist, sssp.parent, frontier, jnp.int32(0), jnp.int32(0)),
+    )
+    return (
+        SSSPState(dist=dist, parent=parent, source=sssp.source),
+        RelaxStats(rounds=rounds, messages=msgs),
+    )
+
+
+@partial(jax.jit, static_argnames=("widths", "slice_rows", "num_vertices",
+                                   "use_doubling", "use_kernel", "interpret"))
+def sliced_invalidate_and_recompute(
+    sssp: SSSPState,
+    st: SlicedEllState,
+    seed: jax.Array,
+    *,
+    widths: tuple[int, ...],
+    slice_rows: int,
+    num_vertices: int,
+    use_doubling: bool = True,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> tuple[SSSPState, del_mod.DeleteStats]:
+    """Deletion epoch on the hybrid layout — structurally identical to
+    ``ell_invalidate_and_recompute`` (same marking, same bulk-pull-as-one-
+    unmasked-wave, same stat gating on ``any(seed)``), with the hybrid wave
+    so hub rows also pull offers through the overflow lane."""
+    any_seed = jnp.any(seed)
+    mark = (del_mod.mark_subtree_doubling if use_doubling
+            else del_mod.mark_subtree_flood)
+    aff, inv_rounds = mark(sssp.parent, seed)
+    aff = aff.at[sssp.source].set(False)
+
+    dist = jnp.where(aff, INF, sssp.dist)
+    parent = jnp.where(aff, NO_PARENT, sssp.parent)
+
+    dist_p, parent_p, improved = sliced_relax_wave(
+        dist, parent, st, widths=widths, slice_rows=slice_rows,
+        num_vertices=num_vertices, use_kernel=use_kernel,
+        interpret=interpret)
+    improved = improved & aff
+    dist = jnp.where(improved, dist_p, dist)
+    parent = jnp.where(improved, parent_p, parent)
+
+    state1 = SSSPState(dist=dist, parent=parent, source=sssp.source)
+    state2, stats = sliced_relax_until_converged(
+        state1, st, improved, widths=widths, slice_rows=slice_rows,
+        num_vertices=num_vertices, use_kernel=use_kernel,
+        interpret=interpret)
+    zero = jnp.int32(0)
+    return state2, del_mod.DeleteStats(
+        invalidation_rounds=jnp.where(any_seed, inv_rounds, zero),
+        affected=jnp.sum(aff.astype(jnp.int32)),
+        recompute_rounds=jnp.where(any_seed, stats.rounds + 1, zero),
+        recompute_messages=jnp.where(
+            any_seed,
+            stats.messages + jnp.sum(improved.astype(jnp.int32)), zero),
+    )
+
+
+# ------------------------------------------------------------ host planner --
+class SlicedPlan(NamedTuple):
+    """One ADD batch's placement: ELL cells + overflow spills (all numpy)."""
+
+    pos: np.ndarray    # i32[e] flat ELL cell positions (base[row] + kpos)
+    rows: np.ndarray   # i32[e]
+    kpos: np.ndarray   # i32[e]
+    src: np.ndarray    # i32[e]
+    w: np.ndarray      # f32[e]
+    opos: np.ndarray   # i32[s] overflow entry positions
+    osrc: np.ndarray   # i32[s]
+    orows: np.ndarray  # i32[s]
+    ow: np.ndarray     # f32[s]
+
+
+class SlicedEllPlanner:
+    """Host control plane for the hybrid layout (DESIGN.md §6): assigns ELL
+    cells and overflow entries, detects per-slice / overflow exhaustion, and
+    rebuilds from the host COO mirror with monotone per-slice capacity
+    doubling (each slice's width doubles independently, capped at ``hub_k``;
+    the overflow capacity doubles when the live surplus outgrows it).
+
+    Hub threshold policy: a row whose fill reaches ``hub_k`` is a hub — its
+    further in-edges spill to the overflow segment instead of widening the
+    whole slice.  Rows below the threshold that outgrow their slice width
+    trigger a rebuild, which doubles that slice's width only.
+    """
+
+    def __init__(self, num_vertices: int, *, slice_rows: int = 256,
+                 hub_k: int = 32, init_k: int = 2):
+        self.n = num_vertices
+        self.sr = min(_next_pow2(max(slice_rows, 1)),
+                      _next_pow2(max(num_vertices, 1)))
+        self.rows = -(-num_vertices // self.sr) * self.sr
+        self.n_slices = self.rows // self.sr
+        self.hub_k = _next_pow2(max(hub_k, 1))
+        init_k = min(_next_pow2(max(init_k, 1)), self.hub_k)
+        self.widths = [init_k] * self.n_slices
+        self.fill = np.zeros(self.rows, np.int32)
+        self.ocap = 8
+        self.ofill = 0
+        self.rebuilds = 0
+        self.spills = 0
+        self._recompute_geometry()
+
+    def _recompute_geometry(self) -> None:
+        _, self.rowk, self.base, self.cells = csr_mod.sliced_geometry(
+            self.widths, self.sr)
+
+    @property
+    def max_width(self) -> int:
+        return max(self.widths)
+
+    def empty_state(self) -> SlicedEllState:
+        return SlicedEllState(
+            flat_idx=jnp.zeros(self.cells, jnp.int32),
+            flat_w=jnp.full(self.cells, INF, jnp.float32),
+            fill=jnp.zeros(self.rows, jnp.int32),
+            base=jnp.asarray(self.base, jnp.int32),
+            rowk=jnp.asarray(self.rowk, jnp.int32),
+            osrc=jnp.zeros(self.ocap, jnp.int32),
+            odst=jnp.zeros(self.ocap, jnp.int32),
+            ow=jnp.full(self.ocap, INF, jnp.float32),
+        )
+
+    def plan_appends(self, rows: np.ndarray, src: np.ndarray,
+                     w: np.ndarray) -> SlicedPlan | None:
+        """Assign each fresh edge an ELL cell past its row's fill mark, or an
+        overflow entry once the row is at the hub threshold.  Returns None
+        when a sub-threshold row outgrows its slice width or the overflow
+        segment is full — the caller must rebuild instead."""
+        m = len(rows)
+        z32 = np.empty(0, np.int32)
+        zf = np.empty(0, np.float32)
+        if m == 0:
+            return SlicedPlan(z32, z32, z32, z32, zf, z32, z32, z32, zf)
+        rows = np.asarray(rows, np.int64)
+        kcand = self.fill[rows] + _rank_within_rows(rows)
+        to_ell = kcand < self.rowk[rows]
+        over = ~to_ell
+        # overflow is only legal past the hub threshold; a sub-threshold row
+        # outgrowing its slice width means the slice must double -> rebuild
+        if bool((over & (self.rowk[rows] < self.hub_k)).any()):
+            return None
+        n_spill = int(over.sum())
+        if self.ofill + n_spill > self.ocap:
+            return None
+        # commit
+        erows = rows[to_ell]
+        ekpos = kcand[to_ell].astype(np.int32)
+        np.maximum.at(self.fill, erows, ekpos + 1)
+        sp_rank = np.cumsum(over) - 1
+        opos = (self.ofill + sp_rank[over]).astype(np.int32)
+        self.ofill += n_spill
+        self.spills += n_spill
+        return SlicedPlan(
+            pos=(self.base[erows] + ekpos).astype(np.int32),
+            rows=erows.astype(np.int32), kpos=ekpos,
+            src=np.asarray(src)[to_ell], w=np.asarray(w)[to_ell],
+            opos=opos, osrc=np.asarray(src)[over],
+            orows=rows[over].astype(np.int32), ow=np.asarray(w)[over])
+
+    def rebuild(self, src: np.ndarray, dst: np.ndarray, w: np.ndarray
+                ) -> SlicedEllState:
+        """Rebuild the device layout from the live COO edge set (host
+        mirror): tombstones compact away, each slice's width grows to the
+        next pow2 of 2x its capped max in-degree (monotone, <= hub_k), and
+        the overflow capacity doubles past the live surplus."""
+        deg = np.zeros(self.rows, np.int64)
+        if len(dst):
+            deg[:self.n] = np.bincount(dst, minlength=self.n)
+        capped = np.minimum(deg, self.hub_k)
+        slice_max = capped.reshape(self.n_slices, self.sr).max(axis=1)
+        self.widths = [
+            max(cur, min(self.hub_k, _next_pow2(max(2 * int(mx), 1))))
+            for cur, mx in zip(self.widths, slice_max)]
+        surplus = int((deg - capped).sum())
+        self.ocap = max(self.ocap, _next_pow2(max(2 * surplus, 8)))
+        flat_idx, flat_w, fill, _, osrc, odst, ow, n_over = \
+            csr_mod.sliced_ell_from_coo(
+                self.n, src, dst, w, slice_rows=self.sr, hub_k=self.hub_k,
+                n_rows=self.rows, widths=self.widths,
+                overflow_capacity=self.ocap)
+        self.fill = fill
+        self.ofill = n_over
+        self.rebuilds += 1
+        self._recompute_geometry()
+        return SlicedEllState(
+            flat_idx=jnp.asarray(flat_idx), flat_w=jnp.asarray(flat_w),
+            fill=jnp.asarray(fill), base=jnp.asarray(self.base, jnp.int32),
+            rowk=jnp.asarray(self.rowk, jnp.int32),
+            osrc=jnp.asarray(osrc), odst=jnp.asarray(odst),
+            ow=jnp.asarray(ow))

@@ -14,9 +14,11 @@ Beyond-paper switches:
     invalidation+recompute epoch (union of affected subtrees; DESIGN.md §3).
   * ``use_doubling`` — pointer-doubling invalidation (default True; set False
     for the paper's wave-by-wave flood).
-  * ``relax_backend`` — "segment" (scatter-min over the COO pool) or
+  * ``relax_backend`` — "segment" (scatter-min over the COO pool),
     "ellpack" (dense gather + row-min over an incrementally maintained
-    ELLPACK block; the Pallas kernel's layout — DESIGN.md §2).
+    ELLPACK block; the Pallas kernel's layout — DESIGN.md §2), or
+    "sliced" (hub-aware hybrid: per-slice-width ELL + overflow COO lane
+    for power-law hubs — DESIGN.md §6).
 
 Host-sync rules (DESIGN.md §2.4): the ingest loop never blocks on device
 values.  Round/message stats accumulate in device scalars and are only read
@@ -42,7 +44,7 @@ from repro.core.stream import QueryResult, StreamEngineBase
 
 __all__ = ["EngineConfig", "QueryResult", "SSSPDelEngine", "RELAX_BACKENDS"]
 
-RELAX_BACKENDS = ("segment", "ellpack")
+RELAX_BACKENDS = ("segment", "ellpack", "sliced")
 
 
 @dataclasses.dataclass
@@ -58,6 +60,10 @@ class EngineConfig:
     ell_block_rows: int = 256   # relax-kernel row tile (rebuilds pad to this)
     ell_init_k: int = 8         # initial ELL width; doubles on overflow
     ell_use_kernel: bool | None = None  # None = Pallas kernel iff on TPU
+    # "sliced" backend knobs (DESIGN.md §6)
+    sliced_slice_rows: int = 256  # rows per degree slice (per-slice K)
+    sliced_hub_k: int = 32        # hub threshold: rows past it spill to COO
+    sliced_init_k: int = 2        # initial per-slice width; doubles at rebuild
 
 
 class SSSPDelEngine(StreamEngineBase):
@@ -77,14 +83,22 @@ class SSSPDelEngine(StreamEngineBase):
 
     def _init_ell(self) -> None:
         cfg = self.cfg
-        if cfg.relax_backend != "ellpack":
-            self.ellp = None
-            self.ell = None
+        self.ellp = None
+        self.ell = None
+        self.slicedp = None
+        self.sell = None
+        if cfg.relax_backend == "segment":
             return
-        self.ellp = ell_mod.EllPlanner(
-            cfg.num_vertices, block_rows=cfg.ell_block_rows,
-            init_k=cfg.ell_init_k)
-        self.ell = self.ellp.empty_state()
+        if cfg.relax_backend == "ellpack":
+            self.ellp = ell_mod.EllPlanner(
+                cfg.num_vertices, block_rows=cfg.ell_block_rows,
+                init_k=cfg.ell_init_k)
+            self.ell = self.ellp.empty_state()
+        else:  # "sliced"
+            self.slicedp = ell_mod.SlicedEllPlanner(
+                cfg.num_vertices, slice_rows=cfg.sliced_slice_rows,
+                hub_k=cfg.sliced_hub_k, init_k=cfg.sliced_init_k)
+            self.sell = self.slicedp.empty_state()
         on_tpu = jax.default_backend() == "tpu"
         self._ell_kernel = on_tpu if cfg.ell_use_kernel is None else cfg.ell_use_kernel
         self._ell_interpret = not on_tpu
@@ -108,6 +122,14 @@ class SSSPDelEngine(StreamEngineBase):
             self._ell_apply_adds(plan)
             sssp, stats = ell_mod.ell_relax_until_converged(
                 self.state.sssp, self.ell.nbr_idx, self.ell.nbr_w, frontier,
+                num_vertices=self.cfg.num_vertices,
+                use_kernel=self._ell_kernel, interpret=self._ell_interpret)
+        elif self.slicedp is not None:
+            self._sliced_apply_adds(plan)
+            sssp, stats = ell_mod.sliced_relax_until_converged(
+                self.state.sssp, self.sell, frontier,
+                widths=tuple(self.slicedp.widths),
+                slice_rows=self.slicedp.sr,
                 num_vertices=self.cfg.num_vertices,
                 use_kernel=self._ell_kernel, interpret=self._ell_interpret)
         else:
@@ -148,6 +170,39 @@ class SSSPDelEngine(StreamEngineBase):
                 self.ell, jnp.asarray(rows_p), jnp.asarray(src_p),
                 jnp.asarray(w_p))
 
+    def _sliced_apply_adds(self, plan: ingest.PlannedAdds) -> None:
+        """Incremental hybrid-layout maintenance for one ADD batch
+        (DESIGN.md §6).  Fresh edges get planner-assigned ELL cells or — for
+        rows at the hub threshold — overflow entries; weight-decreases
+        resolve their cell/entry on device.  Slice-width or overflow
+        exhaustion triggers a full rebuild from the host COO mirror (which
+        already contains this batch, so no patch follows)."""
+        fresh = plan.fresh
+        sp = self.slicedp.plan_appends(
+            plan.dst[fresh].astype(np.int64), plan.src[fresh], plan.w[fresh])
+        if sp is None:
+            self.sell = self.slicedp.rebuild(*self.alloc.active_coo())
+            return
+        if len(sp.pos):
+            pos_p, rows_p, kpos_p, src_p, w_p = ingest.pad_pow2(
+                sp.pos, sp.rows, sp.kpos, sp.src, sp.w)
+            self.sell = ell_mod.sliced_append(
+                self.sell, jnp.asarray(pos_p), jnp.asarray(rows_p),
+                jnp.asarray(kpos_p), jnp.asarray(src_p), jnp.asarray(w_p))
+        if len(sp.opos):
+            opos_p, osrc_p, orows_p, ow_p = ingest.pad_pow2(
+                sp.opos, sp.osrc, sp.orows, sp.ow)
+            self.sell = ell_mod.sliced_spill(
+                self.sell, jnp.asarray(opos_p), jnp.asarray(osrc_p),
+                jnp.asarray(orows_p), jnp.asarray(ow_p))
+        if not fresh.all():
+            upd = ~fresh
+            rows_p, src_p, w_p = ingest.pad_pow2(
+                plan.dst[upd], plan.src[upd], plan.w[upd])
+            self.sell = ell_mod.sliced_update_min(
+                self.sell, jnp.asarray(rows_p), jnp.asarray(src_p),
+                jnp.asarray(w_p), width=self.slicedp.max_width)
+
     # ------------------------------------------------------------------ dels
     def _ingest_dels(self, batch: ev.EventBatch) -> None:
         for gsrc, gdst in self._deletion_groups(batch):
@@ -168,6 +223,18 @@ class SSSPDelEngine(StreamEngineBase):
                     self.ell, jnp.asarray(pdst_p), jnp.asarray(psrc_p))
                 sssp, dstats = ell_mod.ell_invalidate_and_recompute(
                     self.state.sssp, self.ell.nbr_idx, self.ell.nbr_w, seed,
+                    num_vertices=self.cfg.num_vertices,
+                    use_doubling=self.cfg.use_doubling,
+                    use_kernel=self._ell_kernel,
+                    interpret=self._ell_interpret)
+            elif self.slicedp is not None:
+                self.sell = ell_mod.sliced_delete(
+                    self.sell, jnp.asarray(pdst_p), jnp.asarray(psrc_p),
+                    width=self.slicedp.max_width)
+                sssp, dstats = ell_mod.sliced_invalidate_and_recompute(
+                    self.state.sssp, self.sell, seed,
+                    widths=tuple(self.slicedp.widths),
+                    slice_rows=self.slicedp.sr,
                     num_vertices=self.cfg.num_vertices,
                     use_doubling=self.cfg.use_doubling,
                     use_kernel=self._ell_kernel,
@@ -225,3 +292,6 @@ class SSSPDelEngine(StreamEngineBase):
         if self.ellp is not None:
             self._init_ell()
             self.ell = self.ellp.rebuild(*self.alloc.active_coo())
+        elif self.slicedp is not None:
+            self._init_ell()
+            self.sell = self.slicedp.rebuild(*self.alloc.active_coo())

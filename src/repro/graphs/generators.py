@@ -82,17 +82,31 @@ def grid2d(rows: int, cols: int, *, bidirectional: bool = True,
     return n, src, dst, w
 
 
-def power_law_hubs(n: int, m: int, n_hubs: int = 3, *, seed: int = 0
+def power_law_hubs(n: int, m: int, n_hubs: int = 3, *, seed: int = 0,
+                   orientation: str = "out"
                    ) -> tuple[int, np.ndarray, np.ndarray, np.ndarray]:
-    """Hub-heavy digraph: ~30% of edges leave hubs, rest uniform."""
+    """Hub-heavy digraph: ~30% of edges touch a hub endpoint, rest uniform.
+
+    ``orientation="out"`` concentrates the hub mass on the *source* side
+    (high out-degree hubs — large reachable sets, the source-selection
+    regime).  ``"in"`` concentrates it on the *destination* side (high
+    in-degree hubs — the regime that stresses by-destination edge layouts:
+    dense ELL pads every row to the hub degree, the sliced/hybrid backend
+    exists for exactly this shape — DESIGN.md §6).  Both orientations draw
+    identical random streams, so "out" output is unchanged from before the
+    parameter existed.
+    """
+    assert orientation in ("out", "in"), orientation
     rng = np.random.default_rng(seed)
     hubs = rng.choice(n, n_hubs, replace=False)
     m_hub = m // 3
-    src = np.concatenate([
+    hub_end = np.concatenate([
         rng.choice(hubs, m_hub),
         rng.integers(0, n, m - m_hub),
     ])
-    dst = rng.integers(0, n, m)
+    uni_end = rng.integers(0, n, m)
+    src, dst = ((hub_end, uni_end) if orientation == "out"
+                else (uni_end, hub_end))
     keep = src != dst
     src, dst = src[keep], dst[keep]
     key = src * n + dst

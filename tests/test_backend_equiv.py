@@ -1,10 +1,13 @@
-"""Relaxation-backend equivalence: the ELLPACK backend must be a drop-in for
-the segment backend — bit-identical (dist, parent) on any dynamic stream, and
-both must satisfy the Dijkstra oracle at every query point (DESIGN.md §2.2).
+"""Relaxation-backend equivalence: the ELLPACK and sliced/hybrid backends
+must be drop-ins for the segment backend — bit-identical (dist, parent) on
+any dynamic stream, and all must satisfy the Dijkstra oracle at every query
+point (DESIGN.md §2.2, §6).
 
 The sweep crosses backend-relevant switches (doubling vs flood invalidation,
-batched vs per-event deletions) and runs with a deliberately tiny initial ELL
-width so the capacity-doubling rebuild path is exercised repeatedly.
+batched vs per-event deletions) and runs with deliberately tiny initial ELL
+widths / hub thresholds so the capacity-doubling rebuild path (dense), the
+per-slice doubling rebuilds AND the hub overflow-spill path (sliced) are all
+exercised repeatedly.
 
 The same contract extends across the *partition-count* axis: the sharded
 engine (core/dist_engine.py, DESIGN.md §5) must be bit-identical to both
@@ -19,6 +22,10 @@ from repro.core.dist_engine import ShardedEngineConfig, ShardedSSSPDelEngine
 from repro.core.engine import EngineConfig, SSSPDelEngine
 from repro.core.oracle import check_tree, edges_of_pool
 from repro.graphs import generators, window
+
+
+# tiny hub threshold + slice rows: many slices, frequent spills & rebuilds
+SLICED_KW = dict(sliced_slice_rows=32, sliced_hub_k=4, sliced_init_k=1)
 
 
 def _dynamic_stream(seed: int, *, n=90, m=520, delta=0.6):
@@ -50,6 +57,13 @@ def _oracle_check(eng: SSSPDelEngine, n: int, source: int):
         # the device fill marks must track the host planner's exactly
         np.testing.assert_array_equal(np.asarray(eng.ell.fill),
                                       eng.ellp.fill)
+    if getattr(eng, "sell", None) is not None:
+        from repro.core.ellpack import sliced_invariants
+        for k, ok in sliced_invariants(
+                eng.sell, width=eng.slicedp.max_width).items():
+            assert bool(ok), f"sliced invariant violated: {k}"
+        np.testing.assert_array_equal(np.asarray(eng.sell.fill),
+                                      eng.slicedp.fill)
     return q
 
 
@@ -63,14 +77,21 @@ def test_backends_bit_identical_on_dynamic_stream(use_doubling, batch_deletions)
                batch_deletions=batch_deletions, ell_init_k=2)
     seg = _run("segment", n, m, log, source, use_doubling=use_doubling,
                batch_deletions=batch_deletions)
+    sld = _run("sliced", n, m, log, source, use_doubling=use_doubling,
+               batch_deletions=batch_deletions, **SLICED_KW)
     q_ell = _oracle_check(ell, n, source)
     q_seg = _oracle_check(seg, n, source)
+    q_sld = _oracle_check(sld, n, source)
     np.testing.assert_array_equal(q_seg.dist, q_ell.dist)
     np.testing.assert_array_equal(q_seg.parent, q_ell.parent)
+    np.testing.assert_array_equal(q_seg.dist, q_sld.dist)
+    np.testing.assert_array_equal(q_seg.parent, q_sld.parent)
     # same waves, same improvements — the stats must agree too
-    assert seg.n_rounds == ell.n_rounds
-    assert seg.n_messages == ell.n_messages
+    assert seg.n_rounds == ell.n_rounds == sld.n_rounds
+    assert seg.n_messages == ell.n_messages == sld.n_messages
     assert ell.ellp.rebuilds >= 1, "rebuild path not exercised"
+    assert sld.slicedp.rebuilds >= 1, "sliced rebuild path not exercised"
+    assert sld.slicedp.spills >= 1, "hub overflow-spill path not exercised"
 
 
 def test_sharded_engine_joins_the_equivalence_contract():
@@ -102,13 +123,16 @@ def test_backends_identical_parents_under_pervasive_ties():
     log = window.sliding_window_stream(src, dst, w, window=300, delta=0.5,
                                        seed=21, query_every=400)
     res = {}
-    for backend in ("segment", "ellpack"):
+    for backend in ("segment", "ellpack", "sliced"):
         eng = SSSPDelEngine(EngineConfig(n, len(src) + 64, 2,
-                                         relax_backend=backend, ell_init_k=2))
+                                         relax_backend=backend, ell_init_k=2,
+                                         **SLICED_KW))
         eng.ingest_log(log)
         res[backend] = _oracle_check(eng, n, 2)
-    np.testing.assert_array_equal(res["segment"].dist, res["ellpack"].dist)
-    np.testing.assert_array_equal(res["segment"].parent, res["ellpack"].parent)
+    for backend in ("ellpack", "sliced"):
+        np.testing.assert_array_equal(res["segment"].dist, res[backend].dist)
+        np.testing.assert_array_equal(res["segment"].parent,
+                                      res[backend].parent)
 
 
 def test_capacity_doubling_under_degree_growth():
@@ -151,35 +175,42 @@ def test_ellpack_min_duplicate_policy_matches_segment():
     # as weight-decreases under on_duplicate="min" in both backends
     n = 8
     res = {}
-    for backend in ("segment", "ellpack"):
-        eng = SSSPDelEngine(EngineConfig(n, 32, 0, relax_backend=backend,
-                                         on_duplicate="min", ell_init_k=2))
+    for backend in ("segment", "ellpack", "sliced"):
+        eng = SSSPDelEngine(EngineConfig(
+            n, 32, 0, relax_backend=backend, on_duplicate="min",
+            ell_init_k=2, sliced_slice_rows=4, sliced_hub_k=2,
+            sliced_init_k=1))
         eng.ingest_log(ev.adds([0, 1, 0, 0], [1, 2, 2, 1],
                                [4.0, 1.0, 9.0, 2.0]))
         eng.ingest_log(ev.adds([0], [1], [1.0]))   # decrease 0->1 to 1.0
         eng.ingest_log(ev.adds([0], [2], [20.0]))  # increase is dropped
         res[backend] = _oracle_check(eng, n, 0)
-    np.testing.assert_array_equal(res["segment"].dist, res["ellpack"].dist)
-    np.testing.assert_array_equal(res["segment"].parent, res["ellpack"].parent)
+    for backend in ("ellpack", "sliced"):
+        np.testing.assert_array_equal(res["segment"].dist, res[backend].dist)
+        np.testing.assert_array_equal(res["segment"].parent,
+                                      res[backend].parent)
     assert res["segment"].dist[2] == pytest.approx(2.0)
 
 
-def test_ellpack_checkpoint_restore_roundtrip():
+@pytest.mark.parametrize("backend", ["ellpack", "sliced"])
+def test_ell_backends_checkpoint_restore_roundtrip(backend):
     n, m, log = _dynamic_stream(seed=9)
-    eng = SSSPDelEngine(EngineConfig(n, m + 64, 0, relax_backend="ellpack",
-                                     ell_init_k=2))
+    eng = SSSPDelEngine(EngineConfig(n, m + 64, 0, relax_backend=backend,
+                                     ell_init_k=2, **SLICED_KW))
     half = len(log) // 2
     eng.ingest_log(log[:half])
     ckpt = eng.checkpoint()
     eng.ingest_log(log[half:])
     want = eng.query()
 
-    eng2 = SSSPDelEngine(EngineConfig(n, m + 64, 0, relax_backend="ellpack"))
+    eng2 = SSSPDelEngine(EngineConfig(n, m + 64, 0, relax_backend=backend,
+                                      **SLICED_KW))
     eng2.restore(ckpt)
     eng2.ingest_log(log[half:])
     got = eng2.query()
     np.testing.assert_array_equal(want.dist, got.dist)
     np.testing.assert_array_equal(want.parent, got.parent)
+    _oracle_check(eng2, n, 0)
 
 
 def test_arch_config_bridges_backend_selection():
@@ -193,11 +224,50 @@ def test_arch_config_bridges_backend_selection():
     _oracle_check(eng, 64, 0)
 
 
-def test_ellpack_non_tree_deletion_is_free():
+@pytest.mark.parametrize("backend", ["ellpack", "sliced"])
+def test_ell_backends_non_tree_deletion_is_free(backend):
     n = 6
-    eng = SSSPDelEngine(EngineConfig(n, 64, 0, relax_backend="ellpack"))
+    eng = SSSPDelEngine(EngineConfig(n, 64, 0, relax_backend=backend,
+                                     **SLICED_KW))
     eng.ingest_log(ev.adds([0, 0, 1], [1, 2, 2], [1.0, 1.0, 5.0]))
     rounds_before = eng.n_rounds
     eng.ingest_log(ev.dels([1], [2]))  # not a tree edge (0->2 is shorter)
     assert eng.n_rounds == rounds_before  # stats stay zero without a host sync
     _oracle_check(eng, n, 0)
+
+
+def test_backends_bit_identical_on_power_law_hub_stream():
+    """The sliced backend's home turf (DESIGN.md §6): a mixed ADD/DEL/QUERY
+    stream over in-degree power-law hubs, where dense ELL's global K blows
+    up and hub rows run through BOTH lanes (slice cells + overflow).  All
+    three backends must stay bit-identical in (dist, parent) and stats, and
+    the unit weights make equal-cost predecessors pervasive."""
+    n, m = 128, 1100
+    nv, src, dst, w = generators.power_law_hubs(n, m, n_hubs=3, seed=31,
+                                                orientation="in")
+    source = int(np.bincount(dst, minlength=nv).argmax())  # a hub
+    log = window.sliding_window_stream(src, dst, w, window=len(src) // 3,
+                                       delta=0.5, seed=31,
+                                       query_every=len(src) // 2)
+    res = {}
+    for backend in ("segment", "ellpack", "sliced"):
+        eng = SSSPDelEngine(EngineConfig(
+            nv, len(src) + 64, source, relax_backend=backend, ell_init_k=2,
+            sliced_slice_rows=32, sliced_hub_k=8, sliced_init_k=1))
+        eng.ingest_log(log)
+        res[backend] = (_oracle_check(eng, nv, source), eng)
+    q_seg, seg = res["segment"]
+    for backend in ("ellpack", "sliced"):
+        q, eng = res[backend]
+        np.testing.assert_array_equal(q_seg.dist, q.dist)
+        np.testing.assert_array_equal(q_seg.parent, q.parent)
+        assert seg.n_rounds == eng.n_rounds
+        assert seg.n_messages == eng.n_messages
+    sld = res["sliced"][1]
+    assert sld.slicedp.spills >= 1 or sld.slicedp.ofill > 0, \
+        "hub stream never touched the overflow lane"
+    # the hybrid stores far fewer device values than the dense block it
+    # replaces (ELL cell = idx+w, overflow entry = src+dst+w)
+    dense_vals = 2 * res["ellpack"][1].ell.nbr_w.size
+    hybrid_vals = 2 * sld.sell.flat_w.size + 3 * sld.sell.ow.size
+    assert hybrid_vals < dense_vals, (hybrid_vals, dense_vals)

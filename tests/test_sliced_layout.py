@@ -1,0 +1,212 @@
+"""Host-side sliced-ELL layout builders (graphs/csr.py): edge cases and
+round-trips.
+
+``csr_to_sliced_ell`` (list-of-blocks form, per-slice K) and
+``sliced_ell_from_coo`` (flat hybrid form with hub overflow — the device
+layout of the "sliced" relaxation backend, DESIGN.md §6) must both encode
+exactly the input edge set: every (src, dst, w) present once, every other
+cell inert (+inf).
+"""
+import numpy as np
+import pytest
+
+from repro.graphs import csr, generators
+
+
+def _edge_set(src, dst, w):
+    return {(int(s), int(d), float(np.float32(x)))
+            for s, d, x in zip(src, dst, w)}
+
+
+def _decode_sliced_blocks(blocks):
+    """Edges encoded by csr_to_sliced_ell's (row_offset, idx, w) blocks."""
+    out = set()
+    for r0, idx, ww in blocks:
+        rows, kpos = np.nonzero(np.isfinite(ww))
+        for r, k in zip(rows, kpos):
+            out.add((int(idx[r, k]), int(r0 + r), float(ww[r, k])))
+    return out
+
+
+def _decode_flat(flat_idx, flat_w, widths, slice_rows, osrc, odst, ow):
+    """Edges encoded by sliced_ell_from_coo's flat + overflow arrays."""
+    out = set()
+    off = 0
+    for s, k in enumerate(widths):
+        idx = flat_idx[off:off + slice_rows * k].reshape(slice_rows, k)
+        ww = flat_w[off:off + slice_rows * k].reshape(slice_rows, k)
+        rows, kpos = np.nonzero(np.isfinite(ww))
+        for r, c in zip(rows, kpos):
+            out.add((int(idx[r, c]), int(s * slice_rows + r),
+                     float(ww[r, c])))
+        off += slice_rows * k
+    live = np.isfinite(ow)
+    for s, d, x in zip(osrc[live], odst[live], ow[live]):
+        out.add((int(s), int(d), float(x)))
+    return out
+
+
+def _random_coo(n, m, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, 3 * m)
+    dst = rng.integers(0, n, 3 * m)
+    keep = src != dst
+    key = src[keep] * n + dst[keep]
+    _, idx = np.unique(key, return_index=True)
+    src, dst = src[keep][idx][:m], dst[keep][idx][:m]
+    w = rng.random(len(src)).astype(np.float32) + 0.1
+    return src, dst, w
+
+
+# ------------------------------------------------------- csr_to_sliced_ell --
+def test_sliced_ell_empty_rows():
+    # rows 0, 2, 4 have in-edges; 1, 3, 5..7 are empty
+    n = 8
+    src = np.array([1, 3, 5], np.int64)
+    dst = np.array([0, 2, 4], np.int64)
+    w = np.array([1.0, 2.0, 3.0], np.float32)
+    indptr, cols, ws, _ = csr.coo_to_csr(n, src, dst, w)
+    blocks = csr.csr_to_sliced_ell(n, indptr, cols, ws, slice_rows=4)
+    assert len(blocks) == 2
+    assert _decode_sliced_blocks(blocks) == _edge_set(src, dst, w)
+    # per-slice K adapts to the slice's own max degree (here 1 everywhere)
+    assert all(blk[1].shape[1] == 1 for blk in blocks)
+
+
+def test_sliced_ell_totally_empty_graph():
+    n = 5
+    indptr = np.zeros(n + 1, np.int64)
+    blocks = csr.csr_to_sliced_ell(n, indptr, np.empty(0, np.int64),
+                                   np.empty(0, np.float32), slice_rows=4)
+    assert _decode_sliced_blocks(blocks) == set()
+    assert all(np.isinf(blk[2]).all() for blk in blocks)
+
+
+def test_sliced_ell_single_slice():
+    n, m = 10, 30
+    src, dst, w = _random_coo(n, m, seed=3)
+    indptr, cols, ws, _ = csr.coo_to_csr(n, src, dst, w)
+    blocks = csr.csr_to_sliced_ell(n, indptr, cols, ws, slice_rows=256)
+    assert len(blocks) == 1 and blocks[0][0] == 0
+    assert _decode_sliced_blocks(blocks) == _edge_set(src, dst, w)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("slice_rows", [4, 32])
+def test_sliced_ell_roundtrip_vs_ell_from_coo(seed, slice_rows):
+    """Both layouts must encode the identical edge set on random COO."""
+    n, m = 40, 150
+    src, dst, w = _random_coo(n, m, seed=seed)
+    indptr, cols, ws, _ = csr.coo_to_csr(n, src, dst, w)
+    blocks = csr.csr_to_sliced_ell(n, indptr, cols, ws,
+                                   slice_rows=slice_rows)
+
+    deg = np.diff(indptr)
+    idx, ww, fill = csr.ell_from_coo(n, src, dst, w, k=int(deg.max()))
+    dense = set()
+    rows, kpos = np.nonzero(np.isfinite(ww))
+    for r, k in zip(rows, kpos):
+        dense.add((int(idx[r, k]), int(r), float(ww[r, k])))
+
+    assert _decode_sliced_blocks(blocks) == dense == _edge_set(src, dst, w)
+    np.testing.assert_array_equal(fill[:n], deg)
+    # sliced padding never exceeds dense padding
+    sliced_cells = sum(blk[1].size for blk in blocks)
+    assert sliced_cells <= idx.size
+
+
+# ------------------------------------------------------ sliced_ell_from_coo --
+def test_flat_hybrid_roundtrip_and_hub_split():
+    n, m = 64, 400
+    src, dst, w = _random_coo(n, m, seed=7)
+    out = csr.sliced_ell_from_coo(n, src, dst, w, slice_rows=16, hub_k=4)
+    flat_idx, flat_w, fill, widths, osrc, odst, ow, n_over = out
+    assert _decode_flat(flat_idx, flat_w, widths, 16, osrc, odst, ow) \
+        == _edge_set(src, dst, w)
+    deg = np.bincount(dst, minlength=n)
+    # fill is the capped in-degree; surplus lives in overflow
+    np.testing.assert_array_equal(fill[:n], np.minimum(deg, 4))
+    assert n_over == int(np.maximum(deg - 4, 0).sum())
+    assert all(k <= 4 for k in widths)
+
+
+def test_flat_hybrid_all_vertices_hubs():
+    """Every vertex past the hub threshold: ELL holds exactly hub_k edges
+    per row, everything else spills to overflow."""
+    n, hub_k = 6, 2
+    # complete digraph minus self-loops: in-degree 5 > hub_k everywhere
+    src, dst = np.nonzero(~np.eye(n, dtype=bool))
+    w = (1.0 + np.arange(len(src))).astype(np.float32)
+    out = csr.sliced_ell_from_coo(n, src, dst, w, slice_rows=4,
+                                  hub_k=hub_k)
+    flat_idx, flat_w, fill, widths, osrc, odst, ow, n_over = out
+    assert _decode_flat(flat_idx, flat_w, widths, 4, osrc, odst, ow) \
+        == _edge_set(src, dst, w)
+    np.testing.assert_array_equal(fill[:n], hub_k)
+    assert n_over == n * (n - 1) - n * hub_k
+    assert widths == [hub_k, hub_k]
+
+
+def test_flat_hybrid_empty_and_width_overrides():
+    n = 10
+    z = np.empty(0, np.int64)
+    out = csr.sliced_ell_from_coo(n, z, z, np.empty(0, np.float32),
+                                  slice_rows=8, hub_k=8,
+                                  widths=[4, 2], overflow_capacity=16)
+    flat_idx, flat_w, fill, widths, osrc, odst, ow, n_over = out
+    assert widths == [4, 2] and n_over == 0
+    assert len(flat_w) == 8 * 4 + 8 * 2 and np.isinf(flat_w).all()
+    assert len(ow) == 16 and np.isinf(ow).all()
+    assert fill.sum() == 0
+
+
+def test_flat_hybrid_power_law_padding_win():
+    """The reason the layout exists: on in-degree power-law graphs the flat
+    hybrid stores far fewer cells than dense ELL."""
+    n, m = 256, 2560
+    nv, src, dst, w = generators.power_law_hubs(n, m, n_hubs=3, seed=5,
+                                                orientation="in")
+    deg = np.bincount(dst, minlength=nv)
+    out = csr.sliced_ell_from_coo(nv, src, dst, w, slice_rows=32, hub_k=16)
+    flat_idx, flat_w, fill, widths, osrc, odst, ow, n_over = out
+    assert _decode_flat(flat_idx, flat_w, widths, 32, osrc, odst, ow) \
+        == _edge_set(src, dst, w)
+    dense_cells = -(-nv // 32) * 32 * int(deg.max())
+    hybrid_cells = len(flat_idx) + len(ow)
+    assert hybrid_cells < dense_cells / 4, (hybrid_cells, dense_cells)
+
+
+def test_sliced_kernel_path_tiles_merged_runs():
+    """9 equal-width 32-row slices merge into a 288-row wave block, which
+    the Pallas kernel path must split to satisfy its 256-row tiling
+    (regression: AssertionError (288, 256) inside ellpack_relax)."""
+    import numpy as np
+    from repro.core import events as ev
+    from repro.core.engine import EngineConfig, SSSPDelEngine
+    from repro.core.oracle import check_tree, edges_of_pool
+
+    n = 288
+    eng = SSSPDelEngine(EngineConfig(n, 1024, 0, relax_backend="sliced",
+                                     sliced_slice_rows=32, sliced_hub_k=4,
+                                     sliced_init_k=1, ell_use_kernel=True))
+    src = np.arange(n - 1)
+    dst = np.arange(1, n)
+    eng.ingest_log(ev.adds(src, dst, np.ones(n - 1, np.float32)))
+    eng.ingest_log(ev.dels([10], [11]))   # cuts the path: 11.. unreachable
+    q = eng.query()
+    e = eng.state.edges
+    es, ed, ew = edges_of_pool(e.src, e.dst, e.w, e.active)
+    check_tree(n, es, ed, ew, 0, q.dist, q.parent)
+    assert q.dist[10] == 10.0 and np.isinf(q.dist[11])
+
+
+def test_power_law_hubs_orientation():
+    n, m = 128, 1280
+    _, so, do, wo = generators.power_law_hubs(n, m, seed=4)  # default "out"
+    _, si, di, wi = generators.power_law_hubs(n, m, seed=4, orientation="in")
+    # identical draws, swapped roles: the "in" stream is the transpose
+    np.testing.assert_array_equal(so, di)
+    np.testing.assert_array_equal(do, si)
+    np.testing.assert_array_equal(wo, wi)
+    assert np.bincount(di, minlength=n).max() \
+        > 4 * np.bincount(do, minlength=n).max()
