@@ -240,13 +240,14 @@ def backend_shootout(sink: C.CsvSink, small: bool) -> None:
                 q_lat[b].append(eng.query().latency_s)
         for backend, eng in engines.items():
             _check_oracle(eng, sink, "backend_shootout_oracle")
+            planner = getattr(eng.backend, "planner", None)
             sink.emit("backend_shootout", dataset="er", n=nv, edges=m,
                       delta=delta, backend=backend, events=len(log),
                       events_per_s=round(eps[backend], 1),
                       query_p50_ms=round(C.pctile(q_lat[backend][5:], 50) * 1e3, 4),
                       rounds=eng.n_rounds,
-                      ell_rebuilds=getattr(eng.ellp, "rebuilds", 0),
-                      ell_k=getattr(eng.ellp, "k", 0))
+                      ell_rebuilds=getattr(planner, "rebuilds", 0),
+                      ell_k=getattr(planner, "k", 0))
         sink.emit("backend_shootout_summary", delta=delta,
                   ell_speedup=round(eps["ellpack"] / eps["segment"], 3))
 
@@ -304,24 +305,23 @@ def hub_shootout(sink: C.CsvSink, small: bool) -> None:
                 q_lat[b].append(eng.query().latency_s)
         # layout memory proxy in 32-bit VALUES, not cells: an ELL cell is
         # (idx, w) = 2, an overflow/pool entry (src, dst, w) = 3
-        sell = engines["sliced"].sell
+        sell = engines["sliced"].backend.state
         cells = {
             "segment": 3 * (m + 64),
-            "ellpack": 2 * int(engines["ellpack"].ell.nbr_w.size),
+            "ellpack": 2 * int(engines["ellpack"].backend.state.nbr_w.size),
             "sliced": 2 * int(sell.flat_w.size) + 3 * int(sell.ow.size),
         }
         for backend, eng in engines.items():
             _check_oracle(eng, sink, "hub_shootout_oracle")
-            sp = getattr(eng, "slicedp", None)
+            planner = getattr(eng.backend, "planner", None)
             sink.emit("hub_shootout", dataset="plaw", n=nv, edges=m,
                       max_indeg=max_indeg, delta=delta, backend=backend,
                       events=len(log), events_per_s=round(eps[backend], 1),
                       query_p50_ms=round(
                           C.pctile(q_lat[backend][5:], 50) * 1e3, 4),
                       rounds=eng.n_rounds, device_values=cells[backend],
-                      spills=getattr(sp, "spills", 0),
-                      rebuilds=getattr(sp, "rebuilds",
-                                       getattr(eng.ellp, "rebuilds", 0)))
+                      spills=getattr(planner, "spills", 0),
+                      rebuilds=getattr(planner, "rebuilds", 0))
         sink.emit("hub_shootout_summary", delta=delta,
                   sliced_vs_segment=round(eps["sliced"] / eps["segment"], 3),
                   sliced_vs_ellpack=round(eps["sliced"] / eps["ellpack"], 3),
@@ -336,6 +336,11 @@ def dist_engine(sink: C.CsvSink, small: bool) -> None:
     8 when the process is started with forced host devices), so on one
     device this measures the pure sharding overhead: shard_map epochs plus
     per-partition host planning, with bit-identical results as the gate.
+
+    Second half (DESIGN.md §7.2): the three relaxation backends ON the
+    sharded engine, racing ingest over an in-degree power-law hub stream —
+    sharded-sliced must hold >= 0.95x sharded-segment with the three-way
+    parity record intact.
     """
     import jax
     from repro.core.dist_engine import (ShardedEngineConfig,
@@ -392,6 +397,71 @@ def dist_engine(sink: C.CsvSink, small: bool) -> None:
                       rounds=eng.n_rounds)
         sink.emit("dist_engine_summary", delta=delta, parts=n_parts,
                   sharded_vs_single=round(eps["sharded"] / eps["single"], 3),
+                  identical=True)
+
+    # --- per-backend sharded ingest on an in-degree power-law hub stream
+    # (DESIGN.md §7.2): the sliced layout's win must survive sharding.  The
+    # gate (benchmarks/check_regression.py) is sharded-sliced ingest >=
+    # 0.95x sharded-segment plus the three-way bit-parity record below.
+    nh = (1 << 10) if small else (1 << 12)
+    mh = 8 * nh
+    nv, src, dst, w = gen.power_law_hubs(nh, mh, n_hubs=4, seed=23,
+                                         orientation="in")
+    source = int(gen.top_in_degree_sources(nv, dst, 1)[0])
+    backends = ("segment", "ellpack", "sliced")
+    for delta in (0.1, 0.5):
+        log = C.stream_for(
+            C.Dataset("plaw", nv, src, dst, w,
+                      gen.top_in_degree_sources(nv, dst)),
+            window_frac=1 / 3, delta=delta, query_every=10**9)
+        eps = {}
+        engines = {}
+        for backend in backends:
+            # best-of-2 timed passes after a warming pass (one-sided noise
+            # only slows a pass down; best-of is the stable ratio estimator)
+            rates = []
+            for timed in (False, True, True):
+                eng = ShardedSSSPDelEngine(ShardedEngineConfig(
+                    num_vertices=nv, edges_per_part=mh + 64, source=source,
+                    relax_backend=backend))
+                t0 = time.perf_counter()
+                eng.ingest_log(log)
+                jax.block_until_ready(eng.dist)
+                if timed:
+                    rates.append(len(log) / (time.perf_counter() - t0))
+            eps[backend] = max(rates)
+            engines[backend] = eng
+        res = {b: e.query() for b, e in engines.items()}
+        # the three-way sharded parity record — asserted in-run, gated in
+        # check_regression via the summary row
+        for other in ("ellpack", "sliced"):
+            np.testing.assert_array_equal(res["segment"].dist,
+                                          res[other].dist)
+            np.testing.assert_array_equal(res["segment"].parent,
+                                          res[other].parent)
+        # parity alone can't catch a bug shared by all three sharded
+        # engines — anchor the trio against the Dijkstra oracle over the
+        # live edge set (from the per-partition host mirrors)
+        coo = [a.active_coo() for a in engines["segment"].allocs]
+        e_src, e_dst, e_w = (np.concatenate([c[i] for c in coo])
+                             for i in range(3))
+        dist_ref, _ = oracle.dijkstra(nv, e_src, e_dst, e_w, source)
+        ok = bool(np.allclose(
+            np.where(np.isfinite(res["segment"].dist),
+                     res["segment"].dist, -1),
+            np.where(np.isfinite(dist_ref), dist_ref, -1),
+            rtol=1e-5, atol=1e-5))
+        sink.emit("dist_engine_backends_oracle", delta=delta, oracle_match=ok)
+        assert ok, "sharded backends diverged from Dijkstra oracle"
+        for backend, eng in engines.items():
+            sink.emit("dist_engine", dataset="plaw", n=nv, edges=mh,
+                      parts=n_parts, delta=delta,
+                      engine=f"sharded-{backend}", events=len(log),
+                      events_per_s=round(eps[backend], 1),
+                      rounds=eng.n_rounds)
+        sink.emit("dist_engine_backends_summary", delta=delta, parts=n_parts,
+                  sliced_vs_segment=round(eps["sliced"] / eps["segment"], 3),
+                  ellpack_vs_segment=round(eps["ellpack"] / eps["segment"], 3),
                   identical=True)
 
 

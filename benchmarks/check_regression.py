@@ -19,6 +19,10 @@ Gates (per delta value found in the section):
   * dist_engine — the summary row must report ``identical=True``
     (sharded == single bit-parity was asserted in-run); at P=1 the sharded
     ingest must hold >= 0.9x single-device (pure sharding overhead bound).
+    The per-backend half gates sharded-sliced ingest >= 0.95x
+    sharded-segment on the power-law hub stream and requires the three-way
+    sharded parity record (``dist_engine_backends_summary``) to be present
+    and true.
 """
 from __future__ import annotations
 
@@ -112,6 +116,27 @@ def gate_dist_engine(records: list[dict]) -> list[str]:
                           f"single < required 0.9x")
         print(f"dist_engine delta={d} P={parts}: sharded/single ingest "
               f"{ratio:.2f}x, identical={s.get('identical')}")
+    # per-backend sharded ingest on the power-law hub stream (DESIGN.md
+    # §7.2): the three-way parity record must be present and true, and
+    # sharded-sliced must hold the hub-stream ingest floor vs
+    # sharded-segment
+    bk_summaries = _rows(records, "dist_engine_backends_summary")
+    if not bk_summaries:
+        return errors + ["dist_engine: no sharded per-backend records found "
+                         "(dist_engine_backends_summary)"]
+    for s in bk_summaries:
+        d = s["delta"]
+        if str(s.get("identical")) != "True":
+            errors.append(f"dist_engine backends d={d}: three-way sharded "
+                          f"parity record missing or false: "
+                          f"identical={s.get('identical')}")
+        ing = _ratio_gate(errors,
+                          f"dist_engine backends d={d} sliced/seg ingest",
+                          float(by[(d, "sharded-sliced")]["events_per_s"]),
+                          float(by[(d, "sharded-segment")]["events_per_s"]),
+                          floor=0.95)
+        print(f"dist_engine backends delta={d}: sharded sliced/segment "
+              f"ingest {ing:.2f}x, identical={s.get('identical')}")
     return errors
 
 

@@ -1,5 +1,5 @@
 """Streaming SSSP over a sliding-window event stream, sharded across the
-local device mesh (DESIGN.md §5).
+local device mesh (DESIGN.md §5, §7.2).
 
 Run: PYTHONPATH=src python examples/sharded_streaming_sssp.py [--delta 0.3]
 
@@ -8,12 +8,24 @@ Multi-partition on one host (8 forced host devices):
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/sharded_streaming_sssp.py
 
+Pick a relaxation backend (one RelaxBackend protocol serves both engines —
+the sharded engine runs one shard-local layout per partition and plugs its
+wave into the shard_map epochs):
+
+    # portable COO scatter-min (default)
+    ... sharded_streaming_sssp.py --backend segment
+    # incrementally maintained dense ELL block (DESIGN.md §2)
+    ... sharded_streaming_sssp.py --backend ellpack
+    # hub-aware sliced-ELL + overflow hybrid for power-law in-degree
+    # graphs (DESIGN.md §6) — pair with --hubs for its target workload
+    ... sharded_streaming_sssp.py --backend sliced --hubs
+
 Replays an RMAT stream with windowed deletions through the sharded engine
 (vertex partition = all local devices flattened), reports the paper's
 metrics plus the per-partition edge-pool fill, and cross-checks the final
-tree bit-for-bit against the single-device engine.  ``--balanced`` relabels
-vertices so shards own ~equal in-edge mass (power-law hubs otherwise load a
-single shard).
+tree bit-for-bit against the single-device engine *running the same
+backend*.  ``--balanced`` relabels vertices so shards own ~equal in-edge
+mass (power-law hubs otherwise load a single shard).
 """
 import argparse
 import time
@@ -24,7 +36,7 @@ import jax
 
 from repro.core import events as ev
 from repro.core.dist_engine import ShardedEngineConfig, ShardedSSSPDelEngine
-from repro.core.engine import EngineConfig, SSSPDelEngine
+from repro.core.engine import RELAX_BACKENDS, EngineConfig, SSSPDelEngine
 from repro.graphs import generators as gen
 from repro.graphs import partition as part_mod
 from repro.graphs import window as win
@@ -37,12 +49,23 @@ def main():
     p.add_argument("--window-frac", type=float, default=0.3)
     p.add_argument("--exchange", choices=("allgather", "delta"),
                    default="allgather")
+    p.add_argument("--backend", choices=RELAX_BACKENDS, default="segment",
+                   help="relaxation backend for BOTH engines "
+                        "(core/backends/, DESIGN.md §7)")
+    p.add_argument("--hubs", action="store_true",
+                   help="in-degree power-law hub graph instead of RMAT "
+                        "(the sliced backend's target workload)")
     p.add_argument("--balanced", action="store_true",
                    help="edge-balanced vertex relabeling "
                         "(graphs/partition.edge_balanced_relabeling)")
     args = p.parse_args()
 
-    n, src, dst, w = gen.rmat(args.scale, edge_factor=8, seed=7)
+    if args.hubs:
+        n, src, dst, w = gen.power_law_hubs(1 << args.scale,
+                                            8 << args.scale, n_hubs=4,
+                                            seed=7, orientation="in")
+    else:
+        n, src, dst, w = gen.rmat(args.scale, edge_factor=8, seed=7)
     source = int(gen.top_in_degree_sources(n, dst)[0])
     window = int(len(src) * args.window_frac)
     log = win.sliding_window_stream(src, dst, w, window=window,
@@ -50,7 +73,7 @@ def main():
     log = ev.interleave_queries(log, window // 10)
     parts = len(jax.devices())
     print(f"graph: n={n} stream={len(log)} events (delta={args.delta}) "
-          f"source={source} partitions={parts}")
+          f"source={source} partitions={parts} backend={args.backend}")
 
     relabel = None
     if args.balanced:
@@ -58,7 +81,8 @@ def main():
 
     epp = int(len(src) * 1.3) // max(parts // 2, 1) + 64
     eng = ShardedSSSPDelEngine(
-        ShardedEngineConfig(n, epp, source, exchange=args.exchange),
+        ShardedEngineConfig(n, epp, source, exchange=args.exchange,
+                            relax_backend=args.backend),
         relabel=relabel)
     lat, stab = [], []
     t0 = time.perf_counter()
@@ -79,7 +103,9 @@ def main():
           f"max={fill.max()} imbalance={fill.max()/max(fill.mean(), 1):.2f}x")
 
     # cross-check: the sharded run must equal the single-device engine
-    ref = SSSPDelEngine(EngineConfig(n, int(len(src) * 1.3) + 64, source))
+    # running the same relaxation backend
+    ref = SSSPDelEngine(EngineConfig(n, int(len(src) * 1.3) + 64, source,
+                                     relax_backend=args.backend))
     ref.ingest_log(log)
     q_ref, q = ref.query(), eng.query()
     np.testing.assert_array_equal(q_ref.dist, q.dist)

@@ -17,18 +17,32 @@ class SSSPArchConfig:
     edges_per_part: int
     exchange: str = "allgather"   # paper-faithful; "delta" = beyond-paper
     delta_cap: int = 4096
-    # Relaxation backend for the single-host engine (DESIGN.md §2, §6):
-    # "segment" = COO scatter-min (portable default); "ellpack" = dense
-    # gather + row-min over the incrementally maintained ELLPACK block
-    # (the Pallas kernel's layout — bounded-degree fast path); "sliced" =
-    # hub-aware hybrid (per-slice-width ELL + overflow COO lane) for
-    # power-law in-degree graphs.
+    # Relaxation backend — one RelaxBackend name for BOTH engines
+    # (core/backends/, DESIGN.md §2, §6, §7): "segment" = COO scatter-min
+    # (portable default); "ellpack" = dense gather + row-min over the
+    # incrementally maintained ELLPACK block (the Pallas kernel's layout —
+    # bounded-degree fast path); "sliced" = hub-aware hybrid
+    # (per-slice-width ELL + overflow COO lane) for power-law in-degree
+    # graphs.  The sharded engine runs the same backend per partition.
     relax_backend: str = "segment"
     ell_block_rows: int = 256
     ell_init_k: int = 8
     sliced_slice_rows: int = 256
     sliced_hub_k: int = 32
     sliced_init_k: int = 2
+
+    def _backend_kw(self) -> dict:
+        """Only forward knobs the selected backend accepts — construction
+        validates that cross-backend knobs stay at their defaults."""
+        kw = dict(relax_backend=self.relax_backend)
+        if self.relax_backend == "ellpack":
+            kw.update(ell_block_rows=self.ell_block_rows,
+                      ell_init_k=self.ell_init_k)
+        elif self.relax_backend == "sliced":
+            kw.update(sliced_slice_rows=self.sliced_slice_rows,
+                      sliced_hub_k=self.sliced_hub_k,
+                      sliced_init_k=self.sliced_init_k)
+        return kw
 
     def engine_config(self, *, edge_capacity: int, source: int, **overrides):
         """Bridge to the single-host engine: an ``EngineConfig`` carrying
@@ -37,14 +51,21 @@ class SSSPArchConfig:
         from repro.core.engine import EngineConfig
         kw = dict(num_vertices=self.num_vertices,
                   edge_capacity=edge_capacity, source=source,
-                  relax_backend=self.relax_backend,
-                  ell_block_rows=self.ell_block_rows,
-                  ell_init_k=self.ell_init_k,
-                  sliced_slice_rows=self.sliced_slice_rows,
-                  sliced_hub_k=self.sliced_hub_k,
-                  sliced_init_k=self.sliced_init_k)
+                  **self._backend_kw())
         kw.update(overrides)
         return EngineConfig(**kw)
+
+    def sharded_engine_config(self, *, source: int, **overrides):
+        """Bridge to the sharded engine: a ``ShardedEngineConfig`` carrying
+        this arch config's backend selection, exchange strategy and
+        per-partition pool capacity."""
+        from repro.core.dist_engine import ShardedEngineConfig
+        kw = dict(num_vertices=self.num_vertices,
+                  edges_per_part=self.edges_per_part, source=source,
+                  exchange=self.exchange, delta_cap=self.delta_cap,
+                  **self._backend_kw())
+        kw.update(overrides)
+        return ShardedEngineConfig(**kw)
 
 
 CONFIG = SSSPArchConfig(name=ARCH_ID, num_vertices=1 << 24,

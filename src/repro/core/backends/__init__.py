@@ -1,0 +1,40 @@
+"""Relaxation backends for the dynamic engines (DESIGN.md §7).
+
+One ``RelaxBackend`` = layout state + host planner + jitted patch ops +
+wave computation + rebuild policy + checkpoint participation.  Importing
+this package populates the registries with the three stock backends:
+
+  * ``segment`` — portable COO scatter-min (backends/segment.py);
+  * ``ellpack`` — dense by-destination ELL block, incrementally maintained
+    (backends/ellpack.py, DESIGN.md §2);
+  * ``sliced``  — hub-aware sliced-ELL + overflow-COO hybrid
+    (backends/sliced.py, DESIGN.md §6).
+
+``SSSPDelEngine`` consumes single-device backends via ``make_backend``;
+``ShardedSSSPDelEngine`` consumes their sharded coordinators via
+``make_sharded_backend`` (one shard-local planner per partition, globally
+sharded layout arrays, per-partition wave plugged into the shard_map
+epochs).
+"""
+from repro.core.backends.base import (BACKENDS, SHARDED_BACKENDS,
+                                      RelaxBackend, ShardedBackend,
+                                      make_backend, make_sharded_backend,
+                                      validate_backend_config)
+from repro.core.backends.segment import SegmentBackend, shard_segment_wave
+from repro.core.backends.ellpack import (EllPlanner, EllState, EllpackBackend,
+                                         ell_append, ell_delete,
+                                         ell_invariants, ell_update_min)
+from repro.core.backends.sliced import (SlicedBackend, SlicedEllPlanner,
+                                        SlicedEllState, sliced_invariants)
+
+RELAX_BACKENDS = tuple(sorted(BACKENDS))
+
+__all__ = [
+    "BACKENDS", "SHARDED_BACKENDS", "RELAX_BACKENDS",
+    "RelaxBackend", "ShardedBackend",
+    "make_backend", "make_sharded_backend", "validate_backend_config",
+    "SegmentBackend", "EllpackBackend", "SlicedBackend",
+    "EllPlanner", "EllState", "SlicedEllPlanner", "SlicedEllState",
+    "ell_append", "ell_delete", "ell_update_min", "ell_invariants",
+    "sliced_invariants", "shard_segment_wave",
+]

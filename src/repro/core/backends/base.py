@@ -1,0 +1,250 @@
+"""RelaxBackend protocol — one relaxation backend = layout state + host
+planner + jitted patch ops + wave computation + rebuild policy + checkpoint
+participation (DESIGN.md §7).
+
+Both dynamic engines consume backends through this seam:
+
+  * ``SSSPDelEngine`` (core/engine.py) holds ONE ``RelaxBackend`` instance
+    and calls ``apply_adds`` / ``apply_dels`` / ``relax`` / ``delete`` /
+    ``restore`` — no per-backend branching in the ingest path;
+  * ``ShardedSSSPDelEngine`` (core/dist_engine.py) holds one
+    ``ShardedBackend`` coordinator, which in turn owns one shard-local
+    planner per partition plus the globally sharded device layout arrays,
+    and plugs the backend's wave into the shard_map epochs' relaxation body
+    in place of the hardwired segment-min (DESIGN.md §7.2).
+
+The equivalence contract travels with the protocol: every backend's wave
+evaluates the same candidate set (all live in-edges of each row, offers
+masked by the frontier) with the same smallest-src-id tie-break, so
+``(dist, parent)`` and the round/message counters are bit-identical across
+backends AND across the partition-count axis (test_backend_equiv.py,
+test_dist_engine.py).
+
+Registries: ``BACKENDS`` (single-device classes) and ``SHARDED_BACKENDS``
+(their sharded coordinators), populated by the ``@register`` /
+``@register_sharded`` decorators when the package imports its submodules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Any, Callable, ClassVar
+
+import jax
+import numpy as np
+
+if TYPE_CHECKING:  # only for annotations; no runtime import cycles
+    from repro.core.ingest import PlannedAdds, SlotAllocator
+    from repro.core.relax import RelaxStats
+    from repro.core.state import EdgePool, SSSPState
+    from repro.core.delete import DeleteStats
+
+
+BACKENDS: dict[str, type["RelaxBackend"]] = {}
+SHARDED_BACKENDS: dict[str, type["ShardedBackend"]] = {}
+
+
+def register(cls: type["RelaxBackend"]) -> type["RelaxBackend"]:
+    BACKENDS[cls.name] = cls
+    return cls
+
+
+def register_sharded(cls: type["ShardedBackend"]) -> type["ShardedBackend"]:
+    SHARDED_BACKENDS[cls.name] = cls
+    return cls
+
+
+# ------------------------------------------------------------- validation --
+# Knobs that only make sense for a particular backend: setting one away from
+# its dataclass default while selecting a different backend is a config bug
+# that used to surface as a confusing failure deep inside layout init.
+# ``ell_use_kernel`` is the one genuinely shared knob: both ELL-layout
+# backends (ellpack, sliced) consume it.
+_SLICED_KNOBS = ("sliced_slice_rows", "sliced_hub_k", "sliced_init_k")
+_ELLPACK_KNOBS = ("ell_block_rows", "ell_init_k")
+_ELL_SHARED_KNOBS = ("ell_use_kernel",)
+
+
+def validate_backend_config(cfg: Any) -> None:
+    """Raise ``ValueError`` at construction time for an unknown
+    ``relax_backend`` or backend knobs that don't apply to the selected
+    backend — instead of failing deep inside layout init (or, worse,
+    silently ignoring a knob the user believes they tuned).  Shared by
+    ``EngineConfig`` and ``ShardedEngineConfig`` (__post_init__)."""
+    name = getattr(cfg, "relax_backend", "segment")
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown relax_backend {name!r}; valid backends: "
+            f"{sorted(BACKENDS)}")
+    defaults = {f.name: f.default for f in dataclasses.fields(cfg)}
+    misapplied: list[tuple[tuple[str, ...], str]] = []
+    if name != "sliced":
+        misapplied.append((_SLICED_KNOBS, "sliced"))
+    if name != "ellpack":
+        misapplied.append((_ELLPACK_KNOBS, "dense-ELL"))
+    if name == "segment":
+        misapplied.append((_ELL_SHARED_KNOBS, "ELL-layout"))
+    for knobs, layout in misapplied:
+        for k in knobs:
+            if k in defaults and getattr(cfg, k) != defaults[k]:
+                raise ValueError(
+                    f"{k}={getattr(cfg, k)!r} is a backend knob that does "
+                    f"not apply to relax_backend={name!r} (it configures "
+                    f"the {layout} layout); remove it or select the "
+                    f"matching backend")
+
+
+# ------------------------------------------------------ single-device side --
+class RelaxBackend:
+    """One relaxation backend for the single-device engine.
+
+    Owns the device layout state (if any), the host planner that assigns
+    incremental patch positions, the jitted patch ops (ADD append / DEL
+    tombstone / min-update), the epoch wave computation, and the rebuild
+    policy.  Checkpoint participation is via ``restore``: layout state is a
+    derived view and is never serialized — it is rebuilt from the edge-pool
+    mirror (``SlotAllocator``) on restore.
+    """
+
+    name: ClassVar[str]
+
+    def __init__(self, cfg: Any, num_vertices: int, *,
+                 use_kernel: bool = False, interpret: bool = True):
+        self.cfg = cfg
+        self.n = num_vertices
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+
+    # --- incremental layout maintenance (device patch ops; no host sync)
+    def apply_adds(self, plan: "PlannedAdds", alloc: "SlotAllocator") -> None:
+        """Patch the layout for one planned ADD batch (or rebuild from the
+        alloc's host mirror on capacity overflow — the mirror already
+        contains the batch).  No-op for layouts derived per-epoch."""
+
+    def apply_dels(self, rows: np.ndarray, src: np.ndarray) -> None:
+        """Tombstone deleted edges (padded batch; located on device)."""
+
+    # --- epochs (jitted; same candidate sets + tie-break as segment)
+    def relax(self, sssp: "SSSPState", edges: "EdgePool",
+              frontier: jax.Array) -> tuple["SSSPState", "RelaxStats"]:
+        raise NotImplementedError
+
+    def delete(self, sssp: "SSSPState", edges: "EdgePool",
+               seed: jax.Array) -> tuple["SSSPState", "DeleteStats"]:
+        raise NotImplementedError
+
+    # --- checkpoint participation / diagnostics
+    def restore(self, alloc: "SlotAllocator") -> None:
+        """Rebuild layout state from the pool mirror after a restore."""
+
+    def invariants(self) -> dict[str, jax.Array]:
+        """Device-side occupancy invariants (diagnostics/tests)."""
+        return {}
+
+
+def make_backend(name: str, cfg: Any, *, num_vertices: int | None = None,
+                 use_kernel: bool = False, interpret: bool = True
+                 ) -> RelaxBackend:
+    if name not in BACKENDS:
+        raise ValueError(f"unknown relax_backend {name!r}; valid backends: "
+                         f"{sorted(BACKENDS)}")
+    return BACKENDS[name](
+        cfg, cfg.num_vertices if num_vertices is None else num_vertices,
+        use_kernel=use_kernel, interpret=interpret)
+
+
+# ------------------------------------------------------------ sharded side --
+class ShardedBackend:
+    """Sharded coordinator for one backend: per-partition shard-local
+    planners plus the globally sharded device layout arrays (DESIGN.md §7.2).
+
+    dst-owner edge placement makes every shard's in-edges local, so shard
+    ``p``'s layout rows are exactly its owned vertex window
+    ``[p*npp, (p+1)*npp)``; the global device arrays are the per-shard
+    blocks concatenated partition-major and sharded along dim 0, so the
+    shard_map epochs see each shard's own block.
+
+    Layout patches run as separate jitted scatters on the global arrays
+    *before* the fused epoch (indices are exact — no foreign-entry masking
+    needed) and never read device memory back; rebuilds come from the
+    per-partition ``SlotAllocator`` host mirrors.  Geometry (ELL width K /
+    per-slice widths / overflow capacity) is synchronized across shards at
+    rebuild time — shard_map needs one static per-shard block shape.
+    """
+
+    name: ClassVar[str]
+    n_extra: ClassVar[int] = 0   # sharded layout arrays fed to the epochs
+
+    def __init__(self, cfg: Any, ds: Any, allocs: list["SlotAllocator"]):
+        self.cfg = cfg
+        self.ds = ds
+        self.allocs = allocs
+
+    def arrays(self) -> tuple[jax.Array, ...]:
+        """The global sharded layout arrays, in wave-factory order."""
+        return ()
+
+    def static_key(self) -> tuple:
+        """Static geometry the epoch closures bake in (epoch-cache key
+        suffix; array *shapes* re-trace automatically and need not appear)."""
+        return (self.name,)
+
+    def stage_adds(self, plans: list[tuple[int, "PlannedAdds"]]) -> None:
+        """Patch the layout for one ADD batch (list of per-partition plans),
+        rebuilding all shards from the mirrors on any shard's overflow."""
+
+    def restore(self) -> None:
+        """Rebuild the sharded layout from the per-partition mirrors."""
+
+    # wave/patch factories: classmethods so epoch closures capture only
+    # static config (never a coordinator instance — the epoch cache must not
+    # pin device buffers or host mirrors of dead engines).
+    @classmethod
+    def shard_wave_factory(cls, static: tuple, npp: int) -> Callable:
+        """Return ``make_wave(esrc, edst, ew, eact, extras, my_p) -> wave``
+        where ``wave(offers) -> (best f32[npp], arg i32[npp])`` evaluates
+        one local relaxation wave: per-row min over the shard's in-edges of
+        ``offers[src] + w`` and the smallest minimizing global src id."""
+        raise NotImplementedError
+
+    # DEL tombstoning runs INSIDE the fused del epoch (not as a staged
+    # patch): deletions are per-event under the paper-faithful mode, so an
+    # extra device dispatch per deletion would dominate the sharded ingest
+    # overhead.  ``del_mutated`` names the extras the patch replaces; the
+    # epoch returns them and the engine hands them back via
+    # ``update_del_arrays``.
+    del_mutated: ClassVar[tuple[int, ...]] = ()
+
+    @classmethod
+    def shard_del_patch(cls, static: tuple, npp: int) -> Callable | None:
+        """Return ``patch(extras, psrc, pdst, my_p) -> mutated`` tombstoning
+        the (padded, replicated, global-vertex-id) deleted edges in this
+        shard's layout block — foreign entries no-op via the -inf/max trick
+        — or None when the backend has no layout to patch."""
+        return None
+
+    def update_del_arrays(self, new_vals: tuple) -> None:
+        """Fold the del epoch's mutated layout arrays back into the
+        coordinator state (order matches ``del_mutated``)."""
+
+
+def make_sharded_backend(name: str, cfg: Any, ds: Any,
+                         allocs: list["SlotAllocator"]) -> ShardedBackend:
+    if name not in SHARDED_BACKENDS:
+        raise ValueError(f"unknown relax_backend {name!r}; valid backends: "
+                         f"{sorted(SHARDED_BACKENDS)}")
+    return SHARDED_BACKENDS[name](cfg, ds, allocs)
+
+
+# ------------------------------------------------------- planner utilities --
+def rank_within_rows(rows: np.ndarray) -> np.ndarray:
+    """Rank of each batch entry among the entries targeting the same row,
+    in stable batch order — the cell-offset assignment all ELL-family
+    planners use (kpos candidate = fill[row] + rank)."""
+    m = len(rows)
+    order = np.argsort(rows, kind="stable")
+    sr = rows[order]
+    starts = np.nonzero(np.r_[True, sr[1:] != sr[:-1]])[0]
+    sizes = np.diff(np.r_[starts, m])
+    rank = np.empty(m, np.int64)
+    rank[order] = np.arange(m) - np.repeat(starts, sizes)
+    return rank

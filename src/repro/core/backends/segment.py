@@ -1,0 +1,79 @@
+"""Segment backend — the portable COO scatter-min relaxation (DESIGN.md §2.1).
+
+The layout IS the edge pool: no derived device state, no planner, no patch
+ops — ``apply_adds`` / ``apply_dels`` are no-ops and the epochs run straight
+over ``core/relax.py`` / ``core/delete.py``.
+
+The sharded wave (``shard_segment_wave``) is the shard-local rendering of
+``relax.relax_round``'s candidate evaluation: a segment-min over the shard's
+in-edge pool slice with the smallest-src-id tie-break.  It is the single
+source of truth for the segment-min used by both ``DistributedSSSP``'s
+static epochs and the sharded dynamic engine's backend'd epochs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import delete as del_mod
+from repro.core import relax
+from repro.core.backends.base import (RelaxBackend, ShardedBackend, register,
+                                      register_sharded)
+from repro.core.state import INF
+
+_BIG = jnp.int32(2**31 - 1)
+
+
+def shard_segment_wave(esrc, edst, ew, eact, row0, npp: int):
+    """Local segment-min wave over one shard's in-edge pool slice.
+
+    ``wave(offers) -> (best, arg)``: per owned row, the min of
+    ``offers[src] + w`` over live in-edges and the smallest minimizing
+    global src id (``2**31-1`` when no live candidate).  Frontier masking is
+    carried by ``offers`` (+inf for non-offering sources), which makes the
+    same wave serve relaxation rounds, delta rounds and the deletion pull.
+    """
+
+    def wave(offers):
+        cand = jnp.where(eact, offers[esrc] + ew, INF)
+        dl = edst - row0
+        best = jnp.minimum(
+            jax.ops.segment_min(cand, dl, num_segments=npp), INF)
+        hit = (cand == best[dl]) & (cand < INF)
+        arg = jax.ops.segment_min(jnp.where(hit, esrc, _BIG), dl,
+                                  num_segments=npp)
+        return best, arg
+
+    return wave
+
+
+@register
+class SegmentBackend(RelaxBackend):
+    """No derived layout: epochs scatter-min over the flat COO pool."""
+
+    name = "segment"
+
+    def relax(self, sssp, edges, frontier):
+        return relax.relax_until_converged(
+            sssp, edges, frontier, num_vertices=self.n)
+
+    def delete(self, sssp, edges, seed):
+        return del_mod.invalidate_and_recompute(
+            sssp, edges, seed, num_vertices=self.n,
+            use_doubling=self.cfg.use_doubling)
+
+
+@register_sharded
+class ShardedSegment(ShardedBackend):
+    """Sharded coordinator with nothing to coordinate: the pool patched by
+    the epochs is the layout, so every hook is a no-op."""
+
+    name = "segment"
+    n_extra = 0
+
+    @classmethod
+    def shard_wave_factory(cls, static, npp):
+        def make_wave(esrc, edst, ew, eact, extras, my_p):
+            return shard_segment_wave(esrc, edst, ew, eact,
+                                      my_p * npp, npp)
+        return make_wave

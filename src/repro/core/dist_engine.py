@@ -1,5 +1,5 @@
 """ShardedSSSPDelEngine — the fully dynamic engine over the vertex-partitioned
-device mesh (DESIGN.md §5).
+device mesh (DESIGN.md §5, §7.2).
 
 This is the convergence of the repo's two halves: ``core/engine.py`` ingests
 ADD/DEL/QUERY streams on one device; ``core/distributed.py`` solves static
@@ -14,6 +14,16 @@ per-partition edge pools living across the mesh:
     ingest.py mirror/planning machinery, keyed by dst-owner) plans where each
     topology event lands in its owner's fixed ``Epp``-slot pool.  Global slot
     ``p*Epp + local`` addresses the sharded device arrays directly.
+  * **Relaxation backend** (DESIGN.md §7.2): ``relax_backend=`` selects any
+    registered backend.  The coordinator (core/backends/) holds one
+    shard-local planner per partition — dst-owner placement makes every
+    shard's in-edges local, so per-shard layout rows are exactly the owned
+    vertex window — plus the per-shard layout blocks concatenated into
+    globally sharded device arrays.  ADD patches run as separate jitted
+    scatters before the fused epoch (amortized over the batch); DEL
+    tombstones run INSIDE the fused deletion epoch (per-event hot path);
+    the backend's wave replaces the hardwired segment-min inside the
+    shard_map epochs' relaxation body.
   * **Data plane**: one jitted shard_map epoch per batch patches the pools in
     place (masked writes routed through a sacrificial slot so foreign batch
     entries never collide with real ones) and immediately runs the
@@ -27,11 +37,14 @@ per-partition edge pools living across the mesh:
 
 Equivalence contract: with ``exchange="allgather"`` the engine is
 **bit-identical** in ``(dist, parent)`` — and equal in rounds/messages — to
-``SSSPDelEngine`` on any event stream, for any partition count (frontier
-evolution, candidate sets and smallest-src-id tie-breaks are the same wave
-for wave; float min is exact).  The ``"delta"`` exchange reaches the same
-``(dist, parent)`` fixpoint with compressed traffic (overflow rounds fall
-back to dense gathers — still exact, see tests/test_sssp_distributed.py).
+``SSSPDelEngine`` *with the same relax_backend* on any event stream, for any
+partition count (frontier evolution, candidate sets and smallest-src-id
+tie-breaks are the same wave for wave; float min is exact) — and all
+backends are bit-identical to each other (test_backend_equiv.py), so the
+contract holds across the full backend x partition-count grid.  The
+``"delta"`` exchange reaches the same ``(dist, parent)`` fixpoint with
+compressed traffic (overflow rounds fall back to dense gathers — still
+exact, see tests/test_sssp_distributed.py).
 
 Optional **edge-balanced placement**: pass the ``(perm, inv, npp)`` triple
 from ``graphs.partition.edge_balanced_relabeling`` (built for this mesh's
@@ -39,6 +52,10 @@ partition count) as ``relabel`` — events are permuted on ingest and results
 un-permuted at query, so shards own ~equal in-edge mass instead of ~equal
 vertex counts.  Distances are unchanged (same paths, same float sums);
 parent ties may resolve differently (smallest *relabeled* id).
+
+Checkpoint/restore reuses the single-device schema (pool snapshot +
+dist/parent windows); backend layout state is a derived view and is rebuilt
+from the per-partition mirrors on restore, never serialized.
 """
 from __future__ import annotations
 
@@ -51,8 +68,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.core import backends as bk_mod
 from repro.core import events as ev
 from repro.core import ingest
+from repro.core.backends.base import SHARDED_BACKENDS
 from repro.core.distributed import (DistConfig, DistributedSSSP,
                                     _SHARD_MAP_KW, _shard_map,
                                     inactive_dst_layout)
@@ -63,10 +82,13 @@ from repro.launch import mesh as mesh_mod
 
 EXCHANGES = ("allgather", "delta")
 
-# Jitted epoch builders keyed by everything their traces depend on, shared
+# Jitted epoch builders keyed by everything their traces depend on — the
+# mesh/exchange config plus the backend's static geometry key — shared
 # across engine instances: the closures are per-instance, so without this a
 # fresh engine (benchmark warm/timed pairs, test sweeps) would re-trace and
-# re-lower every batch shape it has already seen.
+# re-lower every batch shape it has already seen.  Layout arrays flow
+# through epoch *arguments* (their shapes re-trace automatically); only
+# truly static geometry (e.g. the sliced widths tuple) lives in the key.
 _EPOCH_CACHE: dict[tuple, tuple] = {}
 
 
@@ -80,6 +102,21 @@ class ShardedEngineConfig:
     use_doubling: bool = True     # False = paper's wave-by-wave flood
     batch_deletions: bool = False
     on_duplicate: str = "ignore"  # or "min" (weight decreases)
+    # Relaxation backend (DESIGN.md §7.2) + its knobs — same fields and
+    # defaults as EngineConfig so the two validate identically.
+    relax_backend: str = "segment"
+    ell_block_rows: int = 256
+    ell_init_k: int = 8
+    ell_use_kernel: bool | None = None  # None = Pallas kernel iff on TPU
+    sliced_slice_rows: int = 256
+    sliced_hub_k: int = 32
+    sliced_init_k: int = 2
+
+    def __post_init__(self):
+        bk_mod.validate_backend_config(self)
+        if self.exchange not in EXCHANGES:
+            raise ValueError(f"unknown exchange {self.exchange!r}; valid: "
+                             f"{EXCHANGES}")
 
 
 class ShardedSSSPDelEngine(StreamEngineBase):
@@ -92,7 +129,6 @@ class ShardedSSSPDelEngine(StreamEngineBase):
 
     def __init__(self, cfg: ShardedEngineConfig, mesh: Mesh | None = None,
                  relabel: tuple[np.ndarray, np.ndarray, int] | None = None):
-        assert cfg.exchange in EXCHANGES, cfg.exchange
         super().__init__()
         self.cfg = cfg
         if mesh is None:
@@ -124,6 +160,9 @@ class ShardedSSSPDelEngine(StreamEngineBase):
         self.allocs = [ingest.SlotAllocator(cfg.edges_per_part,
                                             cfg.on_duplicate)
                        for _ in range(self.P)]
+        # relaxation backend: per-shard planners + sharded layout arrays
+        self.bk = bk_mod.make_sharded_backend(
+            cfg.relax_backend, cfg, self.ds, self.allocs)
         # data plane: sharded vertex + edge-pool arrays
         self.dist, self.parent = self.ds.init_vertex_arrays(self._source_pad)
         self.esrc, self.edst, self.ew, self.eact = self.ds.put_edges(
@@ -131,12 +170,19 @@ class ShardedSSSPDelEngine(StreamEngineBase):
             inactive_dst_layout(self.P, self.npp, self.epp),
             np.zeros(self.P * self.epp, np.float32),
             np.zeros(self.P * self.epp, np.bool_))
-        key = (mesh, n_pad, cfg.edges_per_part, cfg.exchange, cfg.delta_cap,
-               cfg.use_doubling, self._source_pad)
+        self._base_key = (mesh, n_pad, cfg.edges_per_part, cfg.exchange,
+                          cfg.delta_cap, cfg.use_doubling, self._source_pad)
+
+    def _epoch_pair(self):
+        """The (add_epoch, del_epoch) pair for the CURRENT backend geometry
+        — looked up per batch because a coupled rebuild may change the
+        backend's static key (e.g. the sliced widths tuple)."""
+        key = self._base_key + self.bk.static_key()
         if key not in _EPOCH_CACHE:
             _EPOCH_CACHE[key] = _build_epochs(
-                self.ds, self.epp, cfg.use_doubling, self._source_pad)
-        self._add_epoch, self._del_epoch = _EPOCH_CACHE[key]
+                self.ds, self.epp, self.cfg.use_doubling, self._source_pad,
+                self.cfg.relax_backend, self.bk.static_key())
+        return _EPOCH_CACHE[key]
 
     # ------------------------------------------------------------------ adds
     def _ingest_adds(self, batch: ev.EventBatch) -> None:
@@ -144,22 +190,26 @@ class ShardedSSSPDelEngine(StreamEngineBase):
         if self.perm is not None:
             src, dst = self.perm[src], self.perm[dst]
         owner = np.asarray(dst, np.int64) // self.npp
-        parts = []
+        parts, plans = [], []
         for p in np.unique(owner):
             sel = owner == p
             plan = self.allocs[p].plan_adds(src[sel], dst[sel], w[sel])
             if len(plan.slots):
+                plans.append((int(p), plan))
                 parts.append((int(p) * self.epp + plan.slots.astype(np.int64),
                               plan.src, plan.dst, plan.w))
         if not parts:
             return
+        self.bk.stage_adds(plans)   # layout patches (or coupled rebuild)
         gslot, bsrc, bdst, bw = (np.concatenate(x) for x in zip(*parts))
         n_acc = len(gslot)
         gslot, bsrc, bdst, bw = ingest.pad_pow2(
             gslot.astype(np.int32), bsrc, bdst, bw)
+        add_epoch, _ = self._epoch_pair()
         (self.dist, self.parent, self.esrc, self.edst, self.ew, self.eact,
-         self._dev_rounds, self._dev_messages) = self._add_epoch(
+         self._dev_rounds, self._dev_messages) = add_epoch(
             self.dist, self.parent, self.esrc, self.edst, self.ew, self.eact,
+            *self.bk.arrays(),
             jnp.asarray(gslot), jnp.asarray(bsrc), jnp.asarray(bdst),
             jnp.asarray(bw), self._dev_rounds, self._dev_messages)
         self.n_adds += n_acc
@@ -167,12 +217,7 @@ class ShardedSSSPDelEngine(StreamEngineBase):
 
     # ------------------------------------------------------------------ dels
     def _ingest_dels(self, batch: ev.EventBatch) -> None:
-        if self.cfg.batch_deletions:
-            groups = [(batch.src, batch.dst)]
-        else:
-            groups = [(batch.src[i:i + 1], batch.dst[i:i + 1])
-                      for i in range(len(batch.src))]
-        for gsrc, gdst in groups:
+        for gsrc, gdst in self._deletion_groups(batch):
             if self.perm is not None:
                 gsrc, gdst = self.perm[gsrc], self.perm[gdst]
             owner = np.asarray(gdst, np.int64) // self.npp
@@ -190,11 +235,21 @@ class ShardedSSSPDelEngine(StreamEngineBase):
             n_del = len(gslot)
             gslot, psrc, pdst = ingest.pad_pow2(
                 gslot.astype(np.int32), psrc, pdst)
-            (self.dist, self.parent, self.eact,
-             self._dev_rounds, self._dev_messages) = self._del_epoch(
+            _, del_epoch = self._epoch_pair()
+            # the layout tombstone runs INSIDE the fused epoch (before the
+            # recompute wave; the seed reads only the parent forest) — a
+            # staged patch would cost one extra dispatch per deletion, and
+            # deletions are per-event in the paper-faithful mode
+            out = del_epoch(
                 self.dist, self.parent, self.esrc, self.edst, self.ew,
-                self.eact, jnp.asarray(gslot), jnp.asarray(psrc),
+                self.eact, *self.bk.arrays(),
+                jnp.asarray(gslot), jnp.asarray(psrc),
                 jnp.asarray(pdst), self._dev_rounds, self._dev_messages)
+            self.dist, self.parent, self.eact = out[:3]
+            n_mut = len(type(self.bk).del_mutated)
+            if n_mut:
+                self.bk.update_del_arrays(out[3:3 + n_mut])
+            self._dev_rounds, self._dev_messages = out[3 + n_mut:]
             self.n_dels += n_del
             self.n_epochs += 1
 
@@ -218,6 +273,61 @@ class ShardedSSSPDelEngine(StreamEngineBase):
         return QueryResult(dist=dist, parent=parent, latency_s=dt,
                            epoch_stats=self._stream_stats())
 
+    # ------------------------------------------------------------ checkpoint
+    def checkpoint(self) -> dict[str, np.ndarray]:
+        """Single-device-schema snapshot (engine.SSSPDelEngine.checkpoint):
+        pool arrays in partition-major global-slot order (from the host
+        mirrors — no device readback for the pool) plus the padded
+        dist/parent windows.  Backend layout state is rebuilt on restore,
+        never serialized."""
+        return {
+            "src": np.concatenate([a.msrc for a in self.allocs]),
+            "dst": np.concatenate([a.mdst for a in self.allocs]),
+            "w": np.concatenate([a.mw for a in self.allocs]),
+            "active": np.concatenate([a.mactive for a in self.allocs]),
+            "dist": np.asarray(jax.device_get(self.dist)),
+            "parent": np.asarray(jax.device_get(self.parent)),
+            "source": np.asarray(self._source_pad),
+            "cursor": np.asarray(0),
+        }
+
+    def restore(self, ckpt: dict[str, np.ndarray]) -> None:
+        """Crash-restart from a ``checkpoint()`` snapshot taken by an engine
+        with the same config/mesh/relabel.  Rebuilds the per-partition
+        planners from the pool slices, re-shards the device arrays, and
+        rebuilds the backend layout from the mirrors."""
+        assert int(ckpt["source"]) == self._source_pad, "source mismatch"
+        assert len(ckpt["dist"]) == self.P * self.npp, (
+            f"checkpoint has {len(ckpt['dist'])} vertex rows; this engine "
+            f"pads to {self.P * self.npp} — same P/mesh required")
+        assert len(ckpt["src"]) == self.P * self.epp, (
+            f"checkpoint has {len(ckpt['src'])} pool slots; this engine "
+            f"expects {self.P * self.epp} — same edges_per_part required")
+        epp = self.epp
+        self.allocs = [
+            ingest.SlotAllocator.from_pool(
+                epp, self.cfg.on_duplicate,
+                ckpt["src"][p * epp:(p + 1) * epp],
+                ckpt["dst"][p * epp:(p + 1) * epp],
+                ckpt["w"][p * epp:(p + 1) * epp],
+                ckpt["active"][p * epp:(p + 1) * epp])
+            for p in range(self.P)]
+        # inactive slots must keep the padding-row invariant for the
+        # shard-local segment ids (see inactive_dst_layout)
+        dst = np.where(ckpt["active"], ckpt["dst"],
+                       inactive_dst_layout(self.P, self.npp, epp))
+        self.esrc, self.edst, self.ew, self.eact = self.ds.put_edges(
+            np.asarray(ckpt["src"], np.int32), dst.astype(np.int32),
+            np.asarray(ckpt["w"], np.float32),
+            np.asarray(ckpt["active"], np.bool_))
+        sh = self.ds.vertex_sharding()
+        self.dist = jax.device_put(
+            np.asarray(ckpt["dist"], np.float32), sh)
+        self.parent = jax.device_put(
+            np.asarray(ckpt["parent"], np.int32), sh)
+        self.bk.allocs = self.allocs
+        self.bk.restore()
+
     # ------------------------------------------------------------ diagnostics
     def partition_fill(self) -> np.ndarray:
         """Live edges per partition, from the host mirrors (no device sync)."""
@@ -225,17 +335,25 @@ class ShardedSSSPDelEngine(StreamEngineBase):
 
 
 def _build_epochs(ds: DistributedSSSP, epp: int, use_doubling: bool,
-                  source_pad: int):
-    """Build the (add_epoch, del_epoch) jitted shard_map pair.
+                  source_pad: int, backend: str, backend_static: tuple):
+    """Build the (add_epoch, del_epoch) jitted shard_map pair for one
+    backend geometry.
 
     Module-level on purpose: the closures capture only ``ds`` (mesh + config
-    + specs, no device buffers) and scalars, so ``_EPOCH_CACHE`` entries
-    never pin an engine's device state or host mirrors.
+    + specs, no device buffers), scalars, and the backend's *static* wave
+    factory — layout arrays arrive as epoch arguments — so ``_EPOCH_CACHE``
+    entries never pin an engine's device state or host mirrors.
     """
     npp = ds.npp
     ax = ds.cfg.mesh_axes
     exchange = ds.cfg.exchange
     v, e, r = ds.vspec, ds.espec, ds.rspec
+    bk_cls = SHARDED_BACKENDS[backend]
+    n_extra = bk_cls.n_extra
+    make_wave = bk_cls.shard_wave_factory(backend_static, npp)
+    del_patch = bk_cls.shard_del_patch(backend_static, npp)
+    del_mutated = bk_cls.del_mutated
+    extra_specs = (v,) * n_extra
 
     def masked_write(arr, loc, val):
         """Scatter batch values into this shard's pool slice.  Foreign batch
@@ -252,12 +370,14 @@ def _build_epochs(ds: DistributedSSSP, epp: int, use_doubling: bool,
 
     @jax.jit
     @partial(_shard_map, mesh=ds.mesh,
-             in_specs=(v, v, e, e, e, e, r, r, r, r, r, r),
+             in_specs=(v, v, e, e, e, e) + extra_specs + (r, r, r, r, r, r),
              out_specs=(v, v, e, e, e, e, r, r),
              **_SHARD_MAP_KW)
-    def add_epoch(dist, parent, esrc, edst, ew, eact,
-                  gslot, bsrc, bdst, bw, racc, macc):
-        """patch pools + relax from the inserted tails, one fused epoch."""
+    def add_epoch(dist, parent, esrc, edst, ew, eact, *rest):
+        """patch pools + relax from the inserted tails, one fused epoch.
+        Layout extras arrive already patched (staged before the epoch)."""
+        extras = rest[:n_extra]
+        gslot, bsrc, bdst, bw, racc, macc = rest[n_extra:]
         my_p = jnp.int32(ds._flat_index())
         row0 = my_p * npp
         loc = local_slots(gslot, my_p)
@@ -270,20 +390,24 @@ def _build_epochs(ds: DistributedSSSP, epp: int, use_doubling: bool,
         in_r = (bsrc >= row0) & (bsrc < row0 + npp)
         fr = jnp.zeros((npp,), jnp.bool_).at[
             jnp.clip(bsrc - row0, 0, npp - 1)].max(in_r)
-        dist, parent, rounds, msgs = ds._relax_body(
-            dist, parent, fr, esrc, edst, ew, eact)
+        wave = make_wave(esrc, edst, ew, eact, extras, my_p)
+        dist, parent, rounds, msgs = ds._relax_body(dist, parent, fr, wave)
         return (dist, parent, esrc, edst, ew, eact,
                 racc + rounds, macc + msgs)
 
     @jax.jit
     @partial(_shard_map, mesh=ds.mesh,
-             in_specs=(v, v, e, e, e, e, r, r, r, r, r),
-             out_specs=(v, v, e, r, r),
+             in_specs=(v, v, e, e, e, e) + extra_specs + (r, r, r, r, r),
+             out_specs=(v, v, e) + (v,) * len(del_mutated) + (r, r),
              **_SHARD_MAP_KW)
-    def del_epoch(dist, parent, esrc, edst, ew, eact,
-                  gslot, psrc, pdst, racc, macc):
-        """seed from pre-deletion tree + deactivate + invalidate + recompute,
-        one fused epoch.  Stats mirror core/delete.DeleteStats exactly."""
+    def del_epoch(dist, parent, esrc, edst, ew, eact, *rest):
+        """seed from pre-deletion tree + deactivate + tombstone layout +
+        invalidate + recompute, one fused epoch.  Stats mirror
+        core/delete.DeleteStats exactly.  The backend's layout tombstone
+        (``shard_del_patch``) runs in-epoch; the mutated layout arrays are
+        returned after (dist, parent, eact)."""
+        extras = list(rest[:n_extra])
+        gslot, psrc, pdst, racc, macc = rest[n_extra:]
         my_p = jnp.int32(ds._flat_index())
         row0 = my_p * npp
         # Listing 4: only deletions of tree edges (parent[head]==tail)
@@ -296,6 +420,12 @@ def _build_epochs(ds: DistributedSSSP, epp: int, use_doubling: bool,
         # deactivate the deleted slots (dst stays in-range)
         loc = local_slots(gslot, my_p)
         eact = masked_write(eact, loc, jnp.zeros_like(gslot, jnp.bool_))
+        # tombstone the backend layout (the recompute must not see the
+        # deleted edges; the seed above reads only the parent forest)
+        if del_patch is not None:
+            new_vals = del_patch(tuple(extras), psrc, pdst, my_p)
+            for i, val in zip(del_mutated, new_vals):
+                extras[i] = val
         # --- invalidation over the parent forest
         if use_doubling:
             aff, inv_rounds = ds._invalidate_doubling(parent, seed)
@@ -310,16 +440,19 @@ def _build_epochs(ds: DistributedSSSP, epp: int, use_doubling: bool,
         dist = jnp.where(aff, INF, dist)
         parent = jnp.where(aff, NO_PARENT, parent)
         # --- recomputation (shared with the static delete epoch; the
-        # distributed rendering of delete.invalidate_and_recompute)
+        # distributed rendering of delete.invalidate_and_recompute), with
+        # the backend's wave in place of the hardwired segment-min
+        wave = make_wave(esrc, edst, ew, eact, tuple(extras), my_p)
         if exchange == "delta":
             dist, parent, rec_rounds, rec_msgs = ds._recompute_delta(
-                dist, parent, aff, esrc, edst, ew, eact, row0)
+                dist, parent, aff, esrc, edst, eact, wave, row0)
         else:
             dist, parent, rec_rounds, rec_msgs = ds._recompute_pull_push(
-                dist, parent, aff, esrc, edst, ew, eact, row0)
+                dist, parent, aff, wave)
         zero = jnp.int32(0)
         d_rounds = jnp.where(any_seed, inv_rounds + rec_rounds, zero)
         d_msgs = jnp.where(any_seed, rec_msgs, zero) + affected
-        return dist, parent, eact, racc + d_rounds, macc + d_msgs
+        return (dist, parent, eact, *(extras[i] for i in del_mutated),
+                racc + d_rounds, macc + d_msgs)
 
     return add_epoch, del_epoch

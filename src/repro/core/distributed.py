@@ -6,6 +6,13 @@ Shared-nothing mapping (paper §3 -> TPU):
     owns ``Npp = N/P`` contiguous vertices and their SSSP state);
   * edges live with the partition of their **dst** (each chip owns up to
     ``Epp`` in-edges of its vertices) so the per-round scatter-min is local;
+  * the shard-local candidate evaluation is a pluggable *wave*
+    (``wave(offers) -> (best, arg)``, DESIGN.md §7.2): the exchange
+    strategies below assemble the global ``offers`` vector (dist masked to
+    the offering set) and the wave — segment-min over the pool slice by
+    default, an ELL/sliced gather-min when the sharded dynamic engine plugs
+    a relaxation backend in — reduces it per owned row with the shared
+    smallest-src-id tie-break;
   * the only cross-partition traffic is the paper's "messages": ``dist[src]``
     offers.  Two exchange strategies:
       - ``"allgather"`` (paper-faithful bulk): all_gather the dist (+frontier)
@@ -39,6 +46,7 @@ except AttributeError:  # older jax: experimental module (kwarg: check_rep)
     from jax.experimental.shard_map import shard_map as _shard_map
     _SHARD_MAP_KW = {"check_rep": False}
 
+from repro.core.backends.segment import shard_segment_wave
 from repro.core.state import INF, NO_PARENT
 from repro.graphs import csr as csr_mod
 from repro.graphs import partition as part_mod
@@ -126,26 +134,26 @@ class DistributedSSSP:
         return out_src, out_dst, out_w, out_act
 
     # --------------------------------------------------------------- epochs
-    def _round_allgather(self, dist_sh, parent_sh, frontier_sh,
-                         esrc, edst, ew, eact, row0):
-        """One BSP message wave with dense dist/frontier exchange."""
+    def _apply_wave(self, dist_sh, parent_sh, wave, offers):
+        """Shared tail of every round: evaluate the local wave on the
+        assembled offers and fold improvements into (dist, parent)."""
+        best, arg = wave(offers)
+        improved = best < dist_sh
+        dist_sh = jnp.where(improved, best, dist_sh)
+        parent_sh = jnp.where(improved, arg, parent_sh)
+        return dist_sh, parent_sh, improved
+
+    def _round_allgather(self, dist_sh, parent_sh, frontier_sh, wave):
+        """One BSP message wave with dense dist/frontier exchange.  Sources
+        outside the frontier offer +inf — the offers-vector rendering of the
+        old per-edge ``active & frontier[src]`` mask (bit-identical)."""
         ax = self.cfg.mesh_axes
         dist_full = jax.lax.all_gather(dist_sh, ax, tiled=True)
         front_full = jax.lax.all_gather(frontier_sh, ax, tiled=True)
-        live = eact & front_full[esrc]
-        cand = jnp.where(live, dist_full[esrc] + ew, INF)
-        dl = edst - row0
-        best = jax.ops.segment_min(cand, dl, num_segments=self.npp)
-        improved = best < dist_sh
-        hit = live & (cand == best[dl]) & improved[dl]
-        cand_src = jnp.where(hit, esrc, BIG)
-        new_par = jax.ops.segment_min(cand_src, dl, num_segments=self.npp)
-        dist_sh = jnp.where(improved, best, dist_sh)
-        parent_sh = jnp.where(improved, new_par, parent_sh)
-        return dist_sh, parent_sh, improved
+        offers = jnp.where(front_full, dist_full, INF)
+        return self._apply_wave(dist_sh, parent_sh, wave, offers)
 
-    def _round_delta(self, dist_sh, parent_sh, frontier_sh,
-                     esrc, edst, ew, eact, row0):
+    def _round_delta(self, dist_sh, parent_sh, frontier_sh, wave, row0):
         """Delta-compressed wave: exchange only (idx,val) of improved vertices.
 
         Each partition packs the indices of its frontier vertices into a
@@ -179,31 +187,25 @@ class DistributedSSSP:
         def dense_dist():
             return jax.lax.all_gather(dist_sh, ax, tiled=True)
 
-        dist_full = jax.lax.cond(any_overflow, dense_dist, sparse_dist)
-        # No separate frontier gather: in the sparse case dist_full[src] is
-        # +inf for every non-frontier src, so cand=inf masks those edges; in
-        # the dense-fallback round all edges participate (a superset — safe,
+        # No separate frontier gather: in the sparse case the offers are
+        # +inf for every non-frontier src, which masks those candidates; in
+        # the dense-fallback round all sources offer (a superset — safe,
         # costs one extra wave's work only on overflow rounds).
-        live = eact
-        cand = jnp.where(live, dist_full[esrc] + ew, INF)
-        dl = edst - row0
-        best = jax.ops.segment_min(cand, dl, num_segments=self.npp)
-        improved = best < dist_sh
-        hit = live & (cand == best[dl]) & improved[dl]
-        cand_src = jnp.where(hit, esrc, BIG)
-        new_par = jax.ops.segment_min(cand_src, dl, num_segments=self.npp)
-        dist_sh = jnp.where(improved, best, dist_sh)
-        parent_sh = jnp.where(improved, new_par, parent_sh)
-        return dist_sh, parent_sh, improved
+        offers = jax.lax.cond(any_overflow, dense_dist, sparse_dist)
+        return self._apply_wave(dist_sh, parent_sh, wave, offers)
 
-    def _relax_body(self, dist_sh, parent_sh, frontier_sh, esrc, edst, ew, eact):
-        """Relaxation rounds to fixpoint.  Returns (dist, parent, rounds,
-        messages); ``messages`` counts DistanceUpdate deliveries (improvements
-        summed over partitions) — same semantics as core/relax.RelaxStats."""
+    def _relax_body(self, dist_sh, parent_sh, frontier_sh, wave):
+        """Relaxation rounds to fixpoint with the given local wave.  Returns
+        (dist, parent, rounds, messages); ``messages`` counts DistanceUpdate
+        deliveries (improvements summed over partitions) — same semantics as
+        core/relax.RelaxStats, for any backend's wave."""
         ax = self.cfg.mesh_axes
         row0 = (jnp.int32(self._flat_index()) * self.npp)
-        rnd = (self._round_delta if self.cfg.exchange == "delta"
-               else self._round_allgather)
+
+        def rnd(dist, parent, frontier):
+            if self.cfg.exchange == "delta":
+                return self._round_delta(dist, parent, frontier, wave, row0)
+            return self._round_allgather(dist, parent, frontier, wave)
 
         def cond(carry):
             _, _, _, go, rounds, _ = carry
@@ -214,8 +216,7 @@ class DistributedSSSP:
 
         def body(carry):
             dist, parent, frontier, _, rounds, msgs = carry
-            dist, parent, improved = rnd(dist, parent, frontier,
-                                         esrc, edst, ew, eact, row0)
+            dist, parent, improved = rnd(dist, parent, frontier)
             n_imp = jax.lax.psum(jnp.sum(improved.astype(jnp.int32)), ax)
             return dist, parent, improved, n_imp > 0, rounds + 1, msgs + n_imp
 
@@ -245,8 +246,9 @@ class DistributedSSSP:
                  out_specs=(self.vspec, self.vspec, self.rspec),
                  **_SHARD_MAP_KW)
         def epoch(dist, parent, frontier, esrc, edst, ew, eact):
-            d, p, r, _ = self._relax_body(dist, parent, frontier,
-                                          esrc, edst, ew, eact)
+            row0 = jnp.int32(self._flat_index()) * self.npp
+            wave = shard_segment_wave(esrc, edst, ew, eact, row0, self.npp)
+            d, p, r, _ = self._relax_body(dist, parent, frontier, wave)
             return d, p, r
 
         return epoch
@@ -269,6 +271,7 @@ class DistributedSSSP:
                  **_SHARD_MAP_KW)
         def delete_epoch(dist, parent, seed, esrc, edst, ew, eact):
             row0 = jnp.int32(self._flat_index()) * self.npp
+            wave = shard_segment_wave(esrc, edst, ew, eact, row0, self.npp)
 
             if self.cfg.exchange == "delta":
                 aff, inv_rounds = self._invalidate_delta(parent, seed, row0)
@@ -280,10 +283,10 @@ class DistributedSSSP:
 
             if self.cfg.exchange == "delta":
                 dist, parent, rounds, _ = self._recompute_delta(
-                    dist, parent, aff, esrc, edst, ew, eact, row0)
+                    dist, parent, aff, esrc, edst, eact, wave, row0)
             else:
                 dist, parent, rounds, _ = self._recompute_pull_push(
-                    dist, parent, aff, esrc, edst, ew, eact, row0)
+                    dist, parent, aff, wave)
             return dist, parent, rounds + inv_rounds
 
         return delete_epoch
@@ -291,38 +294,39 @@ class DistributedSSSP:
     # -------------------------------------------------- recomputation impls
     # Shared by the static delete epoch above and the sharded dynamic
     # engine's deletion epochs (core/dist_engine.py) — one implementation so
-    # the bit-identical equivalence contract has a single source of truth.
-    # Both return (dist, parent, rounds, messages) with the same semantics
-    # as core/delete.DeleteStats' recompute_{rounds,messages}.
+    # the bit-identical equivalence contract has a single source of truth,
+    # for ANY backend's wave.  Both return (dist, parent, rounds, messages)
+    # with the same semantics as core/delete.DeleteStats'
+    # recompute_{rounds,messages}.
 
-    def _recompute_pull_push(self, dist, parent, aff, esrc, edst, ew, eact,
-                             row0):
-        """Dense pull wave (bulk DistanceQuery: affected dsts pull from
-        valid finite-dist srcs; counted as one round) + push to fixpoint."""
+    def _recompute_pull_push(self, dist, parent, aff, wave):
+        """Dense pull wave (bulk DistanceQuery: one unmasked wave, counted
+        as one round, improvements folded into affected rows only —
+        unaffected rows cannot improve, the pre-deletion state was
+        converged) + push to fixpoint."""
         ax = self.cfg.mesh_axes
-        dist_full = jax.lax.all_gather(dist, ax, tiled=True)
-        dl = edst - row0
-        live = eact & aff[dl] & jnp.isfinite(dist_full[esrc])
-        cand = jnp.where(live, dist_full[esrc] + ew, INF)
-        best = jax.ops.segment_min(cand, dl, num_segments=self.npp)
-        improved = best < dist
-        hit = live & (cand == best[dl]) & improved[dl]
-        cand_src = jnp.where(hit, esrc, BIG)
-        new_par = jax.ops.segment_min(cand_src, dl, num_segments=self.npp)
+        offers = jax.lax.all_gather(dist, ax, tiled=True)
+        best, arg = wave(offers)
+        improved = (best < dist) & aff
         dist = jnp.where(improved, best, dist)
-        parent = jnp.where(improved, new_par, parent)
+        parent = jnp.where(improved, arg, parent)
         n_pull = jax.lax.psum(jnp.sum(improved.astype(jnp.int32)), ax)
         dist, parent, rounds, msgs = self._relax_body(
-            dist, parent, improved, esrc, edst, ew, eact)
+            dist, parent, improved, wave)
         return dist, parent, rounds + 1, msgs + n_pull
 
-    def _recompute_delta(self, dist, parent, aff, esrc, edst, ew, eact, row0):
+    def _recompute_delta(self, dist, parent, aff, esrc, edst, eact, wave,
+                         row0):
         """Bulk DistanceQuery, message form (paper Listing 9): each partition
         broadcasts the ids of the srcs its affected vertices need offers from
         (packed, delta_cap); owners of queried valid vertices become the PUSH
         frontier and normal delta relaxation delivers the offers.  Same
         fixpoint as the dense pull (Appendix A); O(P*cap) bytes instead of
-        O(N).  Overflow falls back to every valid vertex pushing once."""
+        O(N).  Overflow falls back to every valid vertex pushing once.
+
+        The request set is packed from the COO pool slice (maintained for
+        every backend); the offer delivery itself runs through the wave.
+        """
         ax = self.cfg.mesh_axes
         dl = edst - row0
         req = eact & aff[dl]
@@ -348,7 +352,7 @@ class DistributedSSSP:
 
         queried = jax.lax.cond(overflow, dense_front, sparse_front)
         frontier0 = queried & jnp.isfinite(dist)
-        return self._relax_body(dist, parent, frontier0, esrc, edst, ew, eact)
+        return self._relax_body(dist, parent, frontier0, wave)
 
     # --------------------------------------------------- invalidation impls
     def _invalidate_doubling(self, parent, seed):

@@ -14,11 +14,14 @@ Beyond-paper switches:
     invalidation+recompute epoch (union of affected subtrees; DESIGN.md §3).
   * ``use_doubling`` — pointer-doubling invalidation (default True; set False
     for the paper's wave-by-wave flood).
-  * ``relax_backend`` — "segment" (scatter-min over the COO pool),
-    "ellpack" (dense gather + row-min over an incrementally maintained
-    ELLPACK block; the Pallas kernel's layout — DESIGN.md §2), or
-    "sliced" (hub-aware hybrid: per-slice-width ELL + overflow COO lane
-    for power-law hubs — DESIGN.md §6).
+  * ``relax_backend`` — any registered ``RelaxBackend`` (core/backends/,
+    DESIGN.md §7): "segment" (scatter-min over the COO pool), "ellpack"
+    (dense gather + row-min over an incrementally maintained ELLPACK block;
+    the Pallas kernel's layout — DESIGN.md §2), or "sliced" (hub-aware
+    hybrid: per-slice-width ELL + overflow COO lane for power-law hubs —
+    DESIGN.md §6).  The engine itself is backend-agnostic: the ingest path
+    calls the protocol's ``apply_adds`` / ``apply_dels`` / ``relax`` /
+    ``delete`` hooks and never branches on the backend name.
 
 Host-sync rules (DESIGN.md §2.4): the ingest loop never blocks on device
 values.  Round/message stats accumulate in device scalars and are only read
@@ -35,16 +38,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backends as bk_mod
 from repro.core import delete as del_mod
-from repro.core import ellpack as ell_mod
 from repro.core import events as ev
 from repro.core import ingest, relax
+from repro.core.backends import RELAX_BACKENDS
 from repro.core.state import EdgePool, GraphState, SSSPState
 from repro.core.stream import QueryResult, StreamEngineBase
 
 __all__ = ["EngineConfig", "QueryResult", "SSSPDelEngine", "RELAX_BACKENDS"]
-
-RELAX_BACKENDS = ("segment", "ellpack", "sliced")
 
 
 @dataclasses.dataclass
@@ -65,43 +67,30 @@ class EngineConfig:
     sliced_hub_k: int = 32        # hub threshold: rows past it spill to COO
     sliced_init_k: int = 2        # initial per-slice width; doubles at rebuild
 
+    def __post_init__(self):
+        # fail at construction with the valid set, not deep in layout init
+        bk_mod.validate_backend_config(self)
+
 
 class SSSPDelEngine(StreamEngineBase):
     """Host orchestrator; all heavy lifting is jitted device code.
 
     Stream dispatch, lazy device-scalar stats, and the stability metric are
-    shared with the sharded engine via ``StreamEngineBase`` (core/stream.py).
+    shared with the sharded engine via ``StreamEngineBase`` (core/stream.py);
+    everything layout-specific lives behind ``self.backend``
+    (core/backends/, DESIGN.md §7).
     """
 
     def __init__(self, cfg: EngineConfig):
-        assert cfg.relax_backend in RELAX_BACKENDS, cfg.relax_backend
         super().__init__()
         self.cfg = cfg
         self.alloc = ingest.SlotAllocator(cfg.edge_capacity, cfg.on_duplicate)
         self.state = GraphState.init(cfg.num_vertices, cfg.edge_capacity, cfg.source)
-        self._init_ell()
-
-    def _init_ell(self) -> None:
-        cfg = self.cfg
-        self.ellp = None
-        self.ell = None
-        self.slicedp = None
-        self.sell = None
-        if cfg.relax_backend == "segment":
-            return
-        if cfg.relax_backend == "ellpack":
-            self.ellp = ell_mod.EllPlanner(
-                cfg.num_vertices, block_rows=cfg.ell_block_rows,
-                init_k=cfg.ell_init_k)
-            self.ell = self.ellp.empty_state()
-        else:  # "sliced"
-            self.slicedp = ell_mod.SlicedEllPlanner(
-                cfg.num_vertices, slice_rows=cfg.sliced_slice_rows,
-                hub_k=cfg.sliced_hub_k, init_k=cfg.sliced_init_k)
-            self.sell = self.slicedp.empty_state()
         on_tpu = jax.default_backend() == "tpu"
-        self._ell_kernel = on_tpu if cfg.ell_use_kernel is None else cfg.ell_use_kernel
-        self._ell_interpret = not on_tpu
+        use_kernel = on_tpu if cfg.ell_use_kernel is None else cfg.ell_use_kernel
+        self.backend = bk_mod.make_backend(
+            cfg.relax_backend, cfg, use_kernel=use_kernel,
+            interpret=not on_tpu)
 
     # ------------------------------------------------------------------ adds
     def _ingest_adds(self, batch: ev.EventBatch) -> None:
@@ -118,90 +107,12 @@ class SSSPDelEngine(StreamEngineBase):
         # those offers (plus no-op re-offers along other out-edges).
         frontier = relax.frontier_from_vertices(
             jnp.asarray(plan.src), self.cfg.num_vertices)
-        if self.ellp is not None:
-            self._ell_apply_adds(plan)
-            sssp, stats = ell_mod.ell_relax_until_converged(
-                self.state.sssp, self.ell.nbr_idx, self.ell.nbr_w, frontier,
-                num_vertices=self.cfg.num_vertices,
-                use_kernel=self._ell_kernel, interpret=self._ell_interpret)
-        elif self.slicedp is not None:
-            self._sliced_apply_adds(plan)
-            sssp, stats = ell_mod.sliced_relax_until_converged(
-                self.state.sssp, self.sell, frontier,
-                widths=tuple(self.slicedp.widths),
-                slice_rows=self.slicedp.sr,
-                num_vertices=self.cfg.num_vertices,
-                use_kernel=self._ell_kernel, interpret=self._ell_interpret)
-        else:
-            sssp, stats = relax.relax_until_converged(
-                self.state.sssp, edges, frontier,
-                num_vertices=self.cfg.num_vertices)
+        self.backend.apply_adds(plan, self.alloc)
+        sssp, stats = self.backend.relax(self.state.sssp, edges, frontier)
         self.state = dataclasses.replace(self.state, edges=edges, sssp=sssp)
         self.n_adds += len(plan.slots)
         self.n_epochs += 1
-        self._dev_rounds = self._dev_rounds + stats.rounds
-        self._dev_messages = self._dev_messages + stats.messages
-
-    def _ell_apply_adds(self, plan: ingest.PlannedAdds) -> None:
-        """Incremental ELL maintenance for one ADD batch (DESIGN.md §2.3).
-
-        Fresh edges get planner-assigned cells (one idempotent device
-        scatter); weight-decreases resolve their cell on device.  Overflow of
-        any row's fill mark triggers a full rebuild from the host COO mirror
-        — which already contains this batch, so no patch follows.
-        """
-        fresh = plan.fresh
-        rows = plan.dst[fresh].astype(np.int64)
-        kpos = self.ellp.plan_appends(rows)
-        if kpos is None:
-            self.ell = self.ellp.rebuild(*self.alloc.active_coo())
-            return
-        if len(rows):
-            rows_p, kpos_p, src_p, w_p = ingest.pad_pow2(
-                rows.astype(np.int32), kpos, plan.src[fresh], plan.w[fresh])
-            self.ell = ell_mod.ell_append(
-                self.ell, jnp.asarray(rows_p), jnp.asarray(kpos_p),
-                jnp.asarray(src_p), jnp.asarray(w_p))
-        if not fresh.all():
-            upd = ~fresh
-            rows_p, src_p, w_p = ingest.pad_pow2(
-                plan.dst[upd], plan.src[upd], plan.w[upd])
-            self.ell = ell_mod.ell_update_min(
-                self.ell, jnp.asarray(rows_p), jnp.asarray(src_p),
-                jnp.asarray(w_p))
-
-    def _sliced_apply_adds(self, plan: ingest.PlannedAdds) -> None:
-        """Incremental hybrid-layout maintenance for one ADD batch
-        (DESIGN.md §6).  Fresh edges get planner-assigned ELL cells or — for
-        rows at the hub threshold — overflow entries; weight-decreases
-        resolve their cell/entry on device.  Slice-width or overflow
-        exhaustion triggers a full rebuild from the host COO mirror (which
-        already contains this batch, so no patch follows)."""
-        fresh = plan.fresh
-        sp = self.slicedp.plan_appends(
-            plan.dst[fresh].astype(np.int64), plan.src[fresh], plan.w[fresh])
-        if sp is None:
-            self.sell = self.slicedp.rebuild(*self.alloc.active_coo())
-            return
-        if len(sp.pos):
-            pos_p, rows_p, kpos_p, src_p, w_p = ingest.pad_pow2(
-                sp.pos, sp.rows, sp.kpos, sp.src, sp.w)
-            self.sell = ell_mod.sliced_append(
-                self.sell, jnp.asarray(pos_p), jnp.asarray(rows_p),
-                jnp.asarray(kpos_p), jnp.asarray(src_p), jnp.asarray(w_p))
-        if len(sp.opos):
-            opos_p, osrc_p, orows_p, ow_p = ingest.pad_pow2(
-                sp.opos, sp.osrc, sp.orows, sp.ow)
-            self.sell = ell_mod.sliced_spill(
-                self.sell, jnp.asarray(opos_p), jnp.asarray(osrc_p),
-                jnp.asarray(orows_p), jnp.asarray(ow_p))
-        if not fresh.all():
-            upd = ~fresh
-            rows_p, src_p, w_p = ingest.pad_pow2(
-                plan.dst[upd], plan.src[upd], plan.w[upd])
-            self.sell = ell_mod.sliced_update_min(
-                self.sell, jnp.asarray(rows_p), jnp.asarray(src_p),
-                jnp.asarray(w_p), width=self.slicedp.max_width)
+        self._accumulate_relax(stats)
 
     # ------------------------------------------------------------------ dels
     def _ingest_dels(self, batch: ev.EventBatch) -> None:
@@ -216,39 +127,12 @@ class SSSPDelEngine(StreamEngineBase):
                 self.state.sssp, jnp.asarray(psrc_p), jnp.asarray(pdst_p),
                 self.cfg.num_vertices)
             edges = ingest.apply_dels(self.state.edges, jnp.asarray(slots_p))
+            self.backend.apply_dels(pdst_p, psrc_p)
             # Non-tree deletions (all-false seed) are a device no-op with
             # zeroed stats — cheaper than syncing on bool(jnp.any(seed)).
-            if self.ellp is not None:
-                self.ell = ell_mod.ell_delete(
-                    self.ell, jnp.asarray(pdst_p), jnp.asarray(psrc_p))
-                sssp, dstats = ell_mod.ell_invalidate_and_recompute(
-                    self.state.sssp, self.ell.nbr_idx, self.ell.nbr_w, seed,
-                    num_vertices=self.cfg.num_vertices,
-                    use_doubling=self.cfg.use_doubling,
-                    use_kernel=self._ell_kernel,
-                    interpret=self._ell_interpret)
-            elif self.slicedp is not None:
-                self.sell = ell_mod.sliced_delete(
-                    self.sell, jnp.asarray(pdst_p), jnp.asarray(psrc_p),
-                    width=self.slicedp.max_width)
-                sssp, dstats = ell_mod.sliced_invalidate_and_recompute(
-                    self.state.sssp, self.sell, seed,
-                    widths=tuple(self.slicedp.widths),
-                    slice_rows=self.slicedp.sr,
-                    num_vertices=self.cfg.num_vertices,
-                    use_doubling=self.cfg.use_doubling,
-                    use_kernel=self._ell_kernel,
-                    interpret=self._ell_interpret)
-            else:
-                sssp, dstats = del_mod.invalidate_and_recompute(
-                    self.state.sssp, edges, seed,
-                    num_vertices=self.cfg.num_vertices,
-                    use_doubling=self.cfg.use_doubling)
+            sssp, dstats = self.backend.delete(self.state.sssp, edges, seed)
             self.state = dataclasses.replace(self.state, edges=edges, sssp=sssp)
-            self._dev_rounds = (self._dev_rounds + dstats.invalidation_rounds
-                                + dstats.recompute_rounds)
-            self._dev_messages = (self._dev_messages + dstats.recompute_messages
-                                  + dstats.affected)
+            self._accumulate_delete(dstats)
             self.n_dels += len(slots)
             self.n_epochs += 1
 
@@ -267,8 +151,9 @@ class SSSPDelEngine(StreamEngineBase):
     # ------------------------------------------------------------ checkpoint
     def checkpoint(self) -> dict[str, np.ndarray]:
         """O(N+E) snapshot for fault tolerance (see train/checkpoint.py for
-        the sharded writer used at scale).  The ELL block is NOT serialized —
-        it is a derived view, rebuilt from the pool on restore."""
+        the sharded writer used at scale).  Backend layout state is NOT
+        serialized — it is a derived view, rebuilt from the pool on
+        restore (the protocol's checkpoint-participation rule)."""
         e, s = self.state.edges, self.state.sssp
         return {
             "src": np.asarray(e.src), "dst": np.asarray(e.dst),
@@ -289,9 +174,4 @@ class SSSPDelEngine(StreamEngineBase):
         self.alloc = ingest.SlotAllocator.from_pool(
             self.cfg.edge_capacity, self.cfg.on_duplicate,
             ckpt["src"], ckpt["dst"], ckpt["w"], ckpt["active"])
-        if self.ellp is not None:
-            self._init_ell()
-            self.ell = self.ellp.rebuild(*self.alloc.active_coo())
-        elif self.slicedp is not None:
-            self._init_ell()
-            self.sell = self.slicedp.rebuild(*self.alloc.active_coo())
+        self.backend.restore(self.alloc)

@@ -11,10 +11,16 @@ that is *stream* logic rather than *epoch* logic lives here:
   * lazy device-scalar stats counters (DESIGN.md §2.4: the ingest loop never
     blocks on a device value — rounds/messages accumulate on device and are
     only read back inside ``query()``);
-  * the paper's §5.4 predecessor-stability metric.
+  * the paper's §5.4 predecessor-stability metric;
+  * the device-scalar stat accumulators the epoch results fold into.
 
 Subclasses implement ``_ingest_adds`` / ``_ingest_dels`` / ``query`` and keep
-``_dev_rounds`` / ``_dev_messages`` as device scalars.
+``_dev_rounds`` / ``_dev_messages`` as device scalars.  Layout-specific work
+lives one layer down, behind the ``RelaxBackend`` protocol
+(core/backends/, DESIGN.md §7): the single-device engine folds its
+backend's epoch stats through ``_accumulate_relax`` /
+``_accumulate_delete``; the sharded engine threads the same counters
+through its shard_map epochs as replicated device scalars.
 """
 from __future__ import annotations
 
@@ -64,6 +70,21 @@ class StreamEngineBase:
             "messages": self.n_messages, "adds": self.n_adds,
             "dels": self.n_dels,
         }
+
+    def _accumulate_relax(self, stats) -> None:
+        """Fold one relaxation epoch's ``RelaxStats`` into the device
+        scalars (lazy add — no host sync)."""
+        self._dev_rounds = self._dev_rounds + stats.rounds
+        self._dev_messages = self._dev_messages + stats.messages
+
+    def _accumulate_delete(self, dstats) -> None:
+        """Fold one deletion epoch's ``DeleteStats`` into the device
+        scalars; ``affected`` counts as messages (the SetToInfinity
+        deliveries), matching the sharded epochs' accounting."""
+        self._dev_rounds = (self._dev_rounds + dstats.invalidation_rounds
+                            + dstats.recompute_rounds)
+        self._dev_messages = (self._dev_messages + dstats.recompute_messages
+                              + dstats.affected)
 
     # ------------------------------------------------------------- interface
     def _deletion_groups(self, batch: ev.EventBatch

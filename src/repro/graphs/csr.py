@@ -8,6 +8,14 @@ entries point at row 0 with +inf weight so they never win a min.
 All builders are fancy-indexed scatters — no per-row Python loops — so the
 dynamic engine can afford full rebuilds on ELL capacity overflow (DESIGN.md
 §2.3): a rebuild is O(E) numpy work plus one host->device transfer.
+
+Per-window building (DESIGN.md §7.2): ``ell_from_coo`` and
+``sliced_ell_from_coo`` take ``row0`` so a caller can build the layout of
+one vertex window ``[row0, row0 + n)`` directly from globally-addressed
+edges — the sharded engine's per-partition planners build exactly their
+owned window this way (dst-owner placement guarantees every edge's dst
+falls inside it).  ``row0=0`` is the whole-graph build and the two must
+agree block-for-block (test_sliced_layout.py window round-trips).
 """
 from __future__ import annotations
 
@@ -85,7 +93,7 @@ def csr_to_sliced_ell(n: int, indptr: np.ndarray, cols: np.ndarray,
 
 def next_pow2(x: int) -> int:
     """Smallest power of two >= x (shared by the layout builders here and
-    the engine planners in core/ellpack.py)."""
+    the engine planners in core/backends/)."""
     m = 1
     while m < x:
         m <<= 1
@@ -114,6 +122,7 @@ def sliced_ell_from_coo(
     n: int, src: np.ndarray, dst: np.ndarray, w: np.ndarray, *,
     slice_rows: int = 256, hub_k: int = 32, n_rows: int | None = None,
     widths: list[int] | None = None, overflow_capacity: int | None = None,
+    row0: int = 0,
 ):
     """Hub-aware hybrid layout: flat sliced-ELL + COO overflow (by dst).
 
@@ -136,10 +145,18 @@ def sliced_ell_from_coo(
     ``widths`` (one pow2 per slice, each >= the slice's capped max degree)
     and ``overflow_capacity`` override the tight defaults — the engine's
     planner passes its monotone-grown values so rebuilds amortize.
+
+    ``row0`` builds the vertex window ``[row0, row0 + n)``: ``dst`` stays
+    globally addressed (every value must fall in the window; the returned
+    rows and overflow ``odst`` are window-local), ``src`` ids pass through
+    untouched — cells always store global in-neighbor ids.
     """
     assert slice_rows >= 1 and slice_rows == next_pow2(slice_rows), slice_rows
     hub_k = next_pow2(max(hub_k, 1))
-    indptr, cols, ws, _ = coo_to_csr(n, np.asarray(src), np.asarray(dst),
+    dst = np.asarray(dst, np.int64) - row0
+    assert not len(dst) or (dst.min() >= 0 and dst.max() < n), \
+        f"dst outside window [row0={row0}, row0+{n})"
+    indptr, cols, ws, _ = coo_to_csr(n, np.asarray(src), dst,
                                      np.asarray(w), by="dst")
     R = -(-max(n, 1) // slice_rows) * slice_rows if n_rows is None else n_rows
     assert R >= n and R % slice_rows == 0, (R, n, slice_rows)
@@ -182,14 +199,19 @@ def sliced_ell_from_coo(
 
 
 def ell_from_coo(n: int, src: np.ndarray, dst: np.ndarray, w: np.ndarray,
-                 *, k: int, n_rows: int | None = None):
+                 *, k: int, n_rows: int | None = None, row0: int = 0):
     """By-destination ELL directly from COO: (nbr_idx, nbr_w, fill).
 
     ``fill`` is the per-row occupancy (== in-degree; the incremental
     maintenance path treats it as a high-water mark).  Requires
     ``k >= max in-degree`` — the engine's rebuild policy guarantees it.
+    ``row0`` builds the vertex window ``[row0, row0 + n)`` from globally
+    addressed ``dst`` (src ids pass through untouched).
     """
-    indptr, cols, ws, _ = coo_to_csr(n, np.asarray(src), np.asarray(dst),
+    dst = np.asarray(dst, np.int64) - row0
+    assert not len(dst) or (dst.min() >= 0 and dst.max() < n), \
+        f"dst outside window [row0={row0}, row0+{n})"
+    indptr, cols, ws, _ = coo_to_csr(n, np.asarray(src), dst,
                                      np.asarray(w), by="dst")
     deg = np.diff(indptr)
     assert int(deg.max(initial=0)) <= k, (int(deg.max(initial=0)), k)

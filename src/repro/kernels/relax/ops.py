@@ -3,8 +3,8 @@
 ``relax_wave`` composes the kernel (or the jnp ref) with the engine-level
 update rule: take the elementwise min against current distances, emit the
 improved mask (next frontier) and updated parents.  The host-side ELL builder
-lives in repro.graphs.csr; the dynamic engine's incremental ELL maintenance
-lives in repro.core.ellpack.
+lives in repro.graphs.csr; the dynamic engines' incremental ELL maintenance
+lives in repro.core.backends.ellpack.
 
 Frontier masking (work-efficiency, DESIGN.md §2.2): sources outside the
 frontier are masked to +inf *before* the gather, so a wave only delivers

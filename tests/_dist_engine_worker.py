@@ -4,10 +4,17 @@ Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 (set by the
 parent test process).  Replays the same mixed ADD/DEL/QUERY stream through
 the single-device ``SSSPDelEngine`` and the 8-partition
 ``ShardedSSSPDelEngine`` on a (2,2,2) mesh — the production axis layout —
-and asserts bit-identical (dist, parent) at every query point, plus
-matching round/message stats for the allgather exchange.
+with the SAME relaxation backend on both sides, and asserts bit-identical
+(dist, parent) at every query point, plus matching round/message stats for
+the allgather exchange.
+
+``--ckpt`` additionally exercises the crash-restart path: after half the
+stream the sharded engine is checkpointed, a FRESH engine (fresh planners,
+fresh backend layout) restores the snapshot and ingests the rest — the
+restored run must stay on the reference trajectory query for query.
 
 Usage: _dist_engine_worker.py <exchange> [batch_deletions] [use_doubling]
+                              [backend] [--ckpt]
 Prints "OK <queries> <rounds>" on success.
 """
 import os
@@ -27,8 +34,16 @@ from repro.core.engine import EngineConfig, SSSPDelEngine  # noqa: E402
 from repro.graphs import generators, window  # noqa: E402
 from repro.launch.mesh import _mk  # noqa: E402
 
+# tiny layout knobs so rebuild/spill paths run under sharding too
+BACKEND_KW = {
+    "segment": {},
+    "ellpack": dict(ell_init_k=2),
+    "sliced": dict(sliced_slice_rows=8, sliced_hub_k=4, sliced_init_k=1),
+}
 
-def main(exchange: str, batch_deletions: bool, use_doubling: bool) -> None:
+
+def main(exchange: str, batch_deletions: bool, use_doubling: bool,
+         backend: str = "segment", ckpt: bool = False) -> None:
     assert len(jax.devices()) == 8, f"expected 8 devices, got {len(jax.devices())}"
     mesh = _mk((2, 2, 2), ("pod", "data", "model"))
     n, src, dst, w = generators.erdos_renyi(120, 700, seed=23)
@@ -36,26 +51,41 @@ def main(exchange: str, batch_deletions: bool, use_doubling: bool) -> None:
     log = window.sliding_window_stream(src, dst, w, window=len(src) // 3,
                                        delta=0.6, seed=23,
                                        query_every=len(src) // 4)
+    kw = BACKEND_KW[backend]
 
     ref = SSSPDelEngine(EngineConfig(
         n, len(src) + 64, source, batch_deletions=batch_deletions,
-        use_doubling=use_doubling))
-    # tiny delta_cap so the delta exchange exercises its overflow fallback
-    eng = ShardedSSSPDelEngine(
-        ShardedEngineConfig(n, len(src) + 64, source, exchange=exchange,
-                            delta_cap=16, batch_deletions=batch_deletions,
-                            use_doubling=use_doubling),
-        mesh=mesh)
+        use_doubling=use_doubling, relax_backend=backend, **kw))
+
+    def mk_sharded():
+        # tiny delta_cap so the delta exchange exercises its overflow fallback
+        return ShardedSSSPDelEngine(
+            ShardedEngineConfig(n, len(src) + 64, source, exchange=exchange,
+                                delta_cap=16, batch_deletions=batch_deletions,
+                                use_doubling=use_doubling,
+                                relax_backend=backend, **kw),
+            mesh=mesh)
 
     res_ref = ref.ingest_log(log) + [ref.query()]
-    res_eng = eng.ingest_log(log) + [eng.query()]
+    if ckpt:
+        half = len(log) // 2
+        eng0 = mk_sharded()
+        res_eng = eng0.ingest_log(log[:half])
+        snapshot = eng0.checkpoint()
+        del eng0                      # crash: the engine is gone
+        eng = mk_sharded()            # restart: fresh planners + layout
+        eng.restore(snapshot)
+        res_eng += eng.ingest_log(log[half:]) + [eng.query()]
+    else:
+        eng = mk_sharded()
+        res_eng = eng.ingest_log(log) + [eng.query()]
     assert len(res_ref) == len(res_eng) and len(res_ref) > 2
     for i, (a, b) in enumerate(zip(res_ref, res_eng)):
         np.testing.assert_array_equal(a.dist, b.dist,
                                       err_msg=f"dist mismatch at query {i}")
         np.testing.assert_array_equal(a.parent, b.parent,
                                       err_msg=f"parent mismatch at query {i}")
-    if exchange == "allgather":
+    if exchange == "allgather" and not ckpt:
         assert ref.n_rounds == eng.n_rounds, (ref.n_rounds, eng.n_rounds)
         assert ref.n_messages == eng.n_messages, (
             ref.n_messages, eng.n_messages)
@@ -65,7 +95,9 @@ def main(exchange: str, batch_deletions: bool, use_doubling: bool) -> None:
 
 
 if __name__ == "__main__":
-    exchange = sys.argv[1] if len(sys.argv) > 1 else "allgather"
-    bd = bool(int(sys.argv[2])) if len(sys.argv) > 2 else False
-    ud = bool(int(sys.argv[3])) if len(sys.argv) > 3 else True
-    main(exchange, bd, ud)
+    args = [a for a in sys.argv[1:] if a != "--ckpt"]
+    exchange = args[0] if len(args) > 0 else "allgather"
+    bd = bool(int(args[1])) if len(args) > 1 else False
+    ud = bool(int(args[2])) if len(args) > 2 else True
+    backend = args[3] if len(args) > 3 else "segment"
+    main(exchange, bd, ud, backend, ckpt="--ckpt" in sys.argv[1:])

@@ -1,7 +1,7 @@
-"""Relaxation-backend equivalence: the ELLPACK and sliced/hybrid backends
-must be drop-ins for the segment backend — bit-identical (dist, parent) on
-any dynamic stream, and all must satisfy the Dijkstra oracle at every query
-point (DESIGN.md §2.2, §6).
+"""Relaxation-backend equivalence: every registered RelaxBackend must be a
+drop-in for the segment backend — bit-identical (dist, parent) on any
+dynamic stream, and all must satisfy the Dijkstra oracle at every query
+point (DESIGN.md §2.2, §6, §7).
 
 The sweep crosses backend-relevant switches (doubling vs flood invalidation,
 batched vs per-event deletions) and runs with deliberately tiny initial ELL
@@ -10,14 +10,15 @@ per-slice doubling rebuilds AND the hub overflow-spill path (sliced) are all
 exercised repeatedly.
 
 The same contract extends across the *partition-count* axis: the sharded
-engine (core/dist_engine.py, DESIGN.md §5) must be bit-identical to both
-single-device backends on the same streams — P=1 here, P=8 forced host
+engine (core/dist_engine.py, DESIGN.md §5/§7.2) must be bit-identical to
+every single-device backend on the same streams — P=1 here, P=8 forced host
 devices in tests/test_dist_engine.py.
 """
 import numpy as np
 import pytest
 
 from repro.core import events as ev
+from repro.core.backends import EllpackBackend, SlicedBackend
 from repro.core.dist_engine import ShardedEngineConfig, ShardedSSSPDelEngine
 from repro.core.engine import EngineConfig, SSSPDelEngine
 from repro.core.oracle import check_tree, edges_of_pool
@@ -26,6 +27,14 @@ from repro.graphs import generators, window
 
 # tiny hub threshold + slice rows: many slices, frequent spills & rebuilds
 SLICED_KW = dict(sliced_slice_rows=32, sliced_hub_k=4, sliced_init_k=1)
+# per-backend construction kwargs (backend knobs only apply to their
+# backend — EngineConfig validation enforces it)
+BACKEND_KW = {
+    "segment": {},
+    # ell_init_k=2 forces the capacity-doubling rebuild path several times
+    "ellpack": dict(ell_init_k=2),
+    "sliced": SLICED_KW,
+}
 
 
 def _dynamic_stream(seed: int, *, n=90, m=520, delta=0.6):
@@ -50,20 +59,13 @@ def _oracle_check(eng: SSSPDelEngine, n: int, source: int):
     e = eng.state.edges
     es, ed, ew = edges_of_pool(e.src, e.dst, e.w, e.active)
     check_tree(n, es, ed, ew, source, q.dist, q.parent)
-    if eng.ell is not None:
-        from repro.core.ellpack import ell_invariants
-        for k, ok in ell_invariants(eng.ell).items():
-            assert bool(ok), f"ELL invariant violated: {k}"
+    bk = eng.backend
+    for k, ok in bk.invariants().items():
+        assert bool(ok), f"{bk.name} invariant violated: {k}"
+    if isinstance(bk, (EllpackBackend, SlicedBackend)):
         # the device fill marks must track the host planner's exactly
-        np.testing.assert_array_equal(np.asarray(eng.ell.fill),
-                                      eng.ellp.fill)
-    if getattr(eng, "sell", None) is not None:
-        from repro.core.ellpack import sliced_invariants
-        for k, ok in sliced_invariants(
-                eng.sell, width=eng.slicedp.max_width).items():
-            assert bool(ok), f"sliced invariant violated: {k}"
-        np.testing.assert_array_equal(np.asarray(eng.sell.fill),
-                                      eng.slicedp.fill)
+        np.testing.assert_array_equal(np.asarray(bk.state.fill),
+                                      bk.planner.fill)
     return q
 
 
@@ -72,13 +74,12 @@ def _oracle_check(eng: SSSPDelEngine, n: int, source: int):
 def test_backends_bit_identical_on_dynamic_stream(use_doubling, batch_deletions):
     n, m, log = _dynamic_stream(seed=11 + 2 * use_doubling + batch_deletions)
     source = 3
-    # ell_init_k=2 forces the capacity-doubling rebuild path several times
     ell = _run("ellpack", n, m, log, source, use_doubling=use_doubling,
-               batch_deletions=batch_deletions, ell_init_k=2)
+               batch_deletions=batch_deletions, **BACKEND_KW["ellpack"])
     seg = _run("segment", n, m, log, source, use_doubling=use_doubling,
                batch_deletions=batch_deletions)
     sld = _run("sliced", n, m, log, source, use_doubling=use_doubling,
-               batch_deletions=batch_deletions, **SLICED_KW)
+               batch_deletions=batch_deletions, **BACKEND_KW["sliced"])
     q_ell = _oracle_check(ell, n, source)
     q_seg = _oracle_check(seg, n, source)
     q_sld = _oracle_check(sld, n, source)
@@ -89,35 +90,37 @@ def test_backends_bit_identical_on_dynamic_stream(use_doubling, batch_deletions)
     # same waves, same improvements — the stats must agree too
     assert seg.n_rounds == ell.n_rounds == sld.n_rounds
     assert seg.n_messages == ell.n_messages == sld.n_messages
-    assert ell.ellp.rebuilds >= 1, "rebuild path not exercised"
-    assert sld.slicedp.rebuilds >= 1, "sliced rebuild path not exercised"
-    assert sld.slicedp.spills >= 1, "hub overflow-spill path not exercised"
+    assert ell.backend.planner.rebuilds >= 1, "rebuild path not exercised"
+    assert sld.backend.planner.rebuilds >= 1, \
+        "sliced rebuild path not exercised"
+    assert sld.backend.planner.spills >= 1, \
+        "hub overflow-spill path not exercised"
 
 
-def test_sharded_engine_joins_the_equivalence_contract():
-    """Partition axis: segment == ellpack == sharded (P=1) — same dist,
-    parent, and wave stats on the same dynamic stream (DESIGN.md §5.4)."""
+@pytest.mark.parametrize("backend", ["segment", "ellpack", "sliced"])
+def test_sharded_engine_joins_the_equivalence_contract(backend):
+    """Partition axis: every backend, sharded (P=1) vs single-device — same
+    dist, parent, and wave stats on the same dynamic stream (DESIGN.md
+    §5.4/§7.2); and all sharded backends equal the single-device segment
+    engine transitively."""
     n, m, log = _dynamic_stream(seed=11)
     source = 3
+    kw = BACKEND_KW[backend]
     seg = _run("segment", n, m, log, source,
                use_doubling=True, batch_deletions=False)
-    ell = _run("ellpack", n, m, log, source,
-               use_doubling=True, batch_deletions=False, ell_init_k=2)
-    shd = ShardedSSSPDelEngine(ShardedEngineConfig(n, m + 64, source))
+    shd = ShardedSSSPDelEngine(ShardedEngineConfig(
+        n, m + 64, source, relax_backend=backend, **kw))
     shd.ingest_log(log)
     q_seg, q_shd = seg.query(), shd.query()
-    q_ell = ell.query()
     np.testing.assert_array_equal(q_seg.dist, q_shd.dist)
     np.testing.assert_array_equal(q_seg.parent, q_shd.parent)
-    np.testing.assert_array_equal(q_ell.dist, q_shd.dist)
-    np.testing.assert_array_equal(q_ell.parent, q_shd.parent)
-    assert seg.n_rounds == shd.n_rounds == ell.n_rounds
-    assert seg.n_messages == shd.n_messages == ell.n_messages
+    assert seg.n_rounds == shd.n_rounds
+    assert seg.n_messages == shd.n_messages
 
 
 def test_backends_identical_parents_under_pervasive_ties():
     """Unit weights make equal-cost predecessors pervasive (paper §5.4); the
-    smallest-src-id rule must make both backends pick the same parent."""
+    smallest-src-id rule must make all backends pick the same parent."""
     n, src, dst, w = generators.erdos_renyi(100, 900, seed=21)
     w = np.ones_like(w)
     log = window.sliding_window_stream(src, dst, w, window=300, delta=0.5,
@@ -125,8 +128,8 @@ def test_backends_identical_parents_under_pervasive_ties():
     res = {}
     for backend in ("segment", "ellpack", "sliced"):
         eng = SSSPDelEngine(EngineConfig(n, len(src) + 64, 2,
-                                         relax_backend=backend, ell_init_k=2,
-                                         **SLICED_KW))
+                                         relax_backend=backend,
+                                         **BACKEND_KW[backend]))
         eng.ingest_log(log)
         res[backend] = _oracle_check(eng, n, 2)
     for backend in ("ellpack", "sliced"):
@@ -142,7 +145,7 @@ def test_capacity_doubling_under_degree_growth():
     eng = SSSPDelEngine(EngineConfig(n, 512, 1, relax_backend="ellpack",
                                      ell_init_k=2))
     eng.ingest_log(ev.adds([1], [hub], [10.0]))
-    k_seen = {eng.ellp.k}
+    k_seen = {eng.backend.planner.k}
     nxt = 2
     for size in (4, 8, 16, 32, 64):
         tails = np.arange(nxt, nxt + size)
@@ -150,9 +153,9 @@ def test_capacity_doubling_under_degree_growth():
         eng.ingest_log(ev.adds([1] * size, tails, [1.0] * size))  # reach tails
         eng.ingest_log(ev.adds(tails, [hub] * size,
                                np.linspace(2.0, 3.0, size)))
-        k_seen.add(eng.ellp.k)
+        k_seen.add(eng.backend.planner.k)
         _oracle_check(eng, n, 1)
-    assert eng.ellp.rebuilds >= 3
+    assert eng.backend.planner.rebuilds >= 3
     assert len(k_seen) >= 3, f"ELL width never doubled: {sorted(k_seen)}"
 
 
@@ -172,14 +175,17 @@ def test_ellpack_oracle_at_every_query_point():
 
 def test_ellpack_min_duplicate_policy_matches_segment():
     # repeated adds of the same edge with shrinking weights must propagate
-    # as weight-decreases under on_duplicate="min" in both backends
+    # as weight-decreases under on_duplicate="min" in all backends
     n = 8
+    tiny = {"segment": {},
+            "ellpack": dict(ell_init_k=2),
+            "sliced": dict(sliced_slice_rows=4, sliced_hub_k=2,
+                           sliced_init_k=1)}
     res = {}
     for backend in ("segment", "ellpack", "sliced"):
         eng = SSSPDelEngine(EngineConfig(
             n, 32, 0, relax_backend=backend, on_duplicate="min",
-            ell_init_k=2, sliced_slice_rows=4, sliced_hub_k=2,
-            sliced_init_k=1))
+            **tiny[backend]))
         eng.ingest_log(ev.adds([0, 1, 0, 0], [1, 2, 2, 1],
                                [4.0, 1.0, 9.0, 2.0]))
         eng.ingest_log(ev.adds([0], [1], [1.0]))   # decrease 0->1 to 1.0
@@ -195,8 +201,9 @@ def test_ellpack_min_duplicate_policy_matches_segment():
 @pytest.mark.parametrize("backend", ["ellpack", "sliced"])
 def test_ell_backends_checkpoint_restore_roundtrip(backend):
     n, m, log = _dynamic_stream(seed=9)
+    kw = BACKEND_KW[backend]
     eng = SSSPDelEngine(EngineConfig(n, m + 64, 0, relax_backend=backend,
-                                     ell_init_k=2, **SLICED_KW))
+                                     **kw))
     half = len(log) // 2
     eng.ingest_log(log[:half])
     ckpt = eng.checkpoint()
@@ -204,7 +211,8 @@ def test_ell_backends_checkpoint_restore_roundtrip(backend):
     want = eng.query()
 
     eng2 = SSSPDelEngine(EngineConfig(n, m + 64, 0, relax_backend=backend,
-                                      **SLICED_KW))
+                                      **{k: v for k, v in kw.items()
+                                         if not k.startswith("ell_")}))
     eng2.restore(ckpt)
     eng2.ingest_log(log[half:])
     got = eng2.query()
@@ -219,16 +227,19 @@ def test_arch_config_bridges_backend_selection():
     arch = dataclasses.replace(c_sssp.REDUCED, relax_backend="ellpack",
                                num_vertices=64, ell_init_k=2)
     eng = SSSPDelEngine(arch.engine_config(edge_capacity=256, source=0))
-    assert eng.ellp is not None
+    assert isinstance(eng.backend, EllpackBackend)
     eng.ingest_log(ev.adds([0, 1, 2], [1, 2, 3], [1.0, 1.0, 1.0]))
     _oracle_check(eng, 64, 0)
+    sh_cfg = dataclasses.replace(arch, edges_per_part=256) \
+        .sharded_engine_config(source=0)
+    assert sh_cfg.relax_backend == "ellpack" and sh_cfg.ell_init_k == 2
 
 
 @pytest.mark.parametrize("backend", ["ellpack", "sliced"])
 def test_ell_backends_non_tree_deletion_is_free(backend):
     n = 6
     eng = SSSPDelEngine(EngineConfig(n, 64, 0, relax_backend=backend,
-                                     **SLICED_KW))
+                                     **BACKEND_KW[backend]))
     eng.ingest_log(ev.adds([0, 0, 1], [1, 2, 2], [1.0, 1.0, 5.0]))
     rounds_before = eng.n_rounds
     eng.ingest_log(ev.dels([1], [2]))  # not a tree edge (0->2 is shorter)
@@ -249,11 +260,15 @@ def test_backends_bit_identical_on_power_law_hub_stream():
     log = window.sliding_window_stream(src, dst, w, window=len(src) // 3,
                                        delta=0.5, seed=31,
                                        query_every=len(src) // 2)
+    hub_kw = {"segment": {},
+              "ellpack": dict(ell_init_k=2),
+              "sliced": dict(sliced_slice_rows=32, sliced_hub_k=8,
+                             sliced_init_k=1)}
     res = {}
     for backend in ("segment", "ellpack", "sliced"):
         eng = SSSPDelEngine(EngineConfig(
-            nv, len(src) + 64, source, relax_backend=backend, ell_init_k=2,
-            sliced_slice_rows=32, sliced_hub_k=8, sliced_init_k=1))
+            nv, len(src) + 64, source, relax_backend=backend,
+            **hub_kw[backend]))
         eng.ingest_log(log)
         res[backend] = (_oracle_check(eng, nv, source), eng)
     q_seg, seg = res["segment"]
@@ -263,11 +278,11 @@ def test_backends_bit_identical_on_power_law_hub_stream():
         np.testing.assert_array_equal(q_seg.parent, q.parent)
         assert seg.n_rounds == eng.n_rounds
         assert seg.n_messages == eng.n_messages
-    sld = res["sliced"][1]
-    assert sld.slicedp.spills >= 1 or sld.slicedp.ofill > 0, \
+    sld = res["sliced"][1].backend
+    assert sld.planner.spills >= 1 or sld.planner.ofill > 0, \
         "hub stream never touched the overflow lane"
     # the hybrid stores far fewer device values than the dense block it
     # replaces (ELL cell = idx+w, overflow entry = src+dst+w)
-    dense_vals = 2 * res["ellpack"][1].ell.nbr_w.size
-    hybrid_vals = 2 * sld.sell.flat_w.size + 3 * sld.sell.ow.size
+    dense_vals = 2 * res["ellpack"][1].backend.state.nbr_w.size
+    hybrid_vals = 2 * sld.state.flat_w.size + 3 * sld.state.ow.size
     assert hybrid_vals < dense_vals, (hybrid_vals, dense_vals)

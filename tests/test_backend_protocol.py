@@ -1,0 +1,151 @@
+"""Protocol seams of the backend layer (DESIGN.md §7): registry lookup,
+construction-time config validation, and the per-window builders the
+sharded coordinators build their shard-local layouts with.
+"""
+import numpy as np
+import pytest
+
+from repro.core import backends as bk
+from repro.core.engine import EngineConfig
+from repro.graphs import csr
+
+
+# ---------------------------------------------------------------- registry --
+def test_registry_has_all_stock_backends():
+    assert set(bk.RELAX_BACKENDS) == {"segment", "ellpack", "sliced"}
+    assert set(bk.BACKENDS) == set(bk.SHARDED_BACKENDS)
+    for name, cls in bk.BACKENDS.items():
+        assert cls.name == name
+        assert issubclass(cls, bk.RelaxBackend)
+    for name, cls in bk.SHARDED_BACKENDS.items():
+        assert issubclass(cls, bk.ShardedBackend)
+
+
+def test_registry_lookup_builds_matching_backend():
+    cfg = EngineConfig(16, 64, 0, relax_backend="ellpack", ell_init_k=2)
+    b = bk.make_backend("ellpack", cfg)
+    assert isinstance(b, bk.EllpackBackend)
+    assert b.planner.k == 2 and b.n == 16
+    with pytest.raises(ValueError, match=r"ellpack.*segment.*sliced"):
+        bk.make_backend("csr", cfg)
+
+
+# -------------------------------------------------------------- validation --
+def test_unknown_backend_raises_with_valid_set():
+    with pytest.raises(ValueError) as ei:
+        EngineConfig(16, 64, 0, relax_backend="elpack")
+    msg = str(ei.value)
+    assert "elpack" in msg
+    for name in ("segment", "ellpack", "sliced"):
+        assert name in msg, f"valid set missing {name}: {msg}"
+
+
+def test_sliced_knobs_on_non_sliced_backend_raise():
+    with pytest.raises(ValueError, match="sliced_hub_k"):
+        EngineConfig(16, 64, 0, relax_backend="ellpack", sliced_hub_k=8)
+    with pytest.raises(ValueError, match="sliced_init_k"):
+        EngineConfig(16, 64, 0, relax_backend="segment", sliced_init_k=4)
+    # the matching backend accepts them
+    EngineConfig(16, 64, 0, relax_backend="sliced", sliced_hub_k=8,
+                 sliced_init_k=4)
+
+
+def test_ell_knobs_on_segment_backend_raise():
+    with pytest.raises(ValueError, match="ell_init_k"):
+        EngineConfig(16, 64, 0, ell_init_k=2)   # default backend = segment
+    # dense-ELL geometry knobs apply ONLY to the ellpack backend (the
+    # sliced layout never reads them — silently ignoring them would let
+    # users believe they tuned something)
+    EngineConfig(16, 64, 0, relax_backend="ellpack", ell_init_k=2)
+    with pytest.raises(ValueError, match="ell_init_k"):
+        EngineConfig(16, 64, 0, relax_backend="sliced", ell_init_k=2)
+    with pytest.raises(ValueError, match="ell_block_rows"):
+        EngineConfig(16, 64, 0, relax_backend="sliced", ell_block_rows=64)
+    # ...but ell_use_kernel is genuinely shared by both ELL-layout backends
+    EngineConfig(16, 64, 0, relax_backend="ellpack", ell_use_kernel=False)
+    EngineConfig(16, 64, 0, relax_backend="sliced", ell_use_kernel=False)
+
+
+def test_sharded_config_validates_identically():
+    from repro.core.dist_engine import ShardedEngineConfig
+    with pytest.raises(ValueError, match="valid backends"):
+        ShardedEngineConfig(16, 64, 0, relax_backend="nope")
+    with pytest.raises(ValueError, match="sliced_hub_k"):
+        ShardedEngineConfig(16, 64, 0, sliced_hub_k=8)
+    with pytest.raises(ValueError, match="exchange"):
+        ShardedEngineConfig(16, 64, 0, exchange="gossip")
+
+
+# ------------------------------------------------------ per-window builders --
+def _window_graph(seed=3, n=90, m=520):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m).astype(np.int32)
+    dst = rng.integers(0, n, m).astype(np.int32)
+    w = rng.random(m).astype(np.float32)
+    # dedup (u,v) like the slot allocator would
+    key = src.astype(np.int64) * n + dst
+    _, first = np.unique(key, return_index=True)
+    return n, src[first], dst[first], w[first]
+
+
+def test_ell_from_coo_window_matches_whole_graph():
+    """Per-shard builder windows vs the whole-graph builder: building each
+    vertex window with ``row0`` from globally-addressed edges must equal the
+    corresponding row block of the whole-graph build — including the RAGGED
+    last partition (n=90 over P=8 windows of npp=12 covers rows 90..95 that
+    exist only as padding)."""
+    n, src, dst, w = _window_graph()
+    P, npp = 8, 12
+    assert P * npp > n                       # ragged: last window is partial
+    deg = np.bincount(dst, minlength=P * npp)
+    k = csr.next_pow2(int(deg.max()))
+    full_idx, full_w, full_fill = csr.ell_from_coo(
+        P * npp, src, np.asarray(dst, np.int64), w, k=k, n_rows=P * npp)
+    for p in range(P):
+        lo, hi = p * npp, (p + 1) * npp
+        sel = (dst >= lo) & (dst < hi)
+        widx, ww, wfill = csr.ell_from_coo(
+            npp, src[sel], dst[sel], w[sel], k=k, n_rows=npp, row0=lo)
+        np.testing.assert_array_equal(widx, full_idx[lo:hi])
+        np.testing.assert_array_equal(ww, full_w[lo:hi])
+        np.testing.assert_array_equal(wfill, full_fill[lo:hi])
+
+
+def test_ell_from_coo_window_rejects_out_of_window_dst():
+    with pytest.raises(AssertionError, match="window"):
+        csr.ell_from_coo(4, np.array([0]), np.array([9]),
+                         np.array([1.0], np.float32), k=2, row0=4)
+
+
+def test_sliced_ell_from_coo_window_matches_whole_graph():
+    """Same contract for the hybrid builder: per-window flat buffers and
+    overflow segments must match the whole-graph build sliced into windows
+    (forcing identical widths, as the sharded coordinator's geometry sync
+    does), again with a ragged last partition."""
+    n, src, dst, w = _window_graph(seed=5)
+    P, npp, sr, hub_k = 8, 12, 4, 4
+    R = P * npp
+    full = csr.sliced_ell_from_coo(R, src, np.asarray(dst, np.int64), w,
+                                   slice_rows=sr, hub_k=hub_k)
+    flat_idx, flat_w, fill, widths, osrc, odst, ow, n_over = full
+    slices_pp = npp // sr
+    _, _, base, _ = csr.sliced_geometry(widths, sr)
+    for p in range(P):
+        lo, hi = p * npp, (p + 1) * npp
+        sel = (dst >= lo) & (dst < hi)
+        wwidths = widths[p * slices_pp:(p + 1) * slices_pp]
+        out = csr.sliced_ell_from_coo(
+            npp, src[sel], dst[sel], w[sel], slice_rows=sr, hub_k=hub_k,
+            widths=list(wwidths), row0=lo)
+        w_flat_idx, w_flat_w, w_fill, _, w_osrc, w_odst, w_ow, w_nov = out
+        a, b = int(base[lo]), int(base[lo] + len(w_flat_idx))
+        np.testing.assert_array_equal(w_flat_idx, flat_idx[a:b])
+        np.testing.assert_array_equal(w_flat_w, flat_w[a:b])
+        np.testing.assert_array_equal(w_fill, fill[lo:hi])
+        # the window's overflow entries are the whole-graph overflow entries
+        # whose dst falls in the window (localized), same CSR order
+        in_win = (odst[:n_over] >= lo) & (odst[:n_over] < hi)
+        np.testing.assert_array_equal(w_osrc[:w_nov], osrc[:n_over][in_win])
+        np.testing.assert_array_equal(w_odst[:w_nov],
+                                      odst[:n_over][in_win] - lo)
+        np.testing.assert_array_equal(w_ow[:w_nov], ow[:n_over][in_win])

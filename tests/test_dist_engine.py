@@ -1,5 +1,6 @@
 """Sharded dynamic engine: equivalence with the single-device engine across
-the partition-count axis (DESIGN.md §5).
+the partition-count axis AND the relaxation-backend axis (DESIGN.md §5,
+§7.2).
 
 P=1 runs inline on the default device (the trivial mesh still goes through
 every shard_map code path).  P=8 runs in a subprocess with forced host
@@ -24,6 +25,13 @@ from repro.graphs import partition as part_mod
 from repro.launch.mesh import _mk
 
 HERE = os.path.dirname(__file__)
+
+# tiny layout knobs so rebuild/spill paths run under sharding too
+BACKEND_KW = {
+    "segment": {},
+    "ellpack": dict(ell_init_k=2),
+    "sliced": dict(sliced_slice_rows=8, sliced_hub_k=4, sliced_init_k=1),
+}
 
 
 def _dynamic_stream(seed, *, n=90, m=520, delta=0.6):
@@ -64,6 +72,26 @@ def test_sharded_matches_single_device(use_doubling, batch_deletions):
     assert ref.n_adds == eng.n_adds and ref.n_dels == eng.n_dels
 
 
+@pytest.mark.parametrize("backend", ["ellpack", "sliced"])
+def test_sharded_backend_matches_single_device_backend(backend):
+    """Backend axis at P=1: the sharded engine with a layout backend is
+    bit-identical — results AND stats — to the single-device engine running
+    the same backend (and transitively to every other backend)."""
+    n, m, log, _ = _dynamic_stream(seed=37)
+    source = 3
+    kw = BACKEND_KW[backend]
+    ref = SSSPDelEngine(EngineConfig(
+        n, m + 64, source, relax_backend=backend, **kw))
+    eng = ShardedSSSPDelEngine(ShardedEngineConfig(
+        n, m + 64, source, relax_backend=backend, **kw))
+    _assert_results_equal(ref.ingest_log(log) + [ref.query()],
+                          eng.ingest_log(log) + [eng.query()])
+    assert ref.n_rounds == eng.n_rounds
+    assert ref.n_messages == eng.n_messages
+    # the coupled rebuild path must actually run under sharding
+    assert sum(pl.rebuilds for pl in eng.bk.planners) >= 1
+
+
 def test_sharded_delta_exchange_matches_single_device():
     """The delta exchange (tiny cap -> overflow fallbacks exercised) reaches
     the same (dist, parent) as the single-device engine on a mixed stream."""
@@ -75,29 +103,47 @@ def test_sharded_delta_exchange_matches_single_device():
                           eng.ingest_log(log) + [eng.query()])
 
 
+def test_sharded_delta_exchange_with_sliced_backend():
+    """Exchange strategy and relaxation backend compose: the delta exchange
+    assembles the offers, the sliced wave reduces them — same fixpoint."""
+    n, m, log, _ = _dynamic_stream(seed=7)
+    ref = SSSPDelEngine(EngineConfig(n, m + 64, 3))
+    eng = ShardedSSSPDelEngine(ShardedEngineConfig(
+        n, m + 64, 3, exchange="delta", delta_cap=8,
+        relax_backend="sliced", **BACKEND_KW["sliced"]))
+    _assert_results_equal(ref.ingest_log(log) + [ref.query()],
+                          eng.ingest_log(log) + [eng.query()])
+
+
 def test_sharded_min_duplicate_policy():
     n = 8
     res = {}
-    for cls, cfg in (
-            (SSSPDelEngine, EngineConfig(n, 32, 0, on_duplicate="min")),
-            (ShardedSSSPDelEngine,
-             ShardedEngineConfig(n, 32, 0, on_duplicate="min"))):
+    for name, cls, cfg in (
+            ("single", SSSPDelEngine, EngineConfig(n, 32, 0, on_duplicate="min")),
+            ("sharded", ShardedSSSPDelEngine,
+             ShardedEngineConfig(n, 32, 0, on_duplicate="min")),
+            ("sharded-ell", ShardedSSSPDelEngine,
+             ShardedEngineConfig(n, 32, 0, on_duplicate="min",
+                                 relax_backend="ellpack", ell_init_k=2))):
         eng = cls(cfg)
         eng.ingest_log(ev.adds([0, 1, 0, 0], [1, 2, 2, 1],
                                [4.0, 1.0, 9.0, 2.0]))
         eng.ingest_log(ev.adds([0], [1], [1.0]))   # decrease 0->1 to 1.0
         eng.ingest_log(ev.adds([0], [2], [20.0]))  # increase is dropped
-        res[cls.__name__] = eng.query()
-    _assert_results_equal([res["SSSPDelEngine"]],
-                          [res["ShardedSSSPDelEngine"]])
-    assert res["SSSPDelEngine"].dist[2] == pytest.approx(2.0)
+        res[name] = eng.query()
+    _assert_results_equal([res["single"]], [res["sharded"]])
+    _assert_results_equal([res["single"]], [res["sharded-ell"]])
+    assert res["single"].dist[2] == pytest.approx(2.0)
 
 
-def test_sharded_ingest_never_reads_device_values(monkeypatch):
-    """DESIGN.md §2.4 for the sharded loop: no device->host readback between
-    QUERY markers — stats stay in device scalars until query()."""
+@pytest.mark.parametrize("backend", ["segment", "ellpack", "sliced"])
+def test_sharded_ingest_never_reads_device_values(backend, monkeypatch):
+    """DESIGN.md §2.4 for the sharded loop, per backend: no device->host
+    readback between QUERY markers — layout patches, coupled rebuilds and
+    epochs all run on host mirrors + device scalars until query()."""
     n, m, log, _ = _dynamic_stream(seed=13)
-    eng = ShardedSSSPDelEngine(ShardedEngineConfig(n, m + 64, 0))
+    eng = ShardedSSSPDelEngine(ShardedEngineConfig(
+        n, m + 64, 0, relax_backend=backend, **BACKEND_KW[backend]))
     topo = log[np.asarray(log.kind) != ev.QUERY]
 
     def trap(*a, **k):
@@ -113,6 +159,35 @@ def test_sharded_ingest_never_reads_device_values(monkeypatch):
         e_src.append(s); e_dst.append(d); e_w.append(w_)
     check_tree(n, np.concatenate(e_src), np.concatenate(e_dst),
                np.concatenate(e_w), 0, q.dist, q.parent)
+
+
+@pytest.mark.parametrize("backend", ["segment", "ellpack", "sliced"])
+def test_sharded_checkpoint_restore_roundtrip(backend):
+    """Crash-restart at P=1: checkpoint mid-stream, restore into a FRESH
+    engine (fresh per-partition planners; backend layout rebuilt from the
+    pool mirrors, not serialized), continue — bit-identical to the
+    uninterrupted run.  The P=8 variant runs in the subprocess worker."""
+    n, m, log, _ = _dynamic_stream(seed=19)
+    kw = BACKEND_KW[backend]
+
+    def mk():
+        return ShardedSSSPDelEngine(ShardedEngineConfig(
+            n, m + 64, 3, relax_backend=backend, **kw))
+
+    eng = mk()
+    half = len(log) // 2
+    eng.ingest_log(log[:half])
+    ckpt = eng.checkpoint()
+    eng.ingest_log(log[half:])
+    want = eng.query()
+
+    eng2 = mk()
+    eng2.restore(ckpt)
+    eng2.ingest_log(log[half:])
+    got = eng2.query()
+    np.testing.assert_array_equal(want.dist, got.dist)
+    np.testing.assert_array_equal(want.parent, got.parent)
+    assert eng.partition_fill().tolist() == eng2.partition_fill().tolist()
 
 
 def test_sharded_edge_balanced_relabeling():
@@ -146,14 +221,20 @@ def test_sharded_edge_balanced_relabeling():
 @pytest.mark.skipif(len(jax.devices()) < 8,
                     reason="needs 8 devices (CI runs this module with "
                            "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
-@pytest.mark.parametrize("exchange", ["allgather", "delta"])
-def test_sharded_p8_inprocess(exchange):
-    """P=8 on a (2,2,2) mesh, in-process (active under the CI 8-device step)."""
+@pytest.mark.parametrize("exchange,backend", [
+    ("allgather", "segment"), ("allgather", "ellpack"),
+    ("allgather", "sliced"), ("delta", "segment"), ("delta", "sliced")])
+def test_sharded_p8_inprocess(exchange, backend):
+    """P=8 on a (2,2,2) mesh, in-process (active under the CI 8-device
+    step), across the backend axis."""
     mesh = _mk((2, 2, 2), ("pod", "data", "model"))
     n, m, log, _ = _dynamic_stream(seed=29, n=120, m=700)
-    ref = SSSPDelEngine(EngineConfig(n, m + 64, 5))
+    kw = BACKEND_KW[backend]
+    ref = SSSPDelEngine(EngineConfig(n, m + 64, 5, relax_backend=backend,
+                                     **kw))
     eng = ShardedSSSPDelEngine(
-        ShardedEngineConfig(n, m + 64, 5, exchange=exchange, delta_cap=16),
+        ShardedEngineConfig(n, m + 64, 5, exchange=exchange, delta_cap=16,
+                            relax_backend=backend, **kw),
         mesh=mesh)
     assert eng.P == 8
     _assert_results_equal(ref.ingest_log(log) + [ref.query()],
@@ -163,17 +244,24 @@ def test_sharded_p8_inprocess(exchange):
         assert ref.n_messages == eng.n_messages
 
 
-@pytest.mark.parametrize("exchange,batched,doubling", [
-    ("allgather", 0, 1), ("allgather", 1, 0), ("delta", 0, 1)])
-def test_sharded_p8_subprocess(exchange, batched, doubling):
+@pytest.mark.parametrize("exchange,batched,doubling,backend,extra", [
+    ("allgather", 0, 1, "segment", []),
+    ("allgather", 1, 0, "segment", []),
+    ("delta", 0, 1, "segment", []),
+    ("allgather", 0, 1, "ellpack", []),
+    ("allgather", 0, 1, "sliced", []),
+    ("allgather", 0, 1, "sliced", ["--ckpt"]),
+])
+def test_sharded_p8_subprocess(exchange, batched, doubling, backend, extra):
     """Full equivalence contract at P=8 forced host devices (subprocess —
-    XLA device count must be set before jax initialises)."""
+    XLA device count must be set before jax initialises), across the
+    backend axis, including the crash-restart checkpoint roundtrip."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
     out = subprocess.run(
         [sys.executable, os.path.join(HERE, "_dist_engine_worker.py"),
-         exchange, str(batched), str(doubling)],
+         exchange, str(batched), str(doubling), backend] + extra,
         env=env, capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
     assert out.stdout.strip().startswith("OK"), out.stdout
