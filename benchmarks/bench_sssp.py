@@ -465,6 +465,125 @@ def dist_engine(sink: C.CsvSink, small: bool) -> None:
                   identical=True)
 
 
+def serving(sink: C.CsvSink, small: bool) -> None:
+    """Serving layer (DESIGN.md §8): batched multi-source trace replay on a
+    power-law stream at S in {1, 4, 16} concurrent sources, measuring the
+    paper's three serving metrics — per-query result latency (p50/p95/p99),
+    solution stability (per-epoch dist/parent churn) and sustained
+    topology-event throughput — via the repro.serving harness, plus the
+    sequential baseline the regression gate compares against: 4 independent
+    single-source engines replaying the same workload one after another.
+
+    The gate (benchmarks/check_regression.py) is batched S=4 throughput
+    >= 2.0x the 4-sequential-replay throughput — the batched [S, N] state's
+    reason to exist: one shared graph layout, one fused epoch per batch
+    instead of S.  Bit-parity of every batched lane against its
+    single-source engine is asserted in-run (summary row ``identical``).
+    """
+    import jax
+    from repro.graphs import generators as gen
+    from repro.serving import TraceRecorder, replay_trace
+
+    n = (1 << 10) if small else (1 << 11)
+    m = 4 * n
+    nv, src, dst, w = gen.power_law_hubs(n, m, n_hubs=4, seed=31,
+                                         orientation="in")
+    all_sources = [int(s) for s in gen.top_in_degree_sources(nv, dst, 16)]
+    delta = 0.3
+    log = C.stream_for(
+        C.Dataset("plaw", nv, src, dst, w, np.asarray(all_sources[:3])),
+        window_frac=1 / 3, delta=delta, query_every=10**9)
+
+    def trace_for(sources):
+        """The same topology stream with one query per served source at
+        each of 8 evenly spaced collection points."""
+        rec = TraceRecorder()
+        step = max(1, len(log) // 8)
+        for a in range(0, len(log), step):
+            rec.extend_from_log(log[a:a + step])
+            for s in sources:
+                rec.query(source=s)
+        return rec.trace()
+
+    def best_of(n_timed, mk, trace):
+        """Warm pass + best-of-n timed replays (fresh engine each pass so
+        every pass replays the identical trace; one-sided scheduler noise
+        only ever slows a pass down).  Returns the best report."""
+        best = None
+        for timed in (False,) + (True,) * n_timed:
+            eng = mk()
+            rep = replay_trace(eng, trace)
+            jax.block_until_ready(
+                eng.state.sssp.dist if hasattr(eng, "state") else eng.dist)
+            if timed and (best is None
+                          or rep.events_per_s > best[0].events_per_s):
+                best = (rep, eng)
+        return best
+
+    def mk_batched(sources):
+        return SSSPDelEngine(EngineConfig(
+            num_vertices=nv, edge_capacity=m + 64, source=sources[0],
+            sources=tuple(sources)))
+
+    reports = {}
+    engines = {}
+    for S in (1, 4, 16):
+        srcs = all_sources[:S]
+        n_timed = 1 if S == 16 else 2   # S=16 is ungated — one timed pass
+        reports[S], engines[S] = best_of(n_timed, lambda: mk_batched(srcs),
+                                         trace_for(srcs))
+        sink.emit("serving", dataset="plaw", n=nv, edges=m, delta=delta,
+                  backend="segment", s=S, **reports[S].to_record())
+
+    # sequential baseline: 4 single-source engines replay the same
+    # workload back to back (each answering only its own queries)
+    seq_sources = all_sources[:4]
+    seq_traces = [trace_for([s]) for s in seq_sources]
+    seq_engines = seq_reports = None
+    best_seq = None
+    for timed in (False, True, True):
+        engs = [SSSPDelEngine(EngineConfig(
+            num_vertices=nv, edge_capacity=m + 64, source=s))
+            for s in seq_sources]
+        t0 = time.perf_counter()
+        reps = [replay_trace(e, t) for e, t in zip(engs, seq_traces)]
+        for e in engs:
+            jax.block_until_ready(e.state.sssp.dist)
+        wall = time.perf_counter() - t0
+        # keep wall, engines AND per-query reports from the SAME (best)
+        # pass so the emitted record is internally consistent
+        if timed and (best_seq is None or wall < best_seq):
+            best_seq, seq_engines, seq_reports = wall, engs, reps
+    n_topo = seq_traces[0].n_topology
+    seq_eps = n_topo / best_seq
+    seq_lat = [l for r in seq_reports for l in r.latencies]
+    sink.emit("serving", dataset="plaw", n=nv, edges=m, delta=delta,
+              backend="segment", s=4, engine="sequential/segment",
+              n_sources=4, events=sum(len(t) for t in seq_traces),
+              topology_events=n_topo, queries=sum(r.queries
+                                                  for r in seq_reports),
+              wall_s=round(best_seq, 4), events_per_s=round(seq_eps, 1),
+              latency_p50_ms=round(C.pctile(seq_lat, 50) * 1e3, 4),
+              latency_p95_ms=round(C.pctile(seq_lat, 95) * 1e3, 4),
+              latency_p99_ms=round(C.pctile(seq_lat, 99) * 1e3, 4))
+
+    # the serving equivalence contract, asserted on the benchmark stream:
+    # every batched lane == its single-source engine, bit for bit
+    qb = engines[4].query()
+    for i, (s, eng) in enumerate(zip(seq_sources, seq_engines)):
+        qs = eng.query()
+        np.testing.assert_array_equal(qb.dist[i], qs.dist)
+        np.testing.assert_array_equal(qb.parent[i], qs.parent)
+    _check_oracle(seq_engines[0], sink, "serving_oracle")
+    sink.emit("serving_summary", delta=delta, s=4,
+              batched_vs_sequential=round(
+                  reports[4].events_per_s / max(seq_eps, 1e-9), 3),
+              batched16_vs_sequential=round(
+                  reports[16].events_per_s / max(seq_eps, 1e-9), 3),
+              identical=True)
+
+
 ALL = [table2_static_baseline, fig1_query_latency, fig2_latency_over_time,
        fig3_source_selection, fig4_stability, fig5_throughput,
-       fig6_batch_bsp, backend_shootout, hub_shootout, dist_engine]
+       fig6_batch_bsp, backend_shootout, hub_shootout, dist_engine,
+       serving]

@@ -8,7 +8,7 @@ bit-identity — are asserted *inside* the benchmark run itself, and this
 script additionally refuses to pass if those parity records are missing.
 
 Run: ``python -m benchmarks.check_regression [--json BENCH_sssp.json]
-[--sections backend_shootout,dist_engine,hub_shootout]``
+[--sections backend_shootout,dist_engine,hub_shootout,serving]``
 
 Gates (per delta value found in the section):
   * backend_shootout — ellpack ingest >= 0.95x segment; ellpack query p50
@@ -23,6 +23,11 @@ Gates (per delta value found in the section):
     sharded-segment on the power-law hub stream and requires the three-way
     sharded parity record (``dist_engine_backends_summary``) to be present
     and true.
+  * serving — batched S=4 multi-source replay throughput >= 2.0x the
+    4-sequential-single-source-replay throughput (DESIGN.md §8: one shared
+    layout, one fused epoch per batch instead of S), with the per-lane
+    bit-parity record (``serving_summary.identical``) present and true and
+    the latency/stability metric fields present on every batched row.
 """
 from __future__ import annotations
 
@@ -30,7 +35,8 @@ import argparse
 import json
 import sys
 
-DEFAULT_SECTIONS = ("backend_shootout", "dist_engine", "hub_shootout")
+DEFAULT_SECTIONS = ("backend_shootout", "dist_engine", "hub_shootout",
+                    "serving")
 
 
 def _rows(records: list[dict], bench: str) -> list[dict]:
@@ -140,10 +146,43 @@ def gate_dist_engine(records: list[dict]) -> list[str]:
     return errors
 
 
+def gate_serving(records: list[dict]) -> list[str]:
+    errors: list[str] = []
+    rows = _rows(records, "serving")
+    summaries = _rows(records, "serving_summary")
+    if not rows or not summaries:
+        return ["serving: no records found"]
+    # every batched row must carry the three serving metrics (DESIGN.md §8)
+    metric_keys = ("events_per_s", "latency_p50_ms", "latency_p95_ms",
+                   "latency_p99_ms", "churn_mean", "stability_parent")
+    for r in rows:
+        if str(r.get("engine", "")).startswith("sequential"):
+            continue
+        missing = [k for k in metric_keys if k not in r]
+        if missing:
+            errors.append(f"serving s={r.get('s')}: metric field(s) "
+                          f"missing from record: {missing}")
+    for s in summaries:
+        if str(s.get("identical")) != "True":
+            errors.append(f"serving: batched-lane parity record missing or "
+                          f"false: identical={s.get('identical')}")
+    # the throughput gate is per-artifact, not per-summary
+    by = _by(rows, "engine", "s")
+    ratio = _ratio_gate(
+        errors, "serving batched-S=4 / 4-sequential ingest",
+        float(by[("single/segment", 4)]["events_per_s"]),
+        float(by[("sequential/segment", 4)]["events_per_s"]),
+        floor=2.0)
+    print(f"serving: batched S=4 vs 4x sequential ingest {ratio:.2f}x, "
+          f"identical={[str(s.get('identical')) for s in summaries]}")
+    return errors
+
+
 GATES = {
     "backend_shootout": gate_backend_shootout,
     "dist_engine": gate_dist_engine,
     "hub_shootout": gate_hub_shootout,
+    "serving": gate_serving,
 }
 
 

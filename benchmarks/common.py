@@ -18,6 +18,10 @@ import numpy as np
 from repro.core import events as ev
 from repro.graphs import generators as gen
 from repro.graphs import window as win
+# THE percentile implementation (repro/serving/metrics.py) — shared with
+# the serving harness so bench sections and ServingReport can never
+# disagree on how a percentile is computed
+from repro.serving.metrics import pctile, percentiles  # noqa: F401
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,10 +54,6 @@ def stream_for(ds: Dataset, *, window_frac: float, delta: float,
     log = win.sliding_window_stream(ds.src, ds.dst, ds.w, window=window,
                                     delta=delta, seed=seed)
     return ev.interleave_queries(log, query_every)
-
-
-def pctile(xs, q):
-    return float(np.percentile(np.asarray(xs, np.float64), q)) if len(xs) else float("nan")
 
 
 class CsvSink:

@@ -26,6 +26,11 @@ metrics plus the per-partition edge-pool fill, and cross-checks the final
 tree bit-for-bit against the single-device engine *running the same
 backend*.  ``--balanced`` relabels vertices so shards own ~equal in-edge
 mass (power-law hubs otherwise load a single shard).
+
+Serving-layer trace flags (DESIGN.md §8): ``--record-trace PATH`` saves
+the generated workload; ``--replay-trace PATH`` replays a recorded trace
+through the sharded engine + metrics harness (missing/incompatible paths
+exit with code 2).
 """
 import argparse
 import time
@@ -40,6 +45,7 @@ from repro.core.engine import RELAX_BACKENDS, EngineConfig, SSSPDelEngine
 from repro.graphs import generators as gen
 from repro.graphs import partition as part_mod
 from repro.graphs import window as win
+from repro.serving import TraceRecorder, load_trace_or_exit, replay_trace
 
 
 def main():
@@ -58,7 +64,33 @@ def main():
     p.add_argument("--balanced", action="store_true",
                    help="edge-balanced vertex relabeling "
                         "(graphs/partition.edge_balanced_relabeling)")
+    p.add_argument("--record-trace", metavar="PATH",
+                   help="save the generated workload as a serving trace "
+                        "(repro/serving/trace.py, DESIGN.md §8.2)")
+    p.add_argument("--replay-trace", metavar="PATH",
+                   help="replay a recorded trace through the sharded "
+                        "engine and report the serving metrics "
+                        "(unknown paths exit 2)")
     args = p.parse_args()
+
+    if args.replay_trace:
+        trace = load_trace_or_exit(args.replay_trace)
+        topo = trace.kind != ev.QUERY
+        n = int(max(trace.src[topo].max(initial=0),
+                    trace.dst[topo].max(initial=0))) + 1
+        n_topo = int(topo.sum())
+        parts = len(jax.devices())
+        epp = int(n_topo * 1.3) // max(parts // 2, 1) + 64
+        source = int(gen.top_in_degree_sources(
+            n, trace.dst[trace.kind == ev.ADD].astype(np.int64))[0])
+        eng = ShardedSSSPDelEngine(ShardedEngineConfig(
+            n, epp, source, exchange=args.exchange,
+            relax_backend=args.backend))
+        report = replay_trace(eng, trace)
+        print(f"trace: {args.replay_trace} source={source} "
+              f"partitions={parts}")
+        print(report.summary())
+        return
 
     if args.hubs:
         n, src, dst, w = gen.power_law_hubs(1 << args.scale,
@@ -75,6 +107,12 @@ def main():
     print(f"graph: n={n} stream={len(log)} events (delta={args.delta}) "
           f"source={source} partitions={parts} backend={args.backend}")
 
+    if args.record_trace:
+        rec = TraceRecorder()
+        rec.extend_from_log(log)
+        rec.trace().save(args.record_trace)
+        print(f"recorded trace: {args.record_trace} ({len(log)} events)")
+
     relabel = None
     if args.balanced:
         relabel = part_mod.edge_balanced_relabeling(n, dst, parts)
@@ -89,7 +127,7 @@ def main():
 
     def on_query(r):
         lat.append(r.latency_s)
-        stab.append(eng.stability_vs_prev(r.parent))
+        stab.append(eng.stability_vs_prev(r.parent, source=r.source))
 
     eng.ingest_log(log, on_query=on_query)
     wall = time.perf_counter() - t0

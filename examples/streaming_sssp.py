@@ -6,6 +6,14 @@ Generates an RMAT graph, replays it as a timestamped stream with windowed
 deletions (probability --delta), queries every W/10 events, and reports the
 paper's three metrics: query latency, tree stability, ingestion rate —
 plus a from-scratch ReMo baseline for the latency comparison.
+
+Serving-layer trace flags (DESIGN.md §8):
+
+    # save the generated workload as an on-disk trace
+    ... streaming_sssp.py --record-trace /tmp/stream.trace
+    # replay a recorded trace through the engine + metrics harness
+    # (a missing/incompatible trace path exits with code 2)
+    ... streaming_sssp.py --replay-trace /tmp/stream.trace
 """
 import argparse
 import time
@@ -17,6 +25,16 @@ from repro.core.baseline import ReMoBaseline
 from repro.core.engine import EngineConfig, SSSPDelEngine
 from repro.graphs import generators as gen
 from repro.graphs import window as win
+from repro.serving import (ServingTrace, TraceRecorder, load_trace_or_exit,
+                           replay_trace)
+
+
+def trace_bounds(trace: ServingTrace) -> tuple[int, int]:
+    """(num_vertices, topology_events) implied by a trace."""
+    topo = trace.kind != ev.QUERY
+    n = int(max(trace.src[topo].max(initial=0),
+                trace.dst[topo].max(initial=0))) + 1
+    return n, int(topo.sum())
 
 
 def main():
@@ -32,7 +50,26 @@ def main():
     p.add_argument("--power-law", action="store_true",
                    help="stream in-degree power-law hubs instead of RMAT "
                         "(the sliced backend's target workload)")
+    p.add_argument("--record-trace", metavar="PATH",
+                   help="save the generated workload as a serving trace "
+                        "(repro/serving/trace.py, DESIGN.md §8.2)")
+    p.add_argument("--replay-trace", metavar="PATH",
+                   help="replay a recorded trace through the engine and "
+                        "report the serving metrics (unknown paths exit 2)")
     args = p.parse_args()
+
+    if args.replay_trace:
+        trace = load_trace_or_exit(args.replay_trace)
+        n, n_topo = trace_bounds(trace)
+        cap = int(n_topo * 1.3) + 64
+        source = int(gen.top_in_degree_sources(
+            n, trace.dst[trace.kind == ev.ADD].astype(np.int64))[0])
+        eng = SSSPDelEngine(EngineConfig(n, cap, source,
+                                         relax_backend=args.backend))
+        report = replay_trace(eng, trace)
+        print(f"trace: {args.replay_trace} source={source}")
+        print(report.summary())
+        return
 
     if args.power_law:
         n = 1 << args.scale
@@ -48,6 +85,12 @@ def main():
     print(f"graph: n={n} stream={len(log)} events "
           f"(delta={args.delta}, window={window}) source={source}")
 
+    if args.record_trace:
+        rec = TraceRecorder()
+        rec.extend_from_log(log)
+        rec.trace().save(args.record_trace)
+        print(f"recorded trace: {args.record_trace} ({len(log)} events)")
+
     cap = int(len(src) * 1.3) + 64
     eng = SSSPDelEngine(EngineConfig(n, cap, source,
                                      relax_backend=args.backend))
@@ -56,7 +99,7 @@ def main():
 
     def on_query(r):
         lat.append(r.latency_s)
-        stab.append(eng.stability_vs_prev(r.parent))
+        stab.append(eng.stability_vs_prev(r.parent, source=r.source))
 
     eng.ingest_log(log, on_query=on_query)
     wall = time.perf_counter() - t0

@@ -44,26 +44,32 @@ class SSSPArchConfig:
                       sliced_init_k=self.sliced_init_k)
         return kw
 
-    def engine_config(self, *, edge_capacity: int, source: int, **overrides):
+    def engine_config(self, *, edge_capacity: int, source: int,
+                      sources: tuple[int, ...] | None = None, **overrides):
         """Bridge to the single-host engine: an ``EngineConfig`` carrying
         this arch config's backend selection (lazy import keeps configs/
-        free of core dependencies)."""
+        free of core dependencies).  ``sources`` selects the serving
+        layer's batched multi-source mode (DESIGN.md §8): S stacked trees
+        over one shared layout, ``source`` then ignored."""
         from repro.core.engine import EngineConfig
         kw = dict(num_vertices=self.num_vertices,
                   edge_capacity=edge_capacity, source=source,
-                  **self._backend_kw())
+                  sources=sources, **self._backend_kw())
         kw.update(overrides)
         return EngineConfig(**kw)
 
-    def sharded_engine_config(self, *, source: int, **overrides):
+    def sharded_engine_config(self, *, source: int,
+                              sources: tuple[int, ...] | None = None,
+                              **overrides):
         """Bridge to the sharded engine: a ``ShardedEngineConfig`` carrying
         this arch config's backend selection, exchange strategy and
-        per-partition pool capacity."""
+        per-partition pool capacity.  ``sources`` selects batched
+        multi-source serving (DESIGN.md §8), same as ``engine_config``."""
         from repro.core.dist_engine import ShardedEngineConfig
         kw = dict(num_vertices=self.num_vertices,
                   edges_per_part=self.edges_per_part, source=source,
                   exchange=self.exchange, delta_cap=self.delta_cap,
-                  **self._backend_kw())
+                  sources=sources, **self._backend_kw())
         kw.update(overrides)
         return ShardedEngineConfig(**kw)
 

@@ -132,6 +132,35 @@ class RelaxBackend:
                seed: jax.Array) -> tuple["SSSPState", "DeleteStats"]:
         raise NotImplementedError
 
+    # --- batched multi-source epochs (serving layer, DESIGN.md §8)
+    # One shared graph layout, S stacked trees: ``sssp`` carries [S, N]
+    # dist/parent and an [S] source vector; the wave is vmapped over the
+    # source axis.  jax's while_loop batching rule freezes each lane's
+    # carry once ITS OWN convergence predicate goes false, so every lane —
+    # dist, parent, AND the [S] per-lane round/message stats — is
+    # bit-identical to an unbatched run (tests/test_serving.py).
+    #
+    # The implementations below are the generic fallback: an UNJITTED
+    # per-call vmap (it must close over the CURRENT layout state, which a
+    # jit closure would staleley capture).  Every built-in backend
+    # overrides them with a module-level jitted jit(vmap(epoch)) entry
+    # point that takes its layout arrays as explicit arguments — the
+    # per-call vmap re-trace otherwise dominates batched ingest (~8x).
+    def relax_batched(self, sssp: "SSSPState", edges: "EdgePool",
+                      frontier: jax.Array
+                      ) -> tuple["SSSPState", "RelaxStats"]:
+        """Batched ``relax``: frontier is shared (ADD tails are
+        source-independent), the trees are vmapped."""
+        return jax.vmap(self.relax, in_axes=(0, None, None))(
+            sssp, edges, frontier)
+
+    def delete_batched(self, sssp: "SSSPState", edges: "EdgePool",
+                       seed: jax.Array
+                       ) -> tuple["SSSPState", "DeleteStats"]:
+        """Batched ``delete``: seeds are per-lane ([S, N] — whether a
+        deleted edge is a tree edge depends on each lane's parent forest)."""
+        return jax.vmap(self.delete, in_axes=(0, None, 0))(sssp, edges, seed)
+
     # --- checkpoint participation / diagnostics
     def restore(self, alloc: "SlotAllocator") -> None:
         """Rebuild layout state from the pool mirror after a restore."""

@@ -29,6 +29,11 @@ the planner's ``row0``) and the per-shard ELL blocks concatenated
 partition-major into globally sharded device arrays; K is synchronized
 across shards at rebuild time so the shard_map epochs see one static block
 shape.
+
+Batched multi-source serving (§8): the ELL block is source-independent —
+one layout serves every lane.  The epochs vmap over the stacked [S, N]
+dist/parent (base protocol ``relax_batched``/``delete_batched``; the
+sharded engine vmaps the wave), with the block arrays captured unbatched.
 """
 from __future__ import annotations
 
@@ -267,6 +272,31 @@ def ell_relax_until_converged(
     )
 
 
+@partial(jax.jit, static_argnames=("num_vertices", "use_kernel",
+                                   "interpret"))
+def ell_relax_batched(sssp, nbr_idx, nbr_w, frontier, *, num_vertices: int,
+                      use_kernel: bool = False, interpret: bool = True):
+    """Batched multi-source rendering (DESIGN.md §8): jit(vmap(epoch)) over
+    the [S, N] tree stack, the shared ELL block captured unbatched."""
+    return jax.vmap(
+        lambda s: ell_relax_until_converged(
+            s, nbr_idx, nbr_w, frontier, num_vertices=num_vertices,
+            use_kernel=use_kernel, interpret=interpret))(sssp)
+
+
+@partial(jax.jit, static_argnames=("num_vertices", "use_doubling",
+                                   "use_kernel", "interpret"))
+def ell_delete_batched(sssp, nbr_idx, nbr_w, seed, *, num_vertices: int,
+                       use_doubling: bool = True, use_kernel: bool = False,
+                       interpret: bool = True):
+    """Batched deletion epoch: per-lane [S, N] seeds over the shared block."""
+    return jax.vmap(
+        lambda s, sd: ell_invalidate_and_recompute(
+            s, nbr_idx, nbr_w, sd, num_vertices=num_vertices,
+            use_doubling=use_doubling, use_kernel=use_kernel,
+            interpret=interpret))(sssp, seed)
+
+
 @partial(jax.jit, static_argnames=("num_vertices", "use_doubling",
                                    "use_kernel", "interpret"))
 def ell_invalidate_and_recompute(
@@ -382,6 +412,18 @@ class EllpackBackend(RelaxBackend):
 
     def delete(self, sssp, edges, seed):
         return ell_invalidate_and_recompute(
+            sssp, self.state.nbr_idx, self.state.nbr_w, seed,
+            num_vertices=self.n, use_doubling=self.cfg.use_doubling,
+            use_kernel=self.use_kernel, interpret=self.interpret)
+
+    def relax_batched(self, sssp, edges, frontier):
+        return ell_relax_batched(
+            sssp, self.state.nbr_idx, self.state.nbr_w, frontier,
+            num_vertices=self.n, use_kernel=self.use_kernel,
+            interpret=self.interpret)
+
+    def delete_batched(self, sssp, edges, seed):
+        return ell_delete_batched(
             sssp, self.state.nbr_idx, self.state.nbr_w, seed,
             num_vertices=self.n, use_doubling=self.cfg.use_doubling,
             use_kernel=self.use_kernel, interpret=self.interpret)

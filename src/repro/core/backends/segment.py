@@ -9,8 +9,15 @@ The sharded wave (``shard_segment_wave``) is the shard-local rendering of
 in-edge pool slice with the smallest-src-id tie-break.  It is the single
 source of truth for the segment-min used by both ``DistributedSSSP``'s
 static epochs and the sharded dynamic engine's backend'd epochs.
+
+Batched multi-source serving (DESIGN.md §8) needs nothing special here:
+the epochs and the wave are pure jnp scatter-mins, so the base protocol's
+``relax_batched``/``delete_batched`` vmap and the sharded engine's
+``jax.vmap(wave)`` over the source axis apply directly.
 """
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +29,25 @@ from repro.core.backends.base import (RelaxBackend, ShardedBackend, register,
 from repro.core.state import INF
 
 _BIG = jnp.int32(2**31 - 1)
+
+
+# Batched multi-source epochs (DESIGN.md §8): module-level jit(vmap(epoch))
+# so repeated batched ingest hits the pjit fast path instead of re-tracing
+# a fresh vmap wrapper per event batch (see base.RelaxBackend notes).
+@partial(jax.jit, static_argnames=("num_vertices",))
+def segment_relax_batched(sssp, edges, frontier, *, num_vertices: int):
+    return jax.vmap(
+        lambda s: relax.relax_until_converged(
+            s, edges, frontier, num_vertices=num_vertices))(sssp)
+
+
+@partial(jax.jit, static_argnames=("num_vertices", "use_doubling"))
+def segment_delete_batched(sssp, edges, seed, *, num_vertices: int,
+                           use_doubling: bool):
+    return jax.vmap(
+        lambda s, sd: del_mod.invalidate_and_recompute(
+            s, edges, sd, num_vertices=num_vertices,
+            use_doubling=use_doubling))(sssp, seed)
 
 
 def shard_segment_wave(esrc, edst, ew, eact, row0, npp: int):
@@ -61,6 +87,14 @@ class SegmentBackend(RelaxBackend):
         return del_mod.invalidate_and_recompute(
             sssp, edges, seed, num_vertices=self.n,
             use_doubling=self.cfg.use_doubling)
+
+    def relax_batched(self, sssp, edges, frontier):
+        return segment_relax_batched(sssp, edges, frontier,
+                                     num_vertices=self.n)
+
+    def delete_batched(self, sssp, edges, seed):
+        return segment_delete_batched(sssp, edges, seed, num_vertices=self.n,
+                                      use_doubling=self.cfg.use_doubling)
 
 
 @register_sharded

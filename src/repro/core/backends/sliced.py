@@ -21,6 +21,11 @@ policies) so the shard_map epochs see one static flat geometry.  Overflow
 ``odst`` entries are stored in *global ELL-row* space (``p*rows_pp + local
 row``) — the same row space the flat cells use — so the single-device patch
 ops work verbatim on the global arrays.
+
+Batched multi-source serving (§8): both lanes and their combine are pure
+jnp gathers/segment-mins over source-independent layout state, so the base
+protocol's ``relax_batched``/``delete_batched`` vmap (and the sharded
+engine's ``jax.vmap(wave)``) batch the stacked [S, N] trees directly.
 """
 from __future__ import annotations
 
@@ -369,6 +374,33 @@ def sliced_invalidate_and_recompute(
     )
 
 
+@partial(jax.jit, static_argnames=("widths", "slice_rows", "num_vertices",
+                                   "use_kernel", "interpret"))
+def sliced_relax_batched(sssp, st, frontier, *, widths, slice_rows,
+                         num_vertices, use_kernel=False, interpret=True):
+    """Batched multi-source rendering (DESIGN.md §8): jit(vmap(epoch)) over
+    the [S, N] tree stack, the shared hybrid layout captured unbatched."""
+    return jax.vmap(
+        lambda s: sliced_relax_until_converged(
+            s, st, frontier, widths=widths, slice_rows=slice_rows,
+            num_vertices=num_vertices, use_kernel=use_kernel,
+            interpret=interpret))(sssp)
+
+
+@partial(jax.jit, static_argnames=("widths", "slice_rows", "num_vertices",
+                                   "use_doubling", "use_kernel",
+                                   "interpret"))
+def sliced_delete_batched(sssp, st, seed, *, widths, slice_rows,
+                          num_vertices, use_doubling=True, use_kernel=False,
+                          interpret=True):
+    """Batched deletion epoch: per-lane [S, N] seeds over the shared layout."""
+    return jax.vmap(
+        lambda s, sd: sliced_invalidate_and_recompute(
+            s, st, sd, widths=widths, slice_rows=slice_rows,
+            num_vertices=num_vertices, use_doubling=use_doubling,
+            use_kernel=use_kernel, interpret=interpret))(sssp, seed)
+
+
 # ------------------------------------------------------------ host planner --
 class SlicedPlan(NamedTuple):
     """One ADD batch's placement: ELL cells + overflow spills (all numpy,
@@ -602,6 +634,20 @@ class SlicedBackend(RelaxBackend):
 
     def delete(self, sssp, edges, seed):
         return sliced_invalidate_and_recompute(
+            sssp, self.state, seed,
+            widths=tuple(self.planner.widths), slice_rows=self.planner.sr,
+            num_vertices=self.n, use_doubling=self.cfg.use_doubling,
+            use_kernel=self.use_kernel, interpret=self.interpret)
+
+    def relax_batched(self, sssp, edges, frontier):
+        return sliced_relax_batched(
+            sssp, self.state, frontier,
+            widths=tuple(self.planner.widths), slice_rows=self.planner.sr,
+            num_vertices=self.n, use_kernel=self.use_kernel,
+            interpret=self.interpret)
+
+    def delete_batched(self, sssp, edges, seed):
+        return sliced_delete_batched(
             sssp, self.state, seed,
             widths=tuple(self.planner.widths), slice_rows=self.planner.sr,
             num_vertices=self.n, use_doubling=self.cfg.use_doubling,

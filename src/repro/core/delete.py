@@ -157,3 +157,19 @@ def deletion_seed_for_edges(
     f = jnp.zeros((num_vertices,), jnp.bool_)
     safe = jnp.clip(del_dst, 0, num_vertices - 1)
     return f.at[safe].max(is_tree & (del_dst >= 0))
+
+
+@partial(jax.jit, static_argnames=("num_vertices",))
+def deletion_seed_for_edges_batched(
+    sssp: SSSPState,
+    del_src: jax.Array,
+    del_dst: jax.Array,
+    num_vertices: int,
+) -> jax.Array:
+    """Per-lane [S, N] seeds for a batched multi-source engine (DESIGN.md
+    §8): whether a deleted edge is a tree edge depends on each lane's
+    parent forest.  Jitted so the per-deletion hot path stays on the pjit
+    fast path."""
+    return jax.vmap(
+        lambda s: deletion_seed_for_edges(s, del_src, del_dst,
+                                          num_vertices))(sssp)

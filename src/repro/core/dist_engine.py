@@ -34,6 +34,13 @@ per-partition edge pools living across the mesh:
     device value.  Round/message counters thread through the epochs as
     replicated device scalars and are read back only in ``query()``;
     deletion epochs dispatch unconditionally (all-false seed = cheap no-op).
+  * **Batched multi-source serving** (DESIGN.md §8): ``sources=(s0, ...)``
+    stacks S trees as [S, N] dist/parent arrays sharded along the vertex
+    axis; the ``_build_epochs_ms`` builder patches the shared pool/layout
+    once per batch and runs the ``*_ms`` relaxation bodies
+    (core/distributed.py) with the backend's wave vmapped over the source
+    axis — bit-identical per lane to S single-source engines, same
+    host-sync rules.
 
 Equivalence contract: with ``exchange="allgather"`` the engine is
 **bit-identical** in ``(dist, parent)`` — and equal in rounds/messages — to
@@ -60,7 +67,6 @@ from the per-partition mirrors on restore, never serialized.
 from __future__ import annotations
 
 import dataclasses
-import time
 from functools import partial
 
 import jax
@@ -76,7 +82,7 @@ from repro.core.distributed import (DistConfig, DistributedSSSP,
                                     _SHARD_MAP_KW, _shard_map,
                                     inactive_dst_layout)
 from repro.core.state import INF, NO_PARENT
-from repro.core.stream import QueryResult, StreamEngineBase
+from repro.core.stream import StreamEngineBase
 from repro.launch import mesh as mesh_mod
 
 
@@ -111,12 +117,22 @@ class ShardedEngineConfig:
     sliced_slice_rows: int = 256
     sliced_hub_k: int = 32
     sliced_init_k: int = 2
+    # batched multi-source serving (DESIGN.md §8); None = single-source
+    sources: tuple[int, ...] | None = None
 
     def __post_init__(self):
         bk_mod.validate_backend_config(self)
         if self.exchange not in EXCHANGES:
             raise ValueError(f"unknown exchange {self.exchange!r}; valid: "
                              f"{EXCHANGES}")
+        if self.sources is not None:
+            self.sources = tuple(int(s) for s in self.sources)
+            bad = [s for s in self.sources
+                   if not 0 <= s < self.num_vertices]
+            if not self.sources or bad:
+                raise ValueError(
+                    f"sources must be non-empty vertex ids in "
+                    f"[0, {self.num_vertices}); got {self.sources}")
 
 
 class ShardedSSSPDelEngine(StreamEngineBase):
@@ -129,7 +145,7 @@ class ShardedSSSPDelEngine(StreamEngineBase):
 
     def __init__(self, cfg: ShardedEngineConfig, mesh: Mesh | None = None,
                  relabel: tuple[np.ndarray, np.ndarray, int] | None = None):
-        super().__init__()
+        super().__init__(sources=cfg.sources)
         self.cfg = cfg
         if mesh is None:
             mesh = mesh_mod._mk((len(jax.devices()),), ("graph",))
@@ -154,8 +170,16 @@ class ShardedSSSPDelEngine(StreamEngineBase):
             num_vertices=n_pad, edges_per_part=cfg.edges_per_part,
             mesh_axes=axes, exchange=cfg.exchange, delta_cap=cfg.delta_cap))
         self.P, self.npp, self.epp = self.ds.P, self.ds.npp, cfg.edges_per_part
-        self._source_pad = int(cfg.source if self.perm is None
-                               else self.perm[cfg.source])
+        # single-source: one padded/relabeled source id; batched serving: a
+        # static tuple of them (the epoch-cache key and the epochs' "never
+        # invalidate the source" mask are per lane)
+        if self.sources is None:
+            self._source_pad = int(cfg.source if self.perm is None
+                                   else self.perm[cfg.source])
+        else:
+            self._source_pad = tuple(
+                int(s if self.perm is None else self.perm[s])
+                for s in self.sources)
         # control plane: one planner per partition, local Epp-slot pools
         self.allocs = [ingest.SlotAllocator(cfg.edges_per_part,
                                             cfg.on_duplicate)
@@ -163,8 +187,14 @@ class ShardedSSSPDelEngine(StreamEngineBase):
         # relaxation backend: per-shard planners + sharded layout arrays
         self.bk = bk_mod.make_sharded_backend(
             cfg.relax_backend, cfg, self.ds, self.allocs)
-        # data plane: sharded vertex + edge-pool arrays
-        self.dist, self.parent = self.ds.init_vertex_arrays(self._source_pad)
+        # data plane: sharded vertex + edge-pool arrays ([S, N] stacked
+        # trees over the one sharded pool in batched serving mode)
+        if self.sources is None:
+            self.dist, self.parent = self.ds.init_vertex_arrays(
+                self._source_pad)
+        else:
+            self.dist, self.parent = self.ds.init_vertex_arrays_ms(
+                self._source_pad)
         self.esrc, self.edst, self.ew, self.eact = self.ds.put_edges(
             np.zeros(self.P * self.epp, np.int32),
             inactive_dst_layout(self.P, self.npp, self.epp),
@@ -179,7 +209,9 @@ class ShardedSSSPDelEngine(StreamEngineBase):
         backend's static key (e.g. the sliced widths tuple)."""
         key = self._base_key + self.bk.static_key()
         if key not in _EPOCH_CACHE:
-            _EPOCH_CACHE[key] = _build_epochs(
+            build = (_build_epochs if self.sources is None
+                     else _build_epochs_ms)
+            _EPOCH_CACHE[key] = build(
                 self.ds, self.epp, self.cfg.use_doubling, self._source_pad,
                 self.cfg.relax_backend, self.bk.static_key())
         return _EPOCH_CACHE[key]
@@ -254,24 +286,23 @@ class ShardedSSSPDelEngine(StreamEngineBase):
             self.n_epochs += 1
 
     # ----------------------------------------------------------------- query
-    def query(self) -> QueryResult:
-        """State collection: epoch already enforced (every batch ran to
-        convergence) — cost is the sharded device->host readback plus the
-        inverse relabeling, if any."""
-        t0 = time.perf_counter()
-        dist = np.asarray(jax.device_get(self.dist))
-        parent = np.asarray(jax.device_get(self.parent))
+    def _snapshot(self, lane: int | None) -> tuple[np.ndarray, np.ndarray]:
+        """Sharded device->host readback plus the inverse relabeling, if
+        any (latency is timed by the base query()); a routed lane query
+        transfers only that source's padded [N] pair."""
+        d, p = (self.dist, self.parent) if lane is None else \
+            (self.dist[lane], self.parent[lane])
+        dist = np.asarray(jax.device_get(d))
+        parent = np.asarray(jax.device_get(p))
         n = self.cfg.num_vertices
         if self.perm is not None:
-            dist = dist[self.perm]
-            p = parent[self.perm]
-            parent = np.where(p >= 0, self.inv[np.clip(p, 0, None)],
+            dist = dist[..., self.perm]
+            pp = parent[..., self.perm]
+            parent = np.where(pp >= 0, self.inv[np.clip(pp, 0, None)],
                               NO_PARENT).astype(np.int32)
         else:
-            dist, parent = dist[:n], parent[:n]
-        dt = time.perf_counter() - t0
-        return QueryResult(dist=dist, parent=parent, latency_s=dt,
-                           epoch_stats=self._stream_stats())
+            dist, parent = dist[..., :n], parent[..., :n]
+        return dist, parent
 
     # ------------------------------------------------------------ checkpoint
     def checkpoint(self) -> dict[str, np.ndarray]:
@@ -296,10 +327,12 @@ class ShardedSSSPDelEngine(StreamEngineBase):
         with the same config/mesh/relabel.  Rebuilds the per-partition
         planners from the pool slices, re-shards the device arrays, and
         rebuilds the backend layout from the mirrors."""
-        assert int(ckpt["source"]) == self._source_pad, "source mismatch"
-        assert len(ckpt["dist"]) == self.P * self.npp, (
-            f"checkpoint has {len(ckpt['dist'])} vertex rows; this engine "
-            f"pads to {self.P * self.npp} — same P/mesh required")
+        src_ck = np.atleast_1d(np.asarray(ckpt["source"])).tolist()
+        src_now = np.atleast_1d(np.asarray(self._source_pad)).tolist()
+        assert src_ck == src_now, "source mismatch"
+        assert ckpt["dist"].shape[-1] == self.P * self.npp, (
+            f"checkpoint has {ckpt['dist'].shape[-1]} vertex rows; this "
+            f"engine pads to {self.P * self.npp} — same P/mesh required")
         assert len(ckpt["src"]) == self.P * self.epp, (
             f"checkpoint has {len(ckpt['src'])} pool slots; this engine "
             f"expects {self.P * self.epp} — same edges_per_part required")
@@ -320,7 +353,8 @@ class ShardedSSSPDelEngine(StreamEngineBase):
             np.asarray(ckpt["src"], np.int32), dst.astype(np.int32),
             np.asarray(ckpt["w"], np.float32),
             np.asarray(ckpt["active"], np.bool_))
-        sh = self.ds.vertex_sharding()
+        sh = (self.ds.vertex_sharding() if self.sources is None
+              else self.ds.vertex_sharding_ms())
         self.dist = jax.device_put(
             np.asarray(ckpt["dist"], np.float32), sh)
         self.parent = jax.device_put(
@@ -450,6 +484,128 @@ def _build_epochs(ds: DistributedSSSP, epp: int, use_doubling: bool,
             dist, parent, rec_rounds, rec_msgs = ds._recompute_pull_push(
                 dist, parent, aff, wave)
         zero = jnp.int32(0)
+        d_rounds = jnp.where(any_seed, inv_rounds + rec_rounds, zero)
+        d_msgs = jnp.where(any_seed, rec_msgs, zero) + affected
+        return (dist, parent, eact, *(extras[i] for i in del_mutated),
+                racc + d_rounds, macc + d_msgs)
+
+    return add_epoch, del_epoch
+
+
+def _build_epochs_ms(ds: DistributedSSSP, epp: int, use_doubling: bool,
+                     sources_pad: tuple[int, ...], backend: str,
+                     backend_static: tuple):
+    """Batched multi-source rendering of ``_build_epochs`` (DESIGN.md §8):
+    the (add_epoch, del_epoch) pair for S stacked trees over one shared
+    sharded pool + layout.
+
+    Same contract as the single-source builder — module-level, closures
+    capture only static config — plus the serving-mode shape rules: vertex
+    state is [S, npp] per shard (``ds.vspec_ms``), per-source stat counters
+    are replicated [S] vectors, the pool/layout patches run ONCE (shared
+    graph), and each lane's relax/invalidate/recompute is the ``*_ms`` body
+    with the backend's pure shard-local wave vmapped over the source axis.
+    Per lane the results are bit-identical to the single-source epochs for
+    that lane's source (tests/test_serving.py).
+    """
+    npp = ds.npp
+    ax = ds.cfg.mesh_axes
+    exchange = ds.cfg.exchange
+    S = len(sources_pad)
+    v, vb, e, r = ds.vspec, ds.vspec_ms, ds.espec, ds.rspec
+    bk_cls = SHARDED_BACKENDS[backend]
+    n_extra = bk_cls.n_extra
+    make_wave = bk_cls.shard_wave_factory(backend_static, npp)
+    del_patch = bk_cls.shard_del_patch(backend_static, npp)
+    del_mutated = bk_cls.del_mutated
+    extra_specs = (v,) * n_extra
+
+    def masked_write(arr, loc, val):
+        pad = jnp.zeros((1,), arr.dtype)
+        return jnp.concatenate([arr, pad]).at[loc].set(
+            val.astype(arr.dtype))[:epp]
+
+    def local_slots(gslot, my_p):
+        mine = (gslot // epp) == my_p
+        return jnp.where(mine, gslot - my_p * epp, epp)
+
+    @jax.jit
+    @partial(_shard_map, mesh=ds.mesh,
+             in_specs=(vb, vb, e, e, e, e) + extra_specs + (r, r, r, r, r, r),
+             out_specs=(vb, vb, e, e, e, e, r, r),
+             **_SHARD_MAP_KW)
+    def add_epoch(dist, parent, esrc, edst, ew, eact, *rest):
+        """One shared pool patch + the SAME insertion frontier broadcast to
+        every lane (ADD tails are source-independent), then the batched
+        relax body to per-lane fixpoints."""
+        extras = rest[:n_extra]
+        gslot, bsrc, bdst, bw, racc, macc = rest[n_extra:]
+        my_p = jnp.int32(ds._flat_index())
+        row0 = my_p * npp
+        loc = local_slots(gslot, my_p)
+        esrc = masked_write(esrc, loc, bsrc)
+        edst = masked_write(edst, loc, bdst)
+        ew = masked_write(ew, loc, bw)
+        eact = masked_write(eact, loc, jnp.ones_like(gslot, jnp.bool_))
+        in_r = (bsrc >= row0) & (bsrc < row0 + npp)
+        fr = jnp.zeros((npp,), jnp.bool_).at[
+            jnp.clip(bsrc - row0, 0, npp - 1)].max(in_r)
+        fr_b = jnp.broadcast_to(fr, (S, npp))
+        wave = make_wave(esrc, edst, ew, eact, extras, my_p)
+        dist, parent, rounds, msgs = ds._relax_body_ms(
+            dist, parent, fr_b, jax.vmap(wave))
+        return (dist, parent, esrc, edst, ew, eact,
+                racc + rounds, macc + msgs)
+
+    @jax.jit
+    @partial(_shard_map, mesh=ds.mesh,
+             in_specs=(vb, vb, e, e, e, e) + extra_specs + (r, r, r, r, r),
+             out_specs=(vb, vb, e) + (v,) * len(del_mutated) + (r, r),
+             **_SHARD_MAP_KW)
+    def del_epoch(dist, parent, esrc, edst, ew, eact, *rest):
+        """Per-lane seeds (a deletion is a tree edge per lane or not) +
+        ONE shared deactivate/tombstone + per-lane invalidate/recompute.
+        Stats mirror the single-source del epoch per lane, gated on each
+        lane's own any_seed."""
+        extras = list(rest[:n_extra])
+        gslot, psrc, pdst, racc, macc = rest[n_extra:]
+        my_p = jnp.int32(ds._flat_index())
+        row0 = my_p * npp
+        in_r = (pdst >= row0) & (pdst < row0 + npp)
+        lds = jnp.clip(pdst - row0, 0, npp - 1)
+        seed = jax.vmap(
+            lambda par: jnp.zeros((npp,), jnp.bool_).at[lds].max(
+                in_r & (par[lds] == psrc)))(parent)
+        any_seed = jax.lax.psum(
+            jnp.sum(seed.astype(jnp.int32), axis=1), ax) > 0        # [S]
+        loc = local_slots(gslot, my_p)
+        eact = masked_write(eact, loc, jnp.zeros_like(gslot, jnp.bool_))
+        if del_patch is not None:
+            new_vals = del_patch(tuple(extras), psrc, pdst, my_p)
+            for i, val in zip(del_mutated, new_vals):
+                extras[i] = val
+        if use_doubling:
+            aff, inv_rounds = ds._invalidate_doubling_ms(parent, seed)
+        elif exchange == "delta":
+            aff, inv_rounds = ds._invalidate_delta_ms(parent, seed, row0)
+        else:
+            aff, inv_rounds = ds._invalidate_flood_dense_ms(parent, seed)
+        # never invalidate each lane's own source
+        local_ids = row0 + jnp.arange(npp, dtype=jnp.int32)
+        src_arr = jnp.asarray(sources_pad, jnp.int32)
+        aff = aff & (local_ids[None, :] != src_arr[:, None])
+        affected = jax.lax.psum(jnp.sum(aff.astype(jnp.int32), axis=1), ax)
+        dist = jnp.where(aff, INF, dist)
+        parent = jnp.where(aff, NO_PARENT, parent)
+        wave = make_wave(esrc, edst, ew, eact, tuple(extras), my_p)
+        wave_b = jax.vmap(wave)
+        if exchange == "delta":
+            dist, parent, rec_rounds, rec_msgs = ds._recompute_delta_ms(
+                dist, parent, aff, esrc, edst, eact, wave_b, row0)
+        else:
+            dist, parent, rec_rounds, rec_msgs = ds._recompute_pull_push_ms(
+                dist, parent, aff, wave_b)
+        zero = jnp.zeros((S,), jnp.int32)
         d_rounds = jnp.where(any_seed, inv_rounds + rec_rounds, zero)
         d_msgs = jnp.where(any_seed, rec_msgs, zero) + affected
         return (dist, parent, eact, *(extras[i] for i in del_mutated),

@@ -94,10 +94,17 @@ class DistributedSSSP:
         self.vspec = P(ax)          # vertex arrays: sharded dim 0
         self.espec = P(ax)          # edge arrays: sharded dim 0 (dst-owner order)
         self.rspec = P()            # replicated scalars
+        # batched multi-source vertex arrays [S, N]: source axis replicated,
+        # vertex axis sharded (serving layer, DESIGN.md §8)
+        self.vspec_ms = P(None, ax)
 
     # -------------------------------------------------------------- sharding
     def vertex_sharding(self) -> NamedSharding:
         return NamedSharding(self.mesh, self.vspec)
+
+    def vertex_sharding_ms(self) -> NamedSharding:
+        """Sharding for stacked [S, N] multi-source vertex arrays."""
+        return NamedSharding(self.mesh, self.vspec_ms)
 
     def edge_sharding(self) -> NamedSharding:
         return NamedSharding(self.mesh, self.espec)
@@ -453,6 +460,229 @@ class DistributedSSSP:
             dcond, dbody, (seed, seed, jnp.bool_(True), jnp.int32(0)))
         return aff, inv_rounds
 
+    # ------------------------------------------- batched multi-source impls
+    # The serving layer's [S, npp] renderings of the bodies above
+    # (DESIGN.md §8): S stacked trees advance through ONE shared loop over
+    # the shared graph.  Written with an explicit leading source dimension
+    # (not vmap) so no collective ever needs a batching rule — all_gather
+    # takes ``axis=1``, psum reduces [S] vectors elementwise; only the pure
+    # shard-local ``wave`` is vmapped by the caller.
+    #
+    # Per-lane bit-identity argument: a lane whose frontier has drained
+    # offers +inf everywhere, so its (dist, parent, frontier) are natural
+    # fixpoints of every further round — no select-masking needed — and the
+    # per-lane ``go`` gate stops its round counter exactly where the
+    # unbatched while_loop would have exited.  Messages need no gate: a
+    # drained lane improves nothing, so its per-round count is already 0.
+
+    def _relax_body_ms(self, dist, parent, frontier, wave_b):
+        """Batched ``_relax_body``: dist/parent/frontier are [S, npp];
+        returns (dist, parent, rounds[S], messages[S]) — each lane equal to
+        what the unbatched body returns for its source."""
+        ax = self.cfg.mesh_axes
+        row0 = jnp.int32(self._flat_index()) * self.npp
+        S = dist.shape[0]
+
+        def rnd(dist, parent, frontier):
+            if self.cfg.exchange == "delta":
+                return self._round_delta_ms(dist, parent, frontier, wave_b,
+                                            row0)
+            return self._round_allgather_ms(dist, parent, frontier, wave_b)
+
+        def cond(carry):
+            return jnp.any(carry[3])
+
+        def body(carry):
+            dist, parent, frontier, go, rounds, msgs = carry
+            dist, parent, improved = rnd(dist, parent, frontier)
+            n_imp = jax.lax.psum(
+                jnp.sum(improved.astype(jnp.int32), axis=1), ax)
+            return (dist, parent, improved, n_imp > 0,
+                    rounds + go.astype(jnp.int32), msgs + n_imp)
+
+        init_go = jax.lax.psum(
+            jnp.sum(frontier.astype(jnp.int32), axis=1), ax) > 0
+        dist, parent, _, _, rounds, msgs = jax.lax.while_loop(
+            cond, body, (dist, parent, frontier, init_go,
+                         jnp.zeros((S,), jnp.int32),
+                         jnp.zeros((S,), jnp.int32)))
+        return dist, parent, rounds, msgs
+
+    def _round_allgather_ms(self, dist, parent, frontier, wave_b):
+        ax = self.cfg.mesh_axes
+        dist_full = jax.lax.all_gather(dist, ax, tiled=True, axis=1)
+        front_full = jax.lax.all_gather(frontier, ax, tiled=True, axis=1)
+        offers = jnp.where(front_full, dist_full, INF)
+        return self._apply_wave(dist, parent, wave_b, offers)
+
+    def _round_delta_ms(self, dist, parent, frontier, wave_b, row0):
+        """Per-lane delta packing; overflow lanes fall back to the dense
+        gather via a per-lane select (both operands are computed — the
+        batched rendering of the unbatched ``lax.cond``, same fixpoint)."""
+        ax = self.cfg.mesh_axes
+        cap = self.cfg.delta_cap
+        n = self.cfg.num_vertices
+        overflow = jax.lax.psum(
+            (jnp.sum(frontier.astype(jnp.int32), axis=1)
+             > cap).astype(jnp.int32), ax) > 0                     # [S]
+        local_ids = row0 + jnp.arange(self.npp, dtype=jnp.int32)
+        order = jnp.argsort(~frontier, axis=1)   # frontier first (stable)
+        take = order[:, :cap]
+        sel = jnp.take_along_axis(frontier, take, axis=1)
+        pack_idx = jnp.where(sel, local_ids[take], -1)
+        pack_val = jnp.where(sel, jnp.take_along_axis(dist, take, axis=1),
+                             INF)
+        all_idx = jax.lax.all_gather(pack_idx, ax, tiled=True, axis=1)
+        all_val = jax.lax.all_gather(pack_val, ax, tiled=True, axis=1)
+        safe = jnp.clip(all_idx, 0, n - 1)
+        sparse = jax.vmap(lambda s_, v: jnp.full((n,), INF, dist.dtype)
+                          .at[s_].min(v))(
+            safe, jnp.where(all_idx >= 0, all_val, INF))
+        dense = jax.lax.all_gather(dist, ax, tiled=True, axis=1)
+        offers = jnp.where(overflow[:, None], dense, sparse)
+        return self._apply_wave(dist, parent, wave_b, offers)
+
+    def _recompute_pull_push_ms(self, dist, parent, aff, wave_b):
+        """Batched ``_recompute_pull_push``: one unmasked pull wave per
+        lane, improvements folded into affected rows only, then the batched
+        push body to fixpoint."""
+        ax = self.cfg.mesh_axes
+        offers = jax.lax.all_gather(dist, ax, tiled=True, axis=1)
+        best, arg = wave_b(offers)
+        improved = (best < dist) & aff
+        dist = jnp.where(improved, best, dist)
+        parent = jnp.where(improved, arg, parent)
+        n_pull = jax.lax.psum(jnp.sum(improved.astype(jnp.int32), axis=1), ax)
+        dist, parent, rounds, msgs = self._relax_body_ms(
+            dist, parent, improved, wave_b)
+        return dist, parent, rounds + 1, msgs + n_pull
+
+    def _recompute_delta_ms(self, dist, parent, aff, esrc, edst, eact,
+                            wave_b, row0):
+        """Batched ``_recompute_delta``: the request set is packed per lane
+        from the shared pool slice (each lane's affected rows differ)."""
+        ax = self.cfg.mesh_axes
+        cap = self.cfg.delta_cap
+        n = self.cfg.num_vertices
+        S = dist.shape[0]
+        dl = edst - row0
+        req = eact[None, :] & aff[:, dl]                          # [S, epp]
+        order = jnp.argsort(~req, axis=1)
+        take = order[:, :cap]
+        sel = jnp.take_along_axis(req, take, axis=1)
+        pack = jnp.where(sel, esrc[take], -1)
+        overflow = jax.lax.psum(
+            (jnp.sum(req.astype(jnp.int32), axis=1)
+             > cap).astype(jnp.int32), ax) > 0
+        all_q = jax.lax.all_gather(pack, ax, tiled=True, axis=1)
+        safe = jnp.clip(all_q, 0, n - 1)
+        base = jax.vmap(lambda s_, m: jnp.zeros((n,), jnp.bool_)
+                        .at[s_].max(m))(safe, all_q >= 0)
+        local_ids = row0 + jnp.arange(self.npp, dtype=jnp.int32)
+        sparse_front = jnp.take(base, local_ids, axis=1)
+        queried = jnp.where(overflow[:, None],
+                            jnp.ones((S, self.npp), jnp.bool_), sparse_front)
+        frontier0 = queried & jnp.isfinite(dist)
+        return self._relax_body_ms(dist, parent, frontier0, wave_b)
+
+    def _invalidate_doubling_ms(self, parent, seed):
+        """Batched pointer-doubling marking over [S, npp] per-lane forests."""
+        ax = self.cfg.mesh_axes
+        S = parent.shape[0]
+
+        def dcond(carry):
+            return jnp.any(carry[2])
+
+        def dbody(carry):
+            aff, ptr, go, rounds = carry
+            aff_full = jax.lax.all_gather(aff, ax, tiled=True, axis=1)
+            par_full = jax.lax.all_gather(ptr, ax, tiled=True, axis=1)
+            valid = ptr >= 0
+            safe = jnp.clip(ptr, 0)
+            hop = jnp.where(valid,
+                            jnp.take_along_axis(aff_full, safe, axis=1),
+                            False)
+            new_aff = aff | hop
+            nxt = jnp.where(valid,
+                            jnp.take_along_axis(par_full, safe, axis=1),
+                            NO_PARENT)
+            grew_local = (jnp.any(new_aff != aff, axis=1)
+                          | jnp.any(nxt != ptr, axis=1))
+            grew = jax.lax.psum(grew_local.astype(jnp.int32), ax) > 0
+            return new_aff, nxt, grew, rounds + go.astype(jnp.int32)
+
+        aff, _, _, inv_rounds = jax.lax.while_loop(
+            dcond, dbody, (seed, parent, jnp.ones((S,), jnp.bool_),
+                           jnp.zeros((S,), jnp.int32)))
+        return aff, inv_rounds
+
+    def _invalidate_flood_dense_ms(self, parent, seed):
+        """Batched level-by-level SetToInfinity flood over per-lane forests."""
+        ax = self.cfg.mesh_axes
+        S = parent.shape[0]
+
+        def dcond(carry):
+            return jnp.any(carry[1])
+
+        def dbody(carry):
+            aff, go, rounds = carry
+            aff_full = jax.lax.all_gather(aff, ax, tiled=True, axis=1)
+            join = jnp.where(
+                parent >= 0,
+                jnp.take_along_axis(aff_full, jnp.clip(parent, 0), axis=1),
+                False)
+            new = aff | join
+            grew = jax.lax.psum(
+                jnp.sum((new != aff).astype(jnp.int32), axis=1), ax) > 0
+            return new, grew, rounds + go.astype(jnp.int32)
+
+        aff, _, inv_rounds = jax.lax.while_loop(
+            dcond, dbody, (seed, jnp.ones((S,), jnp.bool_),
+                           jnp.zeros((S,), jnp.int32)))
+        return aff, inv_rounds
+
+    def _invalidate_delta_ms(self, parent, seed, row0):
+        """Batched delta-compressed flood; per-lane packing, per-lane dense
+        fallback select (same structure as ``_round_delta_ms``)."""
+        ax = self.cfg.mesh_axes
+        cap = self.cfg.delta_cap
+        n = self.cfg.num_vertices
+        S = parent.shape[0]
+        local_ids = row0 + jnp.arange(self.npp, dtype=jnp.int32)
+
+        def dcond(carry):
+            return jnp.any(carry[2])
+
+        def dbody(carry):
+            aff, frontier, go, rounds = carry
+            overflow = jax.lax.psum(
+                (jnp.sum(frontier.astype(jnp.int32), axis=1)
+                 > cap).astype(jnp.int32), ax) > 0
+            order = jnp.argsort(~frontier, axis=1)
+            take = order[:, :cap]
+            sel = jnp.take_along_axis(frontier, take, axis=1)
+            pack = jnp.where(sel, local_ids[take], -1)
+            all_ids = jax.lax.all_gather(pack, ax, tiled=True, axis=1)
+            safe = jnp.clip(all_ids, 0, n - 1)
+            sparse = jax.vmap(lambda s_, m: jnp.zeros((n,), jnp.bool_)
+                              .at[s_].max(m))(safe, all_ids >= 0)
+            dense = jax.lax.all_gather(aff, ax, tiled=True, axis=1)
+            base = jnp.where(overflow[:, None], dense, sparse)
+            valid = parent >= 0
+            join = jnp.where(
+                valid, jnp.take_along_axis(base, jnp.clip(parent, 0), axis=1),
+                False)
+            new = join & ~aff
+            aff2 = aff | new
+            grew = jax.lax.psum(
+                jnp.sum(new.astype(jnp.int32), axis=1), ax) > 0
+            return aff2, new, grew, rounds + go.astype(jnp.int32)
+
+        aff, _, _, inv_rounds = jax.lax.while_loop(
+            dcond, dbody, (seed, seed, jnp.ones((S,), jnp.bool_),
+                           jnp.zeros((S,), jnp.int32)))
+        return aff, inv_rounds
+
     def make_seed_from_deletions(self):
         """seed(parent, del_src, del_dst) -> bool[N] invalidation seeds.
 
@@ -480,6 +710,17 @@ class DistributedSSSP:
         dist = np.full(n, np.inf, np.float32); dist[source] = 0.0
         parent = np.full(n, -1, np.int32)
         sh = self.vertex_sharding()
+        return (jax.device_put(dist, sh), jax.device_put(parent, sh))
+
+    def init_vertex_arrays_ms(self, sources):
+        """Stacked [S, N] multi-source vertex state, sharded along the
+        vertex axis (row ``i`` == ``init_vertex_arrays(sources[i])``)."""
+        n = self.cfg.num_vertices
+        s = len(sources)
+        dist = np.full((s, n), np.inf, np.float32)
+        dist[np.arange(s), np.asarray(sources)] = 0.0
+        parent = np.full((s, n), -1, np.int32)
+        sh = self.vertex_sharding_ms()
         return (jax.device_put(dist, sh), jax.device_put(parent, sh))
 
     def put_edges(self, src, dst, w, active):

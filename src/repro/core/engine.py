@@ -10,6 +10,11 @@ Faithful behaviour (defaults):
   * QUERY markers enforce an epoch and snapshot (dist, parent).
 
 Beyond-paper switches:
+  * ``sources=(s0, s1, ...)`` — batched multi-source serving (DESIGN.md §8):
+    the engine maintains stacked ``[S, N]`` dist/parent state, one tree per
+    source, over ONE shared graph layout; every epoch runs vmapped over the
+    source axis and is bit-identical per lane to S independent engines
+    (``source`` is ignored when ``sources`` is set).
   * ``batch_deletions=True`` — coalesce a run of consecutive DELs into one
     invalidation+recompute epoch (union of affected subtrees; DESIGN.md §3).
   * ``use_doubling`` — pointer-doubling invalidation (default True; set False
@@ -32,7 +37,6 @@ round-trip per deletion.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
@@ -66,10 +70,20 @@ class EngineConfig:
     sliced_slice_rows: int = 256  # rows per degree slice (per-slice K)
     sliced_hub_k: int = 32        # hub threshold: rows past it spill to COO
     sliced_init_k: int = 2        # initial per-slice width; doubles at rebuild
+    # batched multi-source serving (DESIGN.md §8); None = single-source
+    sources: tuple[int, ...] | None = None
 
     def __post_init__(self):
         # fail at construction with the valid set, not deep in layout init
         bk_mod.validate_backend_config(self)
+        if self.sources is not None:
+            self.sources = tuple(int(s) for s in self.sources)
+            bad = [s for s in self.sources
+                   if not 0 <= s < self.num_vertices]
+            if not self.sources or bad:
+                raise ValueError(
+                    f"sources must be non-empty vertex ids in "
+                    f"[0, {self.num_vertices}); got {self.sources}")
 
 
 class SSSPDelEngine(StreamEngineBase):
@@ -82,10 +96,15 @@ class SSSPDelEngine(StreamEngineBase):
     """
 
     def __init__(self, cfg: EngineConfig):
-        super().__init__()
+        super().__init__(sources=cfg.sources)
         self.cfg = cfg
         self.alloc = ingest.SlotAllocator(cfg.edge_capacity, cfg.on_duplicate)
         self.state = GraphState.init(cfg.num_vertices, cfg.edge_capacity, cfg.source)
+        if self.sources is not None:
+            # stacked [S, N] trees over the single shared edge pool
+            self.state = dataclasses.replace(
+                self.state, sssp=SSSPState.init_batched(
+                    cfg.num_vertices, self.sources))
         on_tpu = jax.default_backend() == "tpu"
         use_kernel = on_tpu if cfg.ell_use_kernel is None else cfg.ell_use_kernel
         self.backend = bk_mod.make_backend(
@@ -108,7 +127,9 @@ class SSSPDelEngine(StreamEngineBase):
         frontier = relax.frontier_from_vertices(
             jnp.asarray(plan.src), self.cfg.num_vertices)
         self.backend.apply_adds(plan, self.alloc)
-        sssp, stats = self.backend.relax(self.state.sssp, edges, frontier)
+        relax_fn = (self.backend.relax if self.sources is None
+                    else self.backend.relax_batched)
+        sssp, stats = relax_fn(self.state.sssp, edges, frontier)
         self.state = dataclasses.replace(self.state, edges=edges, sssp=sssp)
         self.n_adds += len(plan.slots)
         self.n_epochs += 1
@@ -122,31 +143,38 @@ class SSSPDelEngine(StreamEngineBase):
                 continue
             slots_p, psrc_p, pdst_p = ingest.pad_pow2(slots, psrc, pdst)
             # Epoch before the deletion is implicit: every prior batch ran to
-            # convergence.  Seed from the *pre-deletion* tree, then deactivate.
-            seed = del_mod.deletion_seed_for_edges(
-                self.state.sssp, jnp.asarray(psrc_p), jnp.asarray(pdst_p),
-                self.cfg.num_vertices)
+            # convergence.  Seed from the *pre-deletion* tree, then
+            # deactivate.  Batched lanes seed independently — whether a
+            # deleted edge was a tree edge depends on each lane's forest.
+            if self.sources is None:
+                seed = del_mod.deletion_seed_for_edges(
+                    self.state.sssp, jnp.asarray(psrc_p),
+                    jnp.asarray(pdst_p), self.cfg.num_vertices)
+                delete_fn = self.backend.delete
+            else:
+                seed = del_mod.deletion_seed_for_edges_batched(
+                    self.state.sssp, jnp.asarray(psrc_p),
+                    jnp.asarray(pdst_p), self.cfg.num_vertices)
+                delete_fn = self.backend.delete_batched
             edges = ingest.apply_dels(self.state.edges, jnp.asarray(slots_p))
             self.backend.apply_dels(pdst_p, psrc_p)
             # Non-tree deletions (all-false seed) are a device no-op with
             # zeroed stats — cheaper than syncing on bool(jnp.any(seed)).
-            sssp, dstats = self.backend.delete(self.state.sssp, edges, seed)
+            sssp, dstats = delete_fn(self.state.sssp, edges, seed)
             self.state = dataclasses.replace(self.state, edges=edges, sssp=sssp)
             self._accumulate_delete(dstats)
             self.n_dels += len(slots)
             self.n_epochs += 1
 
     # ----------------------------------------------------------------- query
-    def query(self) -> QueryResult:
-        """State collection (paper §3): epoch is already enforced (every batch
-        runs to convergence), so the query cost is the device->host readback
-        plus any residual convergence work (none in faithful mode)."""
-        t0 = time.perf_counter()
-        dist = np.asarray(jax.device_get(self.state.sssp.dist))
-        parent = np.asarray(jax.device_get(self.state.sssp.parent))
-        dt = time.perf_counter() - t0
-        return QueryResult(dist=dist, parent=parent, latency_s=dt,
-                           epoch_stats=self._stream_stats())
+    def _snapshot(self, lane: int | None) -> tuple[np.ndarray, np.ndarray]:
+        """Device->host readback (latency is timed by the base query());
+        a routed lane query transfers only that source's [N] pair."""
+        s = self.state.sssp
+        dist, parent = (s.dist, s.parent) if lane is None else \
+            (s.dist[lane], s.parent[lane])
+        return (np.asarray(jax.device_get(dist)),
+                np.asarray(jax.device_get(parent)))
 
     # ------------------------------------------------------------ checkpoint
     def checkpoint(self) -> dict[str, np.ndarray]:

@@ -12,6 +12,12 @@ Event kinds::
 The stream has no lookahead; the engine is free to coalesce *consecutive*
 events of the same kind into one device batch (the paper's runtime similarly
 drains its topology buffer before algorithmic messages).
+
+QUERY events carry the *query source* in their ``src`` column (``-1`` = the
+engine's default / every maintained source) — the serving layer's
+multi-source streams (repro/serving/, DESIGN.md §8) route each query to one
+of the batched trees this way.  Single-source streams leave it at ``-1`` and
+nothing changes.
 """
 from __future__ import annotations
 
@@ -30,12 +36,18 @@ class EventBatch:
     """A run of same-kind events (host-side, numpy)."""
 
     kind: int
-    src: np.ndarray  # i64[n]  (QUERY: empty)
+    src: np.ndarray  # i64[n]  (QUERY: singleton query source; -1 = default)
     dst: np.ndarray  # i64[n]
     w: np.ndarray    # f32[n]  (DEL/QUERY: ignored)
 
     def __len__(self) -> int:
         return 0 if self.kind == QUERY else len(self.src)
+
+    @property
+    def query_source(self) -> int:
+        """The QUERY marker's requested source (``-1`` = default)."""
+        assert self.kind == QUERY
+        return int(self.src[0]) if len(self.src) else -1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,7 +69,7 @@ class EventLog:
         """Coalesce consecutive same-kind events into batches.
 
         QUERY markers are always emitted as singleton batches (each is a
-        distinct state-collection point).
+        distinct state-collection point) carrying their query-source row.
         """
         n = len(self)
         if n == 0:
@@ -70,8 +82,8 @@ class EventLog:
             k = int(kinds[a])
             if k == QUERY:
                 for i in range(a, b):
-                    yield EventBatch(QUERY, np.empty(0, np.int64),
-                                     np.empty(0, np.int64), np.empty(0, np.float32))
+                    yield EventBatch(QUERY, self.src[i:i + 1],
+                                     self.dst[i:i + 1], self.w[i:i + 1])
             else:
                 yield EventBatch(k, self.src[a:b], self.dst[a:b], self.w[a:b])
 
@@ -97,8 +109,11 @@ def dels(src, dst) -> EventLog:
                     np.asarray(dst, np.int64), np.zeros(len(src), np.float32))
 
 
-def query_marker() -> EventLog:
-    return EventLog(np.array([QUERY], np.uint8), np.array([-1], np.int64),
+def query_marker(source: int = -1) -> EventLog:
+    """QUERY marker; ``source`` routes the query to one maintained tree of a
+    batched multi-source engine (``-1`` = default/every source)."""
+    return EventLog(np.array([QUERY], np.uint8),
+                    np.array([source], np.int64),
                     np.array([-1], np.int64), np.array([0.0], np.float32))
 
 

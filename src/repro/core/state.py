@@ -78,6 +78,19 @@ class SSSPState:
         parent = jnp.full((num_vertices,), NO_PARENT, jnp.int32)
         return SSSPState(dist=dist, parent=parent, source=source)
 
+    @staticmethod
+    def init_batched(num_vertices: int,
+                     sources: tuple[int, ...]) -> "SSSPState":
+        """Stacked multi-source state (serving layer, DESIGN.md §8): one
+        [S, N] dist/parent pair per maintained source, sharing the graph.
+        Row ``i`` is exactly ``init(num_vertices, sources[i])``."""
+        srcs = jnp.asarray(sources, jnp.int32)
+        s = len(sources)
+        dist = jnp.full((s, num_vertices), INF, jnp.float32).at[
+            jnp.arange(s), srcs].set(0.0)
+        parent = jnp.full((s, num_vertices), NO_PARENT, jnp.int32)
+        return SSSPState(dist=dist, parent=parent, source=srcs)
+
     def reached(self) -> jax.Array:
         return jnp.isfinite(self.dist)
 

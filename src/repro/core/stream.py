@@ -7,24 +7,33 @@ that is *stream* logic rather than *epoch* logic lives here:
 
   * the driver loop (``ingest_log``) that coalesces the log into runs and
     dispatches ADD/DEL batches and QUERY markers;
-  * the ``QueryResult`` record returned at every QUERY marker;
+  * the ``QueryResult`` record returned at every QUERY marker, with its
+    wall-clock ``latency_s`` timed HERE (the template ``query()`` wraps the
+    engine's ``_snapshot`` readback) so both engines measure result latency
+    identically — the serving harness's latency metric (DESIGN.md §8);
+  * multi-source lane routing (DESIGN.md §8): engines constructed with
+    ``sources=(s0, s1, ...)`` maintain stacked ``[S, N]`` dist/parent state;
+    ``query(source=s)`` reads back ONE lane, ``query()`` the full stack,
+    and QUERY stream markers carry their requested source;
   * lazy device-scalar stats counters (DESIGN.md §2.4: the ingest loop never
     blocks on a device value — rounds/messages accumulate on device and are
-    only read back inside ``query()``);
+    only read back inside ``query()``; in batched mode they are ``[S]``
+    device vectors, one independent counter per source);
   * the paper's §5.4 predecessor-stability metric;
   * the device-scalar stat accumulators the epoch results fold into.
 
-Subclasses implement ``_ingest_adds`` / ``_ingest_dels`` / ``query`` and keep
-``_dev_rounds`` / ``_dev_messages`` as device scalars.  Layout-specific work
-lives one layer down, behind the ``RelaxBackend`` protocol
-(core/backends/, DESIGN.md §7): the single-device engine folds its
-backend's epoch stats through ``_accumulate_relax`` /
+Subclasses implement ``_ingest_adds`` / ``_ingest_dels`` / ``_snapshot`` and
+keep ``_dev_rounds`` / ``_dev_messages`` as device scalars (or ``[S]``
+vectors).  Layout-specific work lives one layer down, behind the
+``RelaxBackend`` protocol (core/backends/, DESIGN.md §7): the single-device
+engine folds its backend's epoch stats through ``_accumulate_relax`` /
 ``_accumulate_delete``; the sharded engine threads the same counters
 through its shard_map epochs as replicated device scalars.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable
 
 import jax
@@ -36,33 +45,59 @@ from repro.core import events as ev
 
 @dataclasses.dataclass
 class QueryResult:
-    dist: np.ndarray
-    parent: np.ndarray
-    latency_s: float
+    dist: np.ndarray      # f32[N] (lane or single-source) or f32[S, N]
+    parent: np.ndarray    # i32 of the same shape
+    latency_s: float      # wall-clock snapshot latency (timed in query())
     epoch_stats: dict[str, Any]
+    source: int | None = None   # the lane's source for a routed query
 
 
 class StreamEngineBase:
     """Host-side driver over jitted device epochs; subclasses own the state."""
 
-    def __init__(self) -> None:
+    def __init__(self, sources: tuple[int, ...] | None = None) -> None:
+        # Batched multi-source serving mode (DESIGN.md §8): ``sources`` is
+        # the static tuple of maintained sources; None = classic
+        # single-source engine.  ``_lane_of`` routes query sources to rows
+        # of the stacked [S, N] state.
+        self.sources = tuple(int(s) for s in sources) if sources else None
+        if self.sources is not None:
+            if len(set(self.sources)) != len(self.sources):
+                raise ValueError(f"duplicate sources: {self.sources}")
+            self._lane_of = {s: i for i, s in enumerate(self.sources)}
+        else:
+            self._lane_of = {}
         # batch counters (host-side; no device source)
         self.n_epochs = 0
         self.n_adds = 0
         self.n_dels = 0
         # round/message counters live ON DEVICE; read back lazily at query()
-        self._dev_rounds = jnp.int32(0)
-        self._dev_messages = jnp.int32(0)
-        self._last_parent: np.ndarray | None = None
+        # (batched engines keep one independent [S] counter per source)
+        if self.sources is not None:
+            self._dev_rounds = jnp.zeros((len(self.sources),), jnp.int32)
+            self._dev_messages = jnp.zeros((len(self.sources),), jnp.int32)
+        else:
+            self._dev_rounds = jnp.int32(0)
+            self._dev_messages = jnp.int32(0)
+        # previous parent snapshot per stability scope (None = full state,
+        # a source id = that routed lane) — two routed [N] snapshots from
+        # DIFFERENT lanes must never be compared against each other
+        self._last_parent: dict[int | None, np.ndarray] = {}
 
     # --------------------------------------------------------- lazy counters
-    @property
-    def n_rounds(self) -> int:
-        return int(jax.device_get(self._dev_rounds))
+    @staticmethod
+    def _counter(x) -> int | np.ndarray:
+        got = jax.device_get(x)
+        return int(got) if np.ndim(got) == 0 else np.asarray(got)
 
     @property
-    def n_messages(self) -> int:
-        return int(jax.device_get(self._dev_messages))
+    def n_rounds(self) -> int | np.ndarray:
+        """BSP rounds so far — an int, or i32[S] per source when batched."""
+        return self._counter(self._dev_rounds)
+
+    @property
+    def n_messages(self) -> int | np.ndarray:
+        return self._counter(self._dev_messages)
 
     def _stream_stats(self) -> dict[str, Any]:
         return {
@@ -73,7 +108,8 @@ class StreamEngineBase:
 
     def _accumulate_relax(self, stats) -> None:
         """Fold one relaxation epoch's ``RelaxStats`` into the device
-        scalars (lazy add — no host sync)."""
+        scalars (lazy add — no host sync).  Batched epochs carry ``[S]``
+        stat vectors; the add broadcasts the initial scalar up."""
         self._dev_rounds = self._dev_rounds + stats.rounds
         self._dev_messages = self._dev_messages + stats.messages
 
@@ -104,14 +140,74 @@ class StreamEngineBase:
     def _ingest_dels(self, batch: ev.EventBatch) -> None:
         raise NotImplementedError
 
-    def query(self) -> QueryResult:
+    def _snapshot(self, lane: int | None) -> tuple[np.ndarray, np.ndarray]:
+        """Device->host readback of (dist, parent) — one lane of the
+        stacked state when ``lane`` is given, everything otherwise."""
         raise NotImplementedError
+
+    # ----------------------------------------------------------------- query
+    def serves(self, source: int) -> bool:
+        """Whether a routed ``query(source=...)`` would be answered from a
+        dedicated lane/tree of this engine."""
+        if self.sources is not None:
+            return source in self._lane_of
+        return int(source) == int(self.cfg.source)
+
+    def route_of(self, query_source: int) -> int | None:
+        """THE stream-marker routing policy, shared by ``ingest_log`` and
+        the trace replayer (repro/serving/replay.py) so the two can never
+        drift: a marker's source routes to its lane on a batched engine
+        that serves it; everything else (``-1``, unserved sources,
+        single-source engines) reads the full state."""
+        if (query_source >= 0 and self.sources is not None
+                and self.serves(query_source)):
+            return query_source
+        return None
+
+    def lane_of(self, source: int) -> int:
+        """Row of the stacked [S, N] state serving ``source``."""
+        if self.sources is None:
+            raise ValueError("lane_of() on a single-source engine; construct "
+                             "with sources=(...) for batched serving")
+        if source not in self._lane_of:
+            raise ValueError(f"source {source} is not served by this engine "
+                             f"(sources={self.sources})")
+        return self._lane_of[source]
+
+    def query(self, source: int | None = None) -> QueryResult:
+        """State collection (paper §3): epochs are already enforced (every
+        batch runs to convergence), so the query cost is the device->host
+        readback — timed here as the result latency (DESIGN.md §8).
+
+        ``source`` routes the query to one maintained tree of a batched
+        engine (only that lane is read back); a single-source engine
+        accepts its own source or None.
+        """
+        lane: int | None = None
+        if source is not None:
+            if self.sources is not None:
+                lane = self.lane_of(int(source))
+            elif int(source) != int(self.cfg.source):
+                raise ValueError(
+                    f"source {source} is not served by this engine "
+                    f"(source={self.cfg.source})")
+        t0 = time.perf_counter()
+        dist, parent = self._snapshot(lane)
+        dt = time.perf_counter() - t0
+        return QueryResult(dist=dist, parent=parent, latency_s=dt,
+                           epoch_stats=self._stream_stats(),
+                           source=None if source is None else int(source))
 
     # ---------------------------------------------------------------- stream
     def ingest_log(self, log: ev.EventLog,
                    on_query: Callable[[QueryResult], None] | None = None
                    ) -> list[QueryResult]:
-        """Drive the engine over an event log; returns query results."""
+        """Drive the engine over an event log; returns query results.
+
+        QUERY markers carrying a source (events.query_marker(source=s)) are
+        routed to that lane on a batched engine; markers with ``-1`` (and
+        every marker on a single-source engine) read the full state.
+        """
         results: list[QueryResult] = []
         for batch in log.runs():
             if batch.kind == ev.ADD:
@@ -119,21 +215,25 @@ class StreamEngineBase:
             elif batch.kind == ev.DEL:
                 self._ingest_dels(batch)
             else:
-                res = self.query()
+                res = self.query(source=self.route_of(batch.query_source))
                 results.append(res)
                 if on_query is not None:
                     on_query(res)
         return results
 
     # ------------------------------------------------------------- stability
-    def stability_vs_prev(self, parent: np.ndarray) -> float:
+    def stability_vs_prev(self, parent: np.ndarray,
+                          source: int | None = None) -> float:
         """Paper §5.4: fraction of vertices whose predecessor is unchanged
-        (over vertices present in both results)."""
-        if self._last_parent is None:
-            self._last_parent = parent.copy()
+        (over vertices present in both results).  Shape-agnostic: a batched
+        [S, N] parent stack scores all lanes at once.  ``source`` scopes
+        the comparison: pass ``QueryResult.source`` so a routed lane's
+        snapshot is only ever compared against the SAME lane's previous
+        snapshot (the first observation of each scope scores 1.0)."""
+        key = None if source is None else int(source)
+        prev = self._last_parent.get(key)
+        self._last_parent[key] = parent.copy()
+        if prev is None or prev.shape != parent.shape:
             return 1.0
-        prev = self._last_parent
         both = (prev >= 0) & (parent >= 0)
-        frac = float(np.mean(prev[both] == parent[both])) if both.any() else 1.0
-        self._last_parent = parent.copy()
-        return frac
+        return float(np.mean(prev[both] == parent[both])) if both.any() else 1.0

@@ -1,0 +1,23 @@
+"""Serving layer (DESIGN.md §8): batched multi-source SSSP serving over the
+dynamic engines, workload-trace record/replay, and the paper's serving
+metrics (result latency, solution stability, event throughput).
+
+The batched multi-source *state* itself lives in the engines
+(``EngineConfig(sources=...)`` / ``ShardedEngineConfig(sources=...)``,
+core/engine.py, core/dist_engine.py); this package provides the workload
+side: the on-disk trace format, the deterministic replayer, and the
+``ServingReport`` metrics harness every scaling PR (query routing, caching,
+admission control) plugs into.
+"""
+from repro.serving.metrics import (ServingReport, churn, pctile,
+                                   percentiles)
+from repro.serving.replay import replay_trace
+from repro.serving.trace import (TRACE_MAGIC, TRACE_VERSION, ServingTrace,
+                                 TraceFormatError, TraceRecorder,
+                                 load_trace_or_exit)
+
+__all__ = [
+    "ServingReport", "ServingTrace", "TraceFormatError", "TraceRecorder",
+    "TRACE_MAGIC", "TRACE_VERSION", "churn", "load_trace_or_exit",
+    "pctile", "percentiles", "replay_trace",
+]

@@ -1,0 +1,97 @@
+"""Trace replayer: drive any dynamic engine from a recorded trace and
+measure the paper's serving metrics along the way (DESIGN.md §8).
+
+Deterministic by construction — the trace fixes the event order, the
+engines' epochs are deterministic, so two replays of the same trace on
+equivalently configured engines produce bit-identical results
+(tests/test_serving.py round-trip test).
+
+Query routing: a QUERY row carrying source ``s`` is answered from lane
+``s`` of a batched multi-source engine (only that lane's [N] snapshot is
+read back).  On a single-source engine the trace's query sources select
+nothing — the engine serves its one tree — which is exactly what the
+sequential-baseline comparison in the ``serving`` bench section needs.
+
+``pace=True`` honors the trace's inter-event gaps (sleeping until each
+batch's first timestamp) to model offered load instead of max-speed
+replay; throughput then reflects the trace's rate, not the engine's.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+from repro.core import events as ev
+from repro.core.stream import QueryResult, StreamEngineBase
+from repro.serving.metrics import ServingReport, churn, percentiles
+from repro.serving.trace import ServingTrace
+
+
+def _engine_label(engine: StreamEngineBase) -> str:
+    kind = ("sharded" if type(engine).__name__.startswith("Sharded")
+            else "single")
+    return f"{kind}/{getattr(engine.cfg, 'relax_backend', '?')}"
+
+
+def replay_trace(engine: StreamEngineBase, trace: ServingTrace, *,
+                 pace: bool = False,
+                 on_query: Callable[[QueryResult], None] | None = None
+                 ) -> ServingReport:
+    """Replay ``trace`` through ``engine``; returns the ``ServingReport``.
+
+    Latency comes from each ``QueryResult.latency_s`` (the snapshot
+    readback timed in ``StreamEngineBase.query``).  Churn compares each
+    query's (dist, parent) against the PREVIOUS snapshot of the same scope
+    — per lane for routed queries, the full stack otherwise — so the first
+    observation of a scope contributes no churn sample.  Throughput is
+    topology events over the whole replay wall-clock.
+    """
+    log = trace.to_log()
+    latencies: list[float] = []
+    churns: list[dict[str, float]] = []
+    prev: dict[object, tuple] = {}
+    n_queries = 0
+    cursor = 0
+    t0 = time.perf_counter()
+    for batch in log.runs():
+        if pace:
+            lag = float(trace.t[cursor] - trace.t[0]) \
+                - (time.perf_counter() - t0)
+            if lag > 0:
+                time.sleep(lag)
+        if batch.kind == ev.ADD:
+            engine._ingest_adds(batch)
+            cursor += len(batch)
+        elif batch.kind == ev.DEL:
+            engine._ingest_dels(batch)
+            cursor += len(batch)
+        else:
+            res = engine.query(source=engine.route_of(batch.query_source))
+            n_queries += 1
+            cursor += 1
+            latencies.append(res.latency_s)
+            key = res.source if res.source is not None else "*"
+            if key in prev:
+                pd, pp = prev[key]
+                churns.append(churn(pd, pp, res.dist, res.parent))
+            prev[key] = (res.dist, res.parent)
+            if on_query is not None:
+                on_query(res)
+    wall = time.perf_counter() - t0
+    n_topo = trace.n_topology
+    mean = (lambda k: (sum(c[k] for c in churns) / len(churns))
+            if churns else 0.0)
+    return ServingReport(
+        engine=_engine_label(engine),
+        n_sources=len(engine.sources) if engine.sources else 1,
+        events=len(trace),
+        topology_events=n_topo,
+        queries=n_queries,
+        wall_s=wall,
+        events_per_s=n_topo / max(wall, 1e-9),
+        latency_s=percentiles(latencies),
+        churn_mean={"dist": mean("dist"), "parent": mean("parent"),
+                    "any": mean("any")},
+        latencies=latencies,
+        churns=churns,
+    )

@@ -1,0 +1,225 @@
+"""Workload traces: a compact on-disk event stream with per-event
+timestamps and per-query sources (DESIGN.md §8.2).
+
+This is the replay-an-update-trace methodology of Hanauer et al.'s fully
+dynamic experimental studies (PAPERS.md): record a mixed ADD/DEL/QUERY
+stream once, then replay it deterministically against any engine
+configuration so latency/stability/throughput comparisons share the exact
+same workload.
+
+Format (version 1) — a compressed ``.npz`` container written through an
+explicit file handle (so the path is stored verbatim, no ``.npz`` suffix
+magic) with struct-of-arrays columns:
+
+    magic    "sssp-del-trace"         (format tag)
+    version  1
+    kind     u8[n]   events.ADD / DEL / QUERY
+    src      i64[n]  ADD/DEL tail; QUERY rows carry the query source
+                     (-1 = default / every maintained source)
+    dst      i64[n]  ADD/DEL head (-1 on QUERY rows)
+    w        f32[n]  ADD weight (0 on DEL/QUERY rows)
+    t        f64[n]  nondecreasing seconds since trace start
+
+``ServingTrace.to_log()`` lowers a trace to the engines' ``EventLog`` (the
+query-source column rides along — events.py QUERY markers carry it);
+``from_log`` lifts a generated log into a trace with synthetic timestamps.
+``TraceRecorder`` stamps live events with a monotonic clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import zipfile
+
+import numpy as np
+
+from repro.core import events as ev
+
+TRACE_MAGIC = "sssp-del-trace"
+TRACE_VERSION = 1
+_COLUMNS = ("kind", "src", "dst", "w", "t")
+
+
+class TraceFormatError(ValueError):
+    """The file exists but is not a (compatible) serving trace."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingTrace:
+    """In-memory trace: an EventLog plus timestamps (struct of arrays)."""
+
+    kind: np.ndarray  # u8[n]
+    src: np.ndarray   # i64[n]
+    dst: np.ndarray   # i64[n]
+    w: np.ndarray     # f32[n]
+    t: np.ndarray     # f64[n], nondecreasing, seconds from trace start
+
+    def __post_init__(self):
+        n = len(self.kind)
+        for c in _COLUMNS[1:]:
+            if len(getattr(self, c)) != n:
+                raise TraceFormatError(
+                    f"column {c!r} has {len(getattr(self, c))} rows, "
+                    f"kind has {n}")
+
+    def __len__(self) -> int:
+        return len(self.kind)
+
+    @property
+    def n_topology(self) -> int:
+        return int(np.sum(self.kind != ev.QUERY))
+
+    @property
+    def n_queries(self) -> int:
+        return int(np.sum(self.kind == ev.QUERY))
+
+    def query_sources(self) -> np.ndarray:
+        """The query-source column of the QUERY rows (-1 = default)."""
+        return self.src[self.kind == ev.QUERY]
+
+    def duration_s(self) -> float:
+        return float(self.t[-1] - self.t[0]) if len(self) else 0.0
+
+    # ------------------------------------------------------------ conversion
+    def to_log(self) -> ev.EventLog:
+        return ev.EventLog(self.kind.astype(np.uint8),
+                           self.src.astype(np.int64),
+                           self.dst.astype(np.int64),
+                           self.w.astype(np.float32))
+
+    @staticmethod
+    def from_log(log: ev.EventLog, *, t: np.ndarray | None = None,
+                 events_per_s: float = 1e6) -> "ServingTrace":
+        """Lift an EventLog into a trace.  Without explicit timestamps a
+        synthetic uniform ramp at ``events_per_s`` is used — monotone and
+        deterministic, so record->replay round-trips are reproducible."""
+        if t is None:
+            t = np.arange(len(log), dtype=np.float64) / float(events_per_s)
+        t = np.asarray(t, np.float64)
+        return ServingTrace(np.asarray(log.kind, np.uint8),
+                            np.asarray(log.src, np.int64),
+                            np.asarray(log.dst, np.int64),
+                            np.asarray(log.w, np.float32), t)
+
+    # ------------------------------------------------------------------ disk
+    def save(self, path: str) -> None:
+        with open(path, "wb") as f:
+            np.savez_compressed(
+                f, magic=np.asarray(TRACE_MAGIC),
+                version=np.asarray(TRACE_VERSION),
+                kind=self.kind.astype(np.uint8),
+                src=self.src.astype(np.int64),
+                dst=self.dst.astype(np.int64),
+                w=self.w.astype(np.float32),
+                t=self.t.astype(np.float64))
+
+    @staticmethod
+    def load(path: str) -> "ServingTrace":
+        """Load and validate a trace.  Raises ``FileNotFoundError`` for a
+        missing path and ``TraceFormatError`` for anything that is not a
+        compatible trace (CLI entry points map both to exit code 2)."""
+        try:
+            z = np.load(path, allow_pickle=False)
+        except (zipfile.BadZipFile, ValueError, OSError) as e:
+            # np.load raises plain ValueError for non-npz bytes
+            if isinstance(e, FileNotFoundError):
+                raise
+            raise TraceFormatError(f"{path}: not a readable trace "
+                                   f"({e})") from e
+        with z:
+                files = set(z.files)
+                if "magic" not in files or str(z["magic"]) != TRACE_MAGIC:
+                    raise TraceFormatError(
+                        f"{path}: not a {TRACE_MAGIC} file")
+                version = int(z["version"])
+                if version > TRACE_VERSION:
+                    raise TraceFormatError(
+                        f"{path}: trace version {version} is newer than "
+                        f"supported {TRACE_VERSION}")
+                missing = [c for c in _COLUMNS if c not in files]
+                if missing:
+                    raise TraceFormatError(
+                        f"{path}: missing column(s) {missing}")
+                return ServingTrace(*(z[c] for c in _COLUMNS))
+
+
+def load_trace_or_exit(path: str) -> ServingTrace:
+    """CLI loader shared by the examples: exit code 2 on unknown or
+    incompatible trace paths — the same contract as benchmarks/run.py's
+    unknown ``--only`` sections."""
+    import sys
+
+    try:
+        return ServingTrace.load(path)
+    except (FileNotFoundError, TraceFormatError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+class TraceRecorder:
+    """Accumulates a timestamped event stream (DESIGN.md §8.2).
+
+    Live events are stamped with a monotonic clock relative to the first
+    recorded event; ``extend_from_log`` bulk-appends a pre-built EventLog
+    with synthetic (or caller-supplied) timestamps.
+    """
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self._t0: float | None = None
+        self._kind: list[int] = []
+        self._src: list[int] = []
+        self._dst: list[int] = []
+        self._w: list[float] = []
+        self._t: list[float] = []
+
+    def __len__(self) -> int:
+        return len(self._kind)
+
+    def _stamp(self) -> float:
+        now = self._clock()
+        if self._t0 is None:
+            self._t0 = now
+        # never step backwards: mixing live stamps with a synthetic
+        # ``extend_from_log`` ramp must keep the trace monotone
+        return max(now - self._t0, self._t[-1] if self._t else 0.0)
+
+    def _push(self, kind: int, src: int, dst: int, w: float) -> None:
+        self._kind.append(kind)
+        self._src.append(int(src))
+        self._dst.append(int(dst))
+        self._w.append(float(w))
+        self._t.append(self._stamp())
+
+    def add(self, u: int, v: int, w: float) -> None:
+        self._push(ev.ADD, u, v, w)
+
+    def delete(self, u: int, v: int) -> None:
+        self._push(ev.DEL, u, v, 0.0)
+
+    def query(self, source: int = -1) -> None:
+        self._push(ev.QUERY, source, -1, 0.0)
+
+    def extend_from_log(self, log: ev.EventLog,
+                        t: np.ndarray | None = None,
+                        events_per_s: float = 1e6) -> None:
+        """Append a whole EventLog; timestamps default to a uniform ramp
+        continuing from the last recorded stamp."""
+        base = self._t[-1] if self._t else 0.0
+        if t is None:
+            t = base + (np.arange(1, len(log) + 1, dtype=np.float64)
+                        / float(events_per_s))
+        if self._t0 is None:
+            self._t0 = self._clock()
+        self._kind.extend(int(k) for k in log.kind)
+        self._src.extend(int(s) for s in log.src)
+        self._dst.extend(int(d) for d in log.dst)
+        self._w.extend(float(x) for x in log.w)
+        self._t.extend(float(x) for x in t)
+
+    def trace(self) -> ServingTrace:
+        return ServingTrace(np.asarray(self._kind, np.uint8),
+                            np.asarray(self._src, np.int64),
+                            np.asarray(self._dst, np.int64),
+                            np.asarray(self._w, np.float32),
+                            np.asarray(self._t, np.float64))
