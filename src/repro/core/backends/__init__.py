@@ -16,9 +16,11 @@ this package populates the registries with the three stock backends:
 sharded layout arrays, per-partition wave plugged into the shard_map
 epochs).
 """
-from repro.core.backends.base import (BACKENDS, SHARDED_BACKENDS,
-                                      RelaxBackend, ShardedBackend,
-                                      make_backend, make_sharded_backend,
+from repro.core.backends.base import (AUTO_BACKEND, BACKENDS,
+                                      ELL_BLOWUP_RATIO, SHARDED_BACKENDS,
+                                      WAVE_SCHEDULES, RelaxBackend,
+                                      ShardedBackend, make_backend,
+                                      make_sharded_backend,
                                       validate_backend_config)
 from repro.core.backends.segment import SegmentBackend, shard_segment_wave
 from repro.core.backends.ellpack import (EllPlanner, EllState, EllpackBackend,
@@ -30,6 +32,7 @@ from repro.core.backends.sliced import (SlicedBackend, SlicedEllPlanner,
 RELAX_BACKENDS = tuple(sorted(BACKENDS))
 
 __all__ = [
+    "AUTO_BACKEND", "ELL_BLOWUP_RATIO", "WAVE_SCHEDULES",
     "BACKENDS", "SHARDED_BACKENDS", "RELAX_BACKENDS",
     "RelaxBackend", "ShardedBackend",
     "make_backend", "make_sharded_backend", "validate_backend_config",

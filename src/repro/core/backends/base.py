@@ -59,9 +59,20 @@ def register_sharded(cls: type["ShardedBackend"]) -> type["ShardedBackend"]:
 # that used to surface as a confusing failure deep inside layout init.
 # ``ell_use_kernel`` is the one genuinely shared knob: both ELL-layout
 # backends (ellpack, sliced) consume it.
-_SLICED_KNOBS = ("sliced_slice_rows", "sliced_hub_k", "sliced_init_k")
+_SLICED_KNOBS = ("sliced_slice_rows", "sliced_hub_k", "sliced_init_k",
+                 "sliced_fused")
 _ELLPACK_KNOBS = ("ell_block_rows", "ell_init_k")
 _ELL_SHARED_KNOBS = ("ell_use_kernel",)
+
+# ``relax_backend="auto"`` (single-device engines only): start on the dense
+# ELL layout and fall back to the sliced/hybrid layout when a rebuild's
+# ``K*N`` cell allocation blows past ``ELL_BLOWUP_RATIO`` times the live
+# edge count — the power-law-hub pathology (DESIGN.md §6).  Both layouts'
+# knobs are therefore legitimate under "auto".
+AUTO_BACKEND = "auto"
+ELL_BLOWUP_RATIO = 16
+
+WAVE_SCHEDULES = ("rounds", "buckets")
 
 
 def validate_backend_config(cfg: Any) -> None:
@@ -71,15 +82,29 @@ def validate_backend_config(cfg: Any) -> None:
     silently ignoring a knob the user believes they tuned).  Shared by
     ``EngineConfig`` and ``ShardedEngineConfig`` (__post_init__)."""
     name = getattr(cfg, "relax_backend", "segment")
-    if name not in BACKENDS:
+    if name not in BACKENDS and name != AUTO_BACKEND:
         raise ValueError(
             f"unknown relax_backend {name!r}; valid backends: "
-            f"{sorted(BACKENDS)}")
+            f"{sorted(BACKENDS) + [AUTO_BACKEND]}")
     defaults = {f.name: f.default for f in dataclasses.fields(cfg)}
+    schedule = getattr(cfg, "wave_schedule", "rounds")
+    if schedule not in WAVE_SCHEDULES:
+        raise ValueError(
+            f"unknown wave_schedule {schedule!r}; valid schedules: "
+            f"{list(WAVE_SCHEDULES)}")
+    width = getattr(cfg, "bucket_width", 1.0)
+    if not width > 0:   # also rejects NaN
+        raise ValueError(
+            f"bucket_width must be > 0 (inf = one bucket); got {width!r}")
+    if (schedule == "rounds" and "bucket_width" in defaults
+            and width != defaults["bucket_width"]):
+        raise ValueError(
+            f"bucket_width={width!r} configures the buckets schedule; "
+            f"remove it or select wave_schedule='buckets'")
     misapplied: list[tuple[tuple[str, ...], str]] = []
-    if name != "sliced":
+    if name not in ("sliced", AUTO_BACKEND):
         misapplied.append((_SLICED_KNOBS, "sliced"))
-    if name != "ellpack":
+    if name not in ("ellpack", AUTO_BACKEND):
         misapplied.append((_ELLPACK_KNOBS, "dense-ELL"))
     if name == "segment":
         misapplied.append((_ELL_SHARED_KNOBS, "ELL-layout"))
@@ -160,6 +185,27 @@ class RelaxBackend:
         """Batched ``delete``: seeds are per-lane ([S, N] — whether a
         deleted edge is a tree edge depends on each lane's parent forest)."""
         return jax.vmap(self.delete, in_axes=(0, None, 0))(sssp, edges, seed)
+
+    # --- bucketed drains (wave_schedule="buckets", DESIGN.md §9)
+    # ``drain`` settles the engine's deferred PendingState bucket-by-bucket
+    # (core/buckets.py run_drain discipline): one cond-gated recompute pull
+    # into the accumulated invalidated set, then threshold-paced push waves.
+    # Same candidate sets + tie rule as ``relax``/``delete``, so the drained
+    # (dist, parent) — and the wave sequence itself — is bit-identical
+    # across backends.
+    def drain(self, sssp: "SSSPState", edges: "EdgePool", pend: Any,
+              *, bucket_width: float
+              ) -> tuple["SSSPState", Any, "RelaxStats"]:
+        raise NotImplementedError
+
+    def drain_batched(self, sssp: "SSSPState", edges: "EdgePool", pend: Any,
+                      *, bucket_width: float
+                      ) -> tuple["SSSPState", Any, "RelaxStats"]:
+        """Batched [S, N] drain (generic unjitted-vmap fallback; built-ins
+        override with a module-level jitted entry, as for relax_batched)."""
+        return jax.vmap(
+            lambda s, pd: self.drain(s, edges, pd, bucket_width=bucket_width)
+        )(sssp, pend)
 
     # --- checkpoint participation / diagnostics
     def restore(self, alloc: "SlotAllocator") -> None:

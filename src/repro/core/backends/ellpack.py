@@ -38,15 +38,18 @@ sharded engine vmaps the wave), with the block arrays captured unbatched.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import buckets
 from repro.core import delete as del_mod
 from repro.core import ingest
-from repro.core.backends.base import (RelaxBackend, ShardedBackend, register,
+from repro.core.backends.base import (ELL_BLOWUP_RATIO, RelaxBackend,
+                                      ShardedBackend, register,
                                       register_sharded, rank_within_rows)
 from repro.core.relax import RelaxStats
 from repro.core.state import INF, NO_PARENT, SSSPState
@@ -167,6 +170,7 @@ class EllPlanner:
         self.k = max(1, init_k)
         self.fill = np.zeros(self.rows, np.int32)
         self.rebuilds = 0
+        self._warned_blowup = False
 
     def empty_state(self) -> EllState:
         idx, ww, fill = self.empty_host()
@@ -214,6 +218,18 @@ class EllPlanner:
         """Numpy half of ``rebuild`` — the sharded coordinator concatenates
         these blocks partition-major before one sharded transfer."""
         self.k = self.required_k(dst)
+        cells, live = self.rows * self.k, len(dst)
+        if (live and cells > ELL_BLOWUP_RATIO * live
+                and not self._warned_blowup):
+            # The power-law-hub pathology (DESIGN.md §6): a few hub rows set
+            # the global K and the dense block is mostly +inf padding.
+            warnings.warn(
+                f"dense-ELL rebuild allocates {cells} cells (K={self.k} x "
+                f"{self.rows} rows) for {live} live edges — more than "
+                f"{ELL_BLOWUP_RATIO}x blowup; the hub-aware "
+                f"relax_backend='sliced' layout (or relax_backend='auto') "
+                f"avoids this", RuntimeWarning, stacklevel=3)
+            self._warned_blowup = True
         idx, ww, fill = csr_mod.ell_from_coo(
             self.n, src, dst, w, k=self.k, n_rows=self.rows, row0=self.row0)
         self.fill = fill
@@ -356,6 +372,47 @@ def ell_invalidate_and_recompute(
     )
 
 
+@partial(jax.jit, static_argnames=("num_vertices", "bucket_width",
+                                   "use_kernel", "interpret"))
+def ell_drain(sssp, nbr_idx, nbr_w, pend, *, num_vertices: int,
+              bucket_width: float, use_kernel: bool = False,
+              interpret: bool = True):
+    """Bucketed drain on the ELL block (DESIGN.md §9): the pull is the same
+    one-unmasked-wave-then-``improved &= aff`` pattern as the deletion epoch,
+    so the drain's improved sets — hence its wave sequence and stats — stay
+    bit-identical to the segment drain's."""
+
+    def wave(dist, parent, active):
+        return relax_wave(dist, parent, nbr_idx, nbr_w, frontier=active,
+                          use_kernel=use_kernel, interpret=interpret)
+
+    def pull_wave(dist, parent, aff):
+        dist_p, parent_p, improved = relax_wave(
+            dist, parent, nbr_idx, nbr_w,
+            use_kernel=use_kernel, interpret=interpret)
+        improved = improved & aff
+        return (jnp.where(improved, dist_p, dist),
+                jnp.where(improved, parent_p, parent), improved)
+
+    dist, parent, stats = buckets.run_drain(
+        sssp.dist, sssp.parent, pend, bucket_width=bucket_width,
+        wave=wave, pull_wave=pull_wave)
+    return (SSSPState(dist=dist, parent=parent, source=sssp.source),
+            buckets.empty_pending(num_vertices), stats)
+
+
+@partial(jax.jit, static_argnames=("num_vertices", "bucket_width",
+                                   "use_kernel", "interpret"))
+def ell_drain_batched(sssp, nbr_idx, nbr_w, pend, *, num_vertices: int,
+                      bucket_width: float, use_kernel: bool = False,
+                      interpret: bool = True):
+    return jax.vmap(
+        lambda s, pd: ell_drain(
+            s, nbr_idx, nbr_w, pd, num_vertices=num_vertices,
+            bucket_width=bucket_width, use_kernel=use_kernel,
+            interpret=interpret))(sssp, pend)
+
+
 # ----------------------------------------------------------------- backend --
 @register
 class EllpackBackend(RelaxBackend):
@@ -371,6 +428,7 @@ class EllpackBackend(RelaxBackend):
             num_vertices, block_rows=cfg.ell_block_rows,
             init_k=cfg.ell_init_k)
         self.state = self.planner.empty_state()
+        self.blowup = False   # set by rebuilds; read by the "auto" fallback
 
     def apply_adds(self, plan, alloc):
         """Incremental ELL maintenance for one ADD batch (DESIGN.md §2.3).
@@ -384,7 +442,11 @@ class EllpackBackend(RelaxBackend):
         rows = plan.dst[fresh].astype(np.int64)
         kpos = self.planner.plan_appends(rows)
         if kpos is None:
-            self.state = self.planner.rebuild(*alloc.active_coo())
+            src, dst, w = alloc.active_coo()
+            self.state = self.planner.rebuild(src, dst, w)
+            # host-visible blowup flag for relax_backend="auto" fallback
+            self.blowup = (self.planner.rows * self.planner.k
+                           > ELL_BLOWUP_RATIO * max(len(dst), 1))
             return
         if len(rows):
             rows_p, kpos_p, src_p, w_p = ingest.pad_pow2(
@@ -426,6 +488,18 @@ class EllpackBackend(RelaxBackend):
         return ell_delete_batched(
             sssp, self.state.nbr_idx, self.state.nbr_w, seed,
             num_vertices=self.n, use_doubling=self.cfg.use_doubling,
+            use_kernel=self.use_kernel, interpret=self.interpret)
+
+    def drain(self, sssp, edges, pend, *, bucket_width):
+        return ell_drain(
+            sssp, self.state.nbr_idx, self.state.nbr_w, pend,
+            num_vertices=self.n, bucket_width=bucket_width,
+            use_kernel=self.use_kernel, interpret=self.interpret)
+
+    def drain_batched(self, sssp, edges, pend, *, bucket_width):
+        return ell_drain_batched(
+            sssp, self.state.nbr_idx, self.state.nbr_w, pend,
+            num_vertices=self.n, bucket_width=bucket_width,
             use_kernel=self.use_kernel, interpret=self.interpret)
 
     def restore(self, alloc):

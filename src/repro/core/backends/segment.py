@@ -96,6 +96,16 @@ class SegmentBackend(RelaxBackend):
         return segment_delete_batched(sssp, edges, seed, num_vertices=self.n,
                                       use_doubling=self.cfg.use_doubling)
 
+    def drain(self, sssp, edges, pend, *, bucket_width):
+        from repro.core import buckets
+        return buckets.segment_drain(sssp, edges, pend, num_vertices=self.n,
+                                     bucket_width=bucket_width)
+
+    def drain_batched(self, sssp, edges, pend, *, bucket_width):
+        from repro.core import buckets
+        return buckets.segment_drain_batched(
+            sssp, edges, pend, num_vertices=self.n, bucket_width=bucket_width)
+
 
 @register_sharded
 class ShardedSegment(ShardedBackend):

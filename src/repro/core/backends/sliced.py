@@ -195,23 +195,11 @@ def sliced_gather_min(offers: jax.Array, flat_idx: jax.Array,
     == 0, so a merged run is split into a multiple-of-256-rows main block
     plus a sub-256-row remainder block.
     """
+    from repro.kernels.relax.fused import slice_run_groups
     from repro.kernels.relax.ref import ellpack_relax_ref
     from repro.kernels.relax.relax import ellpack_relax
 
-    per_blk = max(1, 256 // slice_rows)
-    runs: list[list[int]] = []
-    for k in widths:
-        if runs and runs[-1][0] == k:
-            runs[-1][1] += 1
-        else:
-            runs.append([k, 1])
-    groups: list[tuple[int, int]] = []
-    for k, cnt in runs:
-        main = (cnt // per_blk) * per_blk
-        if main:
-            groups.append((k, main))
-        if cnt - main:
-            groups.append((k, cnt - main))
+    groups = slice_run_groups(widths, slice_rows)
     bests, args_ = [], []
     off = 0
     for k, cnt in groups:                  # static unroll: one block per run
@@ -256,22 +244,39 @@ def combine_lanes(best: jax.Array, arg: jax.Array, obest: jax.Array,
 
 
 @partial(jax.jit, static_argnames=("widths", "slice_rows", "num_vertices",
-                                   "use_kernel", "interpret"))
+                                   "use_kernel", "interpret", "use_fused"))
 def sliced_relax_wave(dist: jax.Array, parent: jax.Array,
                       st: SlicedEllState, *, widths: tuple[int, ...],
                       slice_rows: int, num_vertices: int,
                       frontier: jax.Array | None = None,
-                      use_kernel: bool = False, interpret: bool = True):
+                      use_kernel: bool = False, interpret: bool = True,
+                      use_fused: bool = False):
     """One hybrid relaxation wave: per-slice ELL gather+row-min min-combined
-    with a segment-min over the overflow COO lane."""
+    with a segment-min over the overflow COO lane.
+
+    ``use_fused`` routes the whole wave — frontier masking, ELL lane,
+    overflow lane, lane combine — through the single fused Pallas kernel
+    (kernels/relax/fused.py, DESIGN.md §9.4) instead of the three-dispatch
+    composition below; both paths are bit-identical by construction."""
     n = dist.shape[0]
-    offers = dist if frontier is None else jnp.where(frontier, dist, INF)
-    best, arg = sliced_gather_min(
-        offers, st.flat_idx, st.flat_w, widths=widths,
-        slice_rows=slice_rows, use_kernel=use_kernel, interpret=interpret)
-    best, arg = best[:n], arg[:n]
-    obest, oarg = overflow_min(offers, st.osrc, st.odst, st.ow, num_vertices)
-    comb, new_parent = combine_lanes(best, arg, obest, oarg)
+    if use_fused:
+        from repro.kernels.relax.fused import fused_sliced_relax
+        act = (jnp.ones(dist.shape, jnp.bool_) if frontier is None
+               else frontier)
+        comb, new_parent = fused_sliced_relax(
+            dist, act, st.flat_idx, st.flat_w, st.osrc, st.odst, st.ow,
+            widths=widths, slice_rows=slice_rows, interpret=interpret)
+        comb, new_parent = comb[:n], new_parent[:n]
+    else:
+        offers = dist if frontier is None else jnp.where(frontier, dist, INF)
+        best, arg = sliced_gather_min(
+            offers, st.flat_idx, st.flat_w, widths=widths,
+            slice_rows=slice_rows, use_kernel=use_kernel,
+            interpret=interpret)
+        best, arg = best[:n], arg[:n]
+        obest, oarg = overflow_min(offers, st.osrc, st.odst, st.ow,
+                                   num_vertices)
+        comb, new_parent = combine_lanes(best, arg, obest, oarg)
     improved = comb < dist
     return (jnp.where(improved, comb, dist),
             jnp.where(improved, new_parent, parent),
@@ -280,7 +285,8 @@ def sliced_relax_wave(dist: jax.Array, parent: jax.Array,
 
 # ------------------------------------------------------------------ epochs --
 @partial(jax.jit, static_argnames=("widths", "slice_rows", "num_vertices",
-                                   "max_rounds", "use_kernel", "interpret"))
+                                   "max_rounds", "use_kernel", "interpret",
+                                   "use_fused"))
 def sliced_relax_until_converged(
     sssp: SSSPState,
     st: SlicedEllState,
@@ -292,6 +298,7 @@ def sliced_relax_until_converged(
     max_rounds: int = 0,
     use_kernel: bool = False,
     interpret: bool = True,
+    use_fused: bool = False,
 ) -> tuple[SSSPState, RelaxStats]:
     """Sliced rendering of relax.relax_until_converged: frontier-masked
     hybrid waves to fixpoint.  Same candidate sets, same tie-break =>
@@ -309,7 +316,8 @@ def sliced_relax_until_converged(
         dist, parent, improved = sliced_relax_wave(
             dist, parent, st, widths=widths, slice_rows=slice_rows,
             num_vertices=num_vertices, frontier=frontier,
-            use_kernel=use_kernel, interpret=interpret)
+            use_kernel=use_kernel, interpret=interpret,
+            use_fused=use_fused)
         return (dist, parent, improved, rounds + 1,
                 msgs + jnp.sum(improved.astype(jnp.int32)))
 
@@ -324,7 +332,8 @@ def sliced_relax_until_converged(
 
 
 @partial(jax.jit, static_argnames=("widths", "slice_rows", "num_vertices",
-                                   "use_doubling", "use_kernel", "interpret"))
+                                   "use_doubling", "use_kernel",
+                                   "interpret", "use_fused"))
 def sliced_invalidate_and_recompute(
     sssp: SSSPState,
     st: SlicedEllState,
@@ -336,6 +345,7 @@ def sliced_invalidate_and_recompute(
     use_doubling: bool = True,
     use_kernel: bool = False,
     interpret: bool = True,
+    use_fused: bool = False,
 ) -> tuple[SSSPState, del_mod.DeleteStats]:
     """Deletion epoch on the hybrid layout — structurally identical to
     the dense-ELL deletion epoch (same marking, same bulk-pull-as-one-
@@ -353,7 +363,7 @@ def sliced_invalidate_and_recompute(
     dist_p, parent_p, improved = sliced_relax_wave(
         dist, parent, st, widths=widths, slice_rows=slice_rows,
         num_vertices=num_vertices, use_kernel=use_kernel,
-        interpret=interpret)
+        interpret=interpret, use_fused=use_fused)
     improved = improved & aff
     dist = jnp.where(improved, dist_p, dist)
     parent = jnp.where(improved, parent_p, parent)
@@ -362,7 +372,7 @@ def sliced_invalidate_and_recompute(
     state2, stats = sliced_relax_until_converged(
         state1, st, improved, widths=widths, slice_rows=slice_rows,
         num_vertices=num_vertices, use_kernel=use_kernel,
-        interpret=interpret)
+        interpret=interpret, use_fused=use_fused)
     zero = jnp.int32(0)
     return state2, del_mod.DeleteStats(
         invalidation_rounds=jnp.where(any_seed, inv_rounds, zero),
@@ -375,30 +385,83 @@ def sliced_invalidate_and_recompute(
 
 
 @partial(jax.jit, static_argnames=("widths", "slice_rows", "num_vertices",
-                                   "use_kernel", "interpret"))
+                                   "use_kernel", "interpret",
+                                   "use_fused"))
 def sliced_relax_batched(sssp, st, frontier, *, widths, slice_rows,
-                         num_vertices, use_kernel=False, interpret=True):
+                         num_vertices, use_kernel=False, interpret=True,
+                         use_fused=False):
     """Batched multi-source rendering (DESIGN.md §8): jit(vmap(epoch)) over
     the [S, N] tree stack, the shared hybrid layout captured unbatched."""
     return jax.vmap(
         lambda s: sliced_relax_until_converged(
             s, st, frontier, widths=widths, slice_rows=slice_rows,
             num_vertices=num_vertices, use_kernel=use_kernel,
-            interpret=interpret))(sssp)
+            interpret=interpret, use_fused=use_fused))(sssp)
 
 
 @partial(jax.jit, static_argnames=("widths", "slice_rows", "num_vertices",
                                    "use_doubling", "use_kernel",
-                                   "interpret"))
+                                   "interpret", "use_fused"))
 def sliced_delete_batched(sssp, st, seed, *, widths, slice_rows,
                           num_vertices, use_doubling=True, use_kernel=False,
-                          interpret=True):
+                          interpret=True, use_fused=False):
     """Batched deletion epoch: per-lane [S, N] seeds over the shared layout."""
     return jax.vmap(
         lambda s, sd: sliced_invalidate_and_recompute(
             s, st, sd, widths=widths, slice_rows=slice_rows,
             num_vertices=num_vertices, use_doubling=use_doubling,
-            use_kernel=use_kernel, interpret=interpret))(sssp, seed)
+            use_kernel=use_kernel, interpret=interpret,
+            use_fused=use_fused))(sssp, seed)
+
+
+@partial(jax.jit, static_argnames=("widths", "slice_rows", "num_vertices",
+                                   "bucket_width", "use_kernel",
+                                   "interpret", "use_fused"))
+def sliced_drain(sssp, st, pend, *, widths, slice_rows, num_vertices: int,
+                 bucket_width: float, use_kernel: bool = False,
+                 interpret: bool = True, use_fused: bool = False):
+    """Bucketed drain on the hybrid layout (DESIGN.md §9) — same pull
+    pattern as the deletion epoch (one unmasked hybrid wave, improvements
+    applied to affected rows only), so the drain's wave sequence and stats
+    stay bit-identical to the segment and dense-ELL drains."""
+    from repro.core import buckets
+
+    def wave(dist, parent, active):
+        return sliced_relax_wave(
+            dist, parent, st, widths=widths, slice_rows=slice_rows,
+            num_vertices=num_vertices, frontier=active,
+            use_kernel=use_kernel, interpret=interpret,
+            use_fused=use_fused)
+
+    def pull_wave(dist, parent, aff):
+        dist_p, parent_p, improved = sliced_relax_wave(
+            dist, parent, st, widths=widths, slice_rows=slice_rows,
+            num_vertices=num_vertices, use_kernel=use_kernel,
+            interpret=interpret, use_fused=use_fused)
+        improved = improved & aff
+        return (jnp.where(improved, dist_p, dist),
+                jnp.where(improved, parent_p, parent), improved)
+
+    dist, parent, stats = buckets.run_drain(
+        sssp.dist, sssp.parent, pend, bucket_width=bucket_width,
+        wave=wave, pull_wave=pull_wave)
+    return (SSSPState(dist=dist, parent=parent, source=sssp.source),
+            buckets.empty_pending(num_vertices), stats)
+
+
+@partial(jax.jit, static_argnames=("widths", "slice_rows", "num_vertices",
+                                   "bucket_width", "use_kernel",
+                                   "interpret", "use_fused"))
+def sliced_drain_batched(sssp, st, pend, *, widths, slice_rows,
+                         num_vertices: int, bucket_width: float,
+                         use_kernel: bool = False, interpret: bool = True,
+                         use_fused: bool = False):
+    return jax.vmap(
+        lambda s, pd: sliced_drain(
+            s, st, pd, widths=widths, slice_rows=slice_rows,
+            num_vertices=num_vertices, bucket_width=bucket_width,
+            use_kernel=use_kernel, interpret=interpret,
+            use_fused=use_fused))(sssp, pend)
 
 
 # ------------------------------------------------------------ host planner --
@@ -579,6 +642,7 @@ class SlicedBackend(RelaxBackend):
     def __init__(self, cfg, num_vertices, *, use_kernel=False, interpret=True):
         super().__init__(cfg, num_vertices, use_kernel=use_kernel,
                          interpret=interpret)
+        self.use_fused = bool(getattr(cfg, "sliced_fused", False))
         self.planner = self._mk_planner()
         self.state = self.planner.empty_state()
 
@@ -630,28 +694,42 @@ class SlicedBackend(RelaxBackend):
             sssp, self.state, frontier,
             widths=tuple(self.planner.widths), slice_rows=self.planner.sr,
             num_vertices=self.n, use_kernel=self.use_kernel,
-            interpret=self.interpret)
+            interpret=self.interpret, use_fused=self.use_fused)
 
     def delete(self, sssp, edges, seed):
         return sliced_invalidate_and_recompute(
             sssp, self.state, seed,
             widths=tuple(self.planner.widths), slice_rows=self.planner.sr,
             num_vertices=self.n, use_doubling=self.cfg.use_doubling,
-            use_kernel=self.use_kernel, interpret=self.interpret)
+            use_kernel=self.use_kernel, interpret=self.interpret, use_fused=self.use_fused)
 
     def relax_batched(self, sssp, edges, frontier):
         return sliced_relax_batched(
             sssp, self.state, frontier,
             widths=tuple(self.planner.widths), slice_rows=self.planner.sr,
             num_vertices=self.n, use_kernel=self.use_kernel,
-            interpret=self.interpret)
+            interpret=self.interpret, use_fused=self.use_fused)
 
     def delete_batched(self, sssp, edges, seed):
         return sliced_delete_batched(
             sssp, self.state, seed,
             widths=tuple(self.planner.widths), slice_rows=self.planner.sr,
             num_vertices=self.n, use_doubling=self.cfg.use_doubling,
-            use_kernel=self.use_kernel, interpret=self.interpret)
+            use_kernel=self.use_kernel, interpret=self.interpret, use_fused=self.use_fused)
+
+    def drain(self, sssp, edges, pend, *, bucket_width):
+        return sliced_drain(
+            sssp, self.state, pend,
+            widths=tuple(self.planner.widths), slice_rows=self.planner.sr,
+            num_vertices=self.n, bucket_width=bucket_width,
+            use_kernel=self.use_kernel, interpret=self.interpret, use_fused=self.use_fused)
+
+    def drain_batched(self, sssp, edges, pend, *, bucket_width):
+        return sliced_drain_batched(
+            sssp, self.state, pend,
+            widths=tuple(self.planner.widths), slice_rows=self.planner.sr,
+            num_vertices=self.n, bucket_width=bucket_width,
+            use_kernel=self.use_kernel, interpret=self.interpret, use_fused=self.use_fused)
 
     def restore(self, alloc):
         self.planner = self._mk_planner()

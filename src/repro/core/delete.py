@@ -42,12 +42,19 @@ class DeleteStats(NamedTuple):
     recompute_messages: jax.Array
 
 
-def mark_subtree_flood(parent: jax.Array, seed: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Paper-faithful successor flood. ``seed``: bool[N]. Returns (aff, rounds)."""
+def mark_subtree_flood(parent: jax.Array, seed: jax.Array,
+                       gate: jax.Array | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Paper-faithful successor flood. ``seed``: bool[N]. Returns (aff, rounds).
+
+    ``gate`` (device bool) short-circuits the loop when False — the bucketed
+    lazy-deletion path passes ``any(seed)`` so the frequent non-tree deletion
+    costs zero flood iterations instead of a full no-op sweep.  ``None``
+    preserves the original loop byte-for-byte for the eager epochs."""
 
     def cond(carry):
         aff, grew, _ = carry
-        return grew
+        return grew if gate is None else grew & gate
 
     def body(carry):
         aff, _, rounds = carry
@@ -60,13 +67,20 @@ def mark_subtree_flood(parent: jax.Array, seed: jax.Array) -> tuple[jax.Array, j
     return aff, rounds
 
 
-def mark_subtree_doubling(parent: jax.Array, seed: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Pointer-doubling descendant marking: O(log depth) rounds (beyond-paper)."""
+def mark_subtree_doubling(parent: jax.Array, seed: jax.Array,
+                          gate: jax.Array | None = None
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Pointer-doubling descendant marking: O(log depth) rounds (beyond-paper).
+
+    ``gate`` as in ``mark_subtree_flood``: an early-exit predicate for the
+    lazy path.  Note the loop must otherwise run until the pointers are fully
+    collapsed even when ``aff`` stops growing mid-way (gap distributions can
+    stall a round and resume), so the gate is the only extra exit."""
     n = parent.shape[0]
 
     def cond(carry):
         _, _, grew, _ = carry
-        return grew
+        return grew if gate is None else grew & gate
 
     def body(carry):
         aff, ptr, _, rounds = carry
@@ -82,6 +96,25 @@ def mark_subtree_doubling(parent: jax.Array, seed: jax.Array) -> tuple[jax.Array
         cond, body, (seed, parent, jnp.bool_(True), jnp.int32(0))
     )
     return aff, rounds
+
+
+def pull_once(dist: jax.Array, parent: jax.Array, edges: EdgePool,
+              aff: jax.Array, num_vertices: int
+              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One bulk DistanceQuery wave (Listing 9): affected vertices pull their
+    best offer from valid (finite-dist) in-neighbours.  Returns
+    (dist', parent', improved) — the improved mask is the push frontier the
+    recomputation (or the bucketed drain) continues from."""
+    live = edges.active & aff[edges.dst] & jnp.isfinite(dist[edges.src])
+    cand = jnp.where(live, dist[edges.src] + edges.w, INF)
+    best = jax.ops.segment_min(cand, edges.dst, num_segments=num_vertices)
+    improved = best < dist
+    hit = live & (cand == best[edges.dst]) & improved[edges.dst]
+    cand_src = jnp.where(hit, edges.src, jnp.int32(2**31 - 1))
+    new_parent = jax.ops.segment_min(cand_src, edges.dst,
+                                     num_segments=num_vertices)
+    return (jnp.where(improved, best, dist),
+            jnp.where(improved, new_parent, parent), improved)
 
 
 @partial(jax.jit, static_argnames=("num_vertices", "use_doubling"))
@@ -118,15 +151,7 @@ def invalidate_and_recompute(
     # affected vertices only.  Edges out of affected vertices are excluded for
     # this wave (their dist is inf -> they offer nothing), matching Listing 9's
     # "if connected, reply with best offer".
-    live = edges.active & aff[edges.dst] & jnp.isfinite(dist[edges.src])
-    cand = jnp.where(live, dist[edges.src] + edges.w, INF)
-    best = jax.ops.segment_min(cand, edges.dst, num_segments=num_vertices)
-    improved = best < dist
-    hit = live & (cand == best[edges.dst]) & improved[edges.dst]
-    cand_src = jnp.where(hit, edges.src, jnp.int32(2**31 - 1))
-    new_parent = jax.ops.segment_min(cand_src, edges.dst, num_segments=num_vertices)
-    dist = jnp.where(improved, best, dist)
-    parent = jnp.where(improved, new_parent, parent)
+    dist, parent, improved = pull_once(dist, parent, edges, aff, num_vertices)
 
     # Then ordinary monotone relaxation from the re-seeded vertices drains the
     # epoch (responses propagate down the rebuilt subtree).

@@ -117,6 +117,12 @@ class ShardedEngineConfig:
     sliced_slice_rows: int = 256
     sliced_hub_k: int = 32
     sliced_init_k: int = 2
+    # wave schedule (DESIGN.md §9): "rounds" settles every epoch to
+    # fixpoint; "buckets" defers settling into delta-stepping drains run at
+    # query/checkpoint — the bucket threshold is a replicated scalar, so the
+    # sharded drain reuses the existing allgather/delta exchanges unchanged
+    wave_schedule: str = "rounds"
+    bucket_width: float = 1.0
     # batched multi-source serving (DESIGN.md §8); None = single-source
     sources: tuple[int, ...] | None = None
 
@@ -201,19 +207,33 @@ class ShardedSSSPDelEngine(StreamEngineBase):
             np.zeros(self.P * self.epp, np.float32),
             np.zeros(self.P * self.epp, np.bool_))
         self._base_key = (mesh, n_pad, cfg.edges_per_part, cfg.exchange,
-                          cfg.delta_cap, cfg.use_doubling, self._source_pad)
+                          cfg.delta_cap, cfg.use_doubling, self._source_pad,
+                          cfg.wave_schedule, cfg.bucket_width)
+        # bucketed schedule: sharded pending masks (bool per owned vertex,
+        # [S, N] stacked in serving mode), reset to the cached zeros after
+        # every drain
+        self.bucketed = cfg.wave_schedule == "buckets"
+        if self.bucketed:
+            shape = ((self.P * self.npp,) if self.sources is None
+                     else (len(self.sources), self.P * self.npp))
+            sh = (self.ds.vertex_sharding() if self.sources is None
+                  else self.ds.vertex_sharding_ms())
+            self._zero_pend = jax.device_put(np.zeros(shape, np.bool_), sh)
+            self._push = self._pull = self._zero_pend
 
     def _epoch_pair(self):
-        """The (add_epoch, del_epoch) pair for the CURRENT backend geometry
-        — looked up per batch because a coupled rebuild may change the
-        backend's static key (e.g. the sliced widths tuple)."""
+        """The (add_epoch, del_epoch, drain_epoch) triple for the CURRENT
+        backend geometry — looked up per batch because a coupled rebuild may
+        change the backend's static key (e.g. the sliced widths tuple).
+        ``drain_epoch`` is None under the rounds schedule."""
         key = self._base_key + self.bk.static_key()
         if key not in _EPOCH_CACHE:
             build = (_build_epochs if self.sources is None
                      else _build_epochs_ms)
             _EPOCH_CACHE[key] = build(
                 self.ds, self.epp, self.cfg.use_doubling, self._source_pad,
-                self.cfg.relax_backend, self.bk.static_key())
+                self.cfg.relax_backend, self.bk.static_key(),
+                self.cfg.wave_schedule, self.cfg.bucket_width)
         return _EPOCH_CACHE[key]
 
     # ------------------------------------------------------------------ adds
@@ -237,13 +257,22 @@ class ShardedSSSPDelEngine(StreamEngineBase):
         n_acc = len(gslot)
         gslot, bsrc, bdst, bw = ingest.pad_pow2(
             gslot.astype(np.int32), bsrc, bdst, bw)
-        add_epoch, _ = self._epoch_pair()
-        (self.dist, self.parent, self.esrc, self.edst, self.ew, self.eact,
-         self._dev_rounds, self._dev_messages) = add_epoch(
-            self.dist, self.parent, self.esrc, self.edst, self.ew, self.eact,
-            *self.bk.arrays(),
-            jnp.asarray(gslot), jnp.asarray(bsrc), jnp.asarray(bdst),
-            jnp.asarray(bw), self._dev_rounds, self._dev_messages)
+        add_epoch, _, _ = self._epoch_pair()
+        if self.bucketed:
+            # deferred settle (DESIGN.md §9): patch the pools, enqueue the
+            # inserted tails as push obligations, no relaxation
+            (self.esrc, self.edst, self.ew, self.eact,
+             self._push) = add_epoch(
+                self.dist, self.esrc, self.edst, self.ew, self.eact,
+                self._push, jnp.asarray(gslot), jnp.asarray(bsrc),
+                jnp.asarray(bdst), jnp.asarray(bw))
+        else:
+            (self.dist, self.parent, self.esrc, self.edst, self.ew,
+             self.eact, self._dev_rounds, self._dev_messages) = add_epoch(
+                self.dist, self.parent, self.esrc, self.edst, self.ew,
+                self.eact, *self.bk.arrays(),
+                jnp.asarray(gslot), jnp.asarray(bsrc), jnp.asarray(bdst),
+                jnp.asarray(bw), self._dev_rounds, self._dev_messages)
         self.n_adds += n_acc
         self.n_epochs += 1
 
@@ -267,29 +296,60 @@ class ShardedSSSPDelEngine(StreamEngineBase):
             n_del = len(gslot)
             gslot, psrc, pdst = ingest.pad_pow2(
                 gslot.astype(np.int32), psrc, pdst)
-            _, del_epoch = self._epoch_pair()
+            _, del_epoch, _ = self._epoch_pair()
             # the layout tombstone runs INSIDE the fused epoch (before the
             # recompute wave; the seed reads only the parent forest) — a
             # staged patch would cost one extra dispatch per deletion, and
             # deletions are per-event in the paper-faithful mode
-            out = del_epoch(
-                self.dist, self.parent, self.esrc, self.edst, self.ew,
-                self.eact, *self.bk.arrays(),
-                jnp.asarray(gslot), jnp.asarray(psrc),
-                jnp.asarray(pdst), self._dev_rounds, self._dev_messages)
-            self.dist, self.parent, self.eact = out[:3]
             n_mut = len(type(self.bk).del_mutated)
-            if n_mut:
-                self.bk.update_del_arrays(out[3:3 + n_mut])
-            self._dev_rounds, self._dev_messages = out[3 + n_mut:]
+            if self.bucketed:
+                # invalidation-only epoch: seed + mark + SetToInfinity +
+                # tombstone; the recompute pull and push waves are deferred
+                # into the pending masks (DESIGN.md §9)
+                out = del_epoch(
+                    self.dist, self.parent, self.eact, *self.bk.arrays(),
+                    self._push, self._pull, jnp.asarray(gslot),
+                    jnp.asarray(psrc), jnp.asarray(pdst),
+                    self._dev_rounds, self._dev_messages)
+                self.dist, self.parent, self.eact = out[:3]
+                if n_mut:
+                    self.bk.update_del_arrays(out[3:3 + n_mut])
+                (self._push, self._pull, self._dev_rounds,
+                 self._dev_messages) = out[3 + n_mut:]
+            else:
+                out = del_epoch(
+                    self.dist, self.parent, self.esrc, self.edst, self.ew,
+                    self.eact, *self.bk.arrays(),
+                    jnp.asarray(gslot), jnp.asarray(psrc),
+                    jnp.asarray(pdst), self._dev_rounds, self._dev_messages)
+                self.dist, self.parent, self.eact = out[:3]
+                if n_mut:
+                    self.bk.update_del_arrays(out[3:3 + n_mut])
+                self._dev_rounds, self._dev_messages = out[3 + n_mut:]
             self.n_dels += n_del
             self.n_epochs += 1
 
     # ----------------------------------------------------------------- query
+    def drain(self) -> None:
+        """Settle the bucketed schedule's pending work (no-op under the
+        rounds schedule; with nothing pending the epoch is one cheap
+        dispatch — the drain loop exits immediately, no host sync).  Same
+        contract as the single-device ``SSSPDelEngine.drain``."""
+        if not self.bucketed:
+            return
+        _, _, drain_epoch = self._epoch_pair()
+        (self.dist, self.parent, self._dev_rounds,
+         self._dev_messages) = drain_epoch(
+            self.dist, self.parent, self.esrc, self.edst, self.ew, self.eact,
+            *self.bk.arrays(), self._push, self._pull,
+            self._dev_rounds, self._dev_messages)
+        self._push = self._pull = self._zero_pend
+
     def _snapshot(self, lane: int | None) -> tuple[np.ndarray, np.ndarray]:
         """Sharded device->host readback plus the inverse relabeling, if
         any (latency is timed by the base query()); a routed lane query
         transfers only that source's padded [N] pair."""
+        self.drain()
         d, p = (self.dist, self.parent) if lane is None else \
             (self.dist[lane], self.parent[lane])
         dist = np.asarray(jax.device_get(d))
@@ -311,6 +371,7 @@ class ShardedSSSPDelEngine(StreamEngineBase):
         mirrors — no device readback for the pool) plus the padded
         dist/parent windows.  Backend layout state is rebuilt on restore,
         never serialized."""
+        self.drain()   # a checkpoint must capture a converged tree
         return {
             "src": np.concatenate([a.msrc for a in self.allocs]),
             "dst": np.concatenate([a.mdst for a in self.allocs]),
@@ -361,6 +422,9 @@ class ShardedSSSPDelEngine(StreamEngineBase):
             np.asarray(ckpt["parent"], np.int32), sh)
         self.bk.allocs = self.allocs
         self.bk.restore()
+        # checkpoints are taken post-drain, so nothing was pending
+        if self.bucketed:
+            self._push = self._pull = self._zero_pend
 
     # ------------------------------------------------------------ diagnostics
     def partition_fill(self) -> np.ndarray:
@@ -369,9 +433,13 @@ class ShardedSSSPDelEngine(StreamEngineBase):
 
 
 def _build_epochs(ds: DistributedSSSP, epp: int, use_doubling: bool,
-                  source_pad: int, backend: str, backend_static: tuple):
-    """Build the (add_epoch, del_epoch) jitted shard_map pair for one
-    backend geometry.
+                  source_pad: int, backend: str, backend_static: tuple,
+                  wave_schedule: str = "rounds", bucket_width: float = 1.0):
+    """Build the (add_epoch, del_epoch, drain_epoch) jitted shard_map triple
+    for one backend geometry.  Under the rounds schedule the epochs settle
+    in place and ``drain_epoch`` is None; under the bucketed schedule the
+    add/del epochs are the lazy (invalidation-only) variants and the drain
+    epoch settles the pending masks (DESIGN.md §9).
 
     Module-level on purpose: the closures capture only ``ds`` (mesh + config
     + specs, no device buffers), scalars, and the backend's *static* wave
@@ -489,15 +557,106 @@ def _build_epochs(ds: DistributedSSSP, epp: int, use_doubling: bool,
         return (dist, parent, eact, *(extras[i] for i in del_mutated),
                 racc + d_rounds, macc + d_msgs)
 
-    return add_epoch, del_epoch
+    if wave_schedule == "rounds":
+        return add_epoch, del_epoch, None
+
+    # ---------------------------------------- bucketed (lazy) epoch variants
+    @jax.jit
+    @partial(_shard_map, mesh=ds.mesh,
+             in_specs=(v, e, e, e, e, v, r, r, r, r),
+             out_specs=(e, e, e, e, v),
+             **_SHARD_MAP_KW)
+    def add_epoch_lazy(dist, esrc, edst, ew, eact, push,
+                       gslot, bsrc, bdst, bw):
+        """Bucketed ADD: patch the pools + enqueue the inserted tails as
+        push obligations (pruned to currently-reachable tails, the sharded
+        ``buckets.enqueue_push``) — no relaxation until the drain."""
+        my_p = jnp.int32(ds._flat_index())
+        row0 = my_p * npp
+        loc = local_slots(gslot, my_p)
+        esrc = masked_write(esrc, loc, bsrc)
+        edst = masked_write(edst, loc, bdst)
+        ew = masked_write(ew, loc, bw)
+        eact = masked_write(eact, loc, jnp.ones_like(gslot, jnp.bool_))
+        in_r = (bsrc >= row0) & (bsrc < row0 + npp)
+        fr = jnp.zeros((npp,), jnp.bool_).at[
+            jnp.clip(bsrc - row0, 0, npp - 1)].max(in_r)
+        push = push | (fr & jnp.isfinite(dist))
+        return esrc, edst, ew, eact, push
+
+    @jax.jit
+    @partial(_shard_map, mesh=ds.mesh,
+             in_specs=(v, v, e) + extra_specs + (v, v, r, r, r, r, r),
+             out_specs=(v, v, e) + (v,) * len(del_mutated) + (v, v, r, r),
+             **_SHARD_MAP_KW)
+    def del_epoch_lazy(dist, parent, eact, *rest):
+        """Bucketed DEL: seed + deactivate + tombstone + invalidate — the
+        immediate work the witness-invariant argument requires — with the
+        recompute deferred into (push, pull).  The sharded rendering of
+        ``buckets.lazy_delete``; stats mirror its DeleteStats exactly."""
+        extras = list(rest[:n_extra])
+        push, pull, gslot, psrc, pdst, racc, macc = rest[n_extra:]
+        my_p = jnp.int32(ds._flat_index())
+        row0 = my_p * npp
+        in_r = (pdst >= row0) & (pdst < row0 + npp)
+        lds = jnp.clip(pdst - row0, 0, npp - 1)
+        seed = jnp.zeros((npp,), jnp.bool_).at[lds].max(
+            in_r & (parent[lds] == psrc))
+        any_seed = jax.lax.psum(jnp.sum(seed.astype(jnp.int32)), ax) > 0
+        loc = local_slots(gslot, my_p)
+        eact = masked_write(eact, loc, jnp.zeros_like(gslot, jnp.bool_))
+        if del_patch is not None:
+            new_vals = del_patch(tuple(extras), psrc, pdst, my_p)
+            for i, val in zip(del_mutated, new_vals):
+                extras[i] = val
+        if use_doubling:
+            aff, inv_rounds = ds._invalidate_doubling(parent, seed,
+                                                      gate=any_seed)
+        elif exchange == "delta":
+            aff, inv_rounds = ds._invalidate_delta(parent, seed, row0,
+                                                   gate=any_seed)
+        else:
+            aff, inv_rounds = ds._invalidate_flood_dense(parent, seed,
+                                                         gate=any_seed)
+        local_ids = row0 + jnp.arange(npp, dtype=jnp.int32)
+        aff = aff & (local_ids != source_pad)
+        affected = jax.lax.psum(jnp.sum(aff.astype(jnp.int32)), ax)
+        dist = jnp.where(aff, INF, dist)
+        parent = jnp.where(aff, NO_PARENT, parent)
+        # invalidated vertices stop offering; they re-enter via the drain
+        push = push & jnp.isfinite(dist)
+        pull = pull | aff
+        d_rounds = jnp.where(any_seed, inv_rounds, jnp.int32(0))
+        return (dist, parent, eact, *(extras[i] for i in del_mutated),
+                push, pull, racc + d_rounds, macc + affected)
+
+    @jax.jit
+    @partial(_shard_map, mesh=ds.mesh,
+             in_specs=(v, v, e, e, e, e) + extra_specs + (v, v, r, r),
+             out_specs=(v, v, r, r),
+             **_SHARD_MAP_KW)
+    def drain_epoch(dist, parent, esrc, edst, ew, eact, *rest):
+        """Settle the pending masks bucket-by-bucket with the backend's
+        wave; the caller resets (push, pull) to zeros afterwards."""
+        extras = rest[:n_extra]
+        push, pull, racc, macc = rest[n_extra:]
+        my_p = jnp.int32(ds._flat_index())
+        row0 = my_p * npp
+        wave = make_wave(esrc, edst, ew, eact, extras, my_p)
+        dist, parent, rounds, msgs = ds._drain_body(
+            dist, parent, push, pull, wave, row0, bucket_width)
+        return dist, parent, racc + rounds, macc + msgs
+
+    return add_epoch_lazy, del_epoch_lazy, drain_epoch
 
 
 def _build_epochs_ms(ds: DistributedSSSP, epp: int, use_doubling: bool,
                      sources_pad: tuple[int, ...], backend: str,
-                     backend_static: tuple):
+                     backend_static: tuple,
+                     wave_schedule: str = "rounds", bucket_width: float = 1.0):
     """Batched multi-source rendering of ``_build_epochs`` (DESIGN.md §8):
-    the (add_epoch, del_epoch) pair for S stacked trees over one shared
-    sharded pool + layout.
+    the (add_epoch, del_epoch, drain_epoch) triple for S stacked trees over
+    one shared sharded pool + layout.
 
     Same contract as the single-source builder — module-level, closures
     capture only static config — plus the serving-mode shape rules: vertex
@@ -611,4 +770,93 @@ def _build_epochs_ms(ds: DistributedSSSP, epp: int, use_doubling: bool,
         return (dist, parent, eact, *(extras[i] for i in del_mutated),
                 racc + d_rounds, macc + d_msgs)
 
-    return add_epoch, del_epoch
+    if wave_schedule == "rounds":
+        return add_epoch, del_epoch, None
+
+    # ---------------------------------------- bucketed (lazy) epoch variants
+    @jax.jit
+    @partial(_shard_map, mesh=ds.mesh,
+             in_specs=(vb, e, e, e, e, vb, r, r, r, r),
+             out_specs=(e, e, e, e, vb),
+             **_SHARD_MAP_KW)
+    def add_epoch_lazy(dist, esrc, edst, ew, eact, push,
+                       gslot, bsrc, bdst, bw):
+        """Bucketed ADD: one shared pool patch + the shared tail frontier
+        enqueued per lane, pruned to each lane's reachable tails."""
+        my_p = jnp.int32(ds._flat_index())
+        row0 = my_p * npp
+        loc = local_slots(gslot, my_p)
+        esrc = masked_write(esrc, loc, bsrc)
+        edst = masked_write(edst, loc, bdst)
+        ew = masked_write(ew, loc, bw)
+        eact = masked_write(eact, loc, jnp.ones_like(gslot, jnp.bool_))
+        in_r = (bsrc >= row0) & (bsrc < row0 + npp)
+        fr = jnp.zeros((npp,), jnp.bool_).at[
+            jnp.clip(bsrc - row0, 0, npp - 1)].max(in_r)
+        push = push | (fr[None, :] & jnp.isfinite(dist))
+        return esrc, edst, ew, eact, push
+
+    @jax.jit
+    @partial(_shard_map, mesh=ds.mesh,
+             in_specs=(vb, vb, e) + extra_specs + (vb, vb, r, r, r, r, r),
+             out_specs=(vb, vb, e) + (v,) * len(del_mutated) + (vb, vb, r, r),
+             **_SHARD_MAP_KW)
+    def del_epoch_lazy(dist, parent, eact, *rest):
+        """Bucketed DEL: per-lane seeds + ONE shared deactivate/tombstone +
+        per-lane gated invalidation; recompute deferred into (push, pull)."""
+        extras = list(rest[:n_extra])
+        push, pull, gslot, psrc, pdst, racc, macc = rest[n_extra:]
+        my_p = jnp.int32(ds._flat_index())
+        row0 = my_p * npp
+        in_r = (pdst >= row0) & (pdst < row0 + npp)
+        lds = jnp.clip(pdst - row0, 0, npp - 1)
+        seed = jax.vmap(
+            lambda par: jnp.zeros((npp,), jnp.bool_).at[lds].max(
+                in_r & (par[lds] == psrc)))(parent)
+        any_seed = jax.lax.psum(
+            jnp.sum(seed.astype(jnp.int32), axis=1), ax) > 0        # [S]
+        loc = local_slots(gslot, my_p)
+        eact = masked_write(eact, loc, jnp.zeros_like(gslot, jnp.bool_))
+        if del_patch is not None:
+            new_vals = del_patch(tuple(extras), psrc, pdst, my_p)
+            for i, val in zip(del_mutated, new_vals):
+                extras[i] = val
+        if use_doubling:
+            aff, inv_rounds = ds._invalidate_doubling_ms(parent, seed,
+                                                         gate=any_seed)
+        elif exchange == "delta":
+            aff, inv_rounds = ds._invalidate_delta_ms(parent, seed, row0,
+                                                      gate=any_seed)
+        else:
+            aff, inv_rounds = ds._invalidate_flood_dense_ms(parent, seed,
+                                                            gate=any_seed)
+        local_ids = row0 + jnp.arange(npp, dtype=jnp.int32)
+        src_arr = jnp.asarray(sources_pad, jnp.int32)
+        aff = aff & (local_ids[None, :] != src_arr[:, None])
+        affected = jax.lax.psum(jnp.sum(aff.astype(jnp.int32), axis=1), ax)
+        dist = jnp.where(aff, INF, dist)
+        parent = jnp.where(aff, NO_PARENT, parent)
+        push = push & jnp.isfinite(dist)
+        pull = pull | aff
+        zero = jnp.zeros((S,), jnp.int32)
+        d_rounds = jnp.where(any_seed, inv_rounds, zero)
+        return (dist, parent, eact, *(extras[i] for i in del_mutated),
+                push, pull, racc + d_rounds, macc + affected)
+
+    @jax.jit
+    @partial(_shard_map, mesh=ds.mesh,
+             in_specs=(vb, vb, e, e, e, e) + extra_specs + (vb, vb, r, r),
+             out_specs=(vb, vb, r, r),
+             **_SHARD_MAP_KW)
+    def drain_epoch(dist, parent, esrc, edst, ew, eact, *rest):
+        """Batched drain: per-lane bucket pacing with the vmapped wave."""
+        extras = rest[:n_extra]
+        push, pull, racc, macc = rest[n_extra:]
+        my_p = jnp.int32(ds._flat_index())
+        row0 = my_p * npp
+        wave = make_wave(esrc, edst, ew, eact, extras, my_p)
+        dist, parent, rounds, msgs = ds._drain_body_ms(
+            dist, parent, push, pull, jax.vmap(wave), row0, bucket_width)
+        return dist, parent, racc + rounds, macc + msgs
+
+    return add_epoch_lazy, del_epoch_lazy, drain_epoch

@@ -361,15 +361,227 @@ class DistributedSSSP:
         frontier0 = queried & jnp.isfinite(dist)
         return self._relax_body(dist, parent, frontier0, wave)
 
+    # ------------------------------------------------- bucketed drain impls
+    # The sharded rendering of core/buckets.run_drain (DESIGN.md §9): one
+    # pull wave into the accumulated invalidated set, then bucket-threshold-
+    # paced push waves.  The bucket limit is a replicated scalar computed
+    # from the SAME gathered data a normal round exchanges (dist plus one
+    # bool mask) — every partition derives identical (cur, limit), so the
+    # schedule needs NO new collective primitives, and the wave sequence —
+    # hence final (dist, parent) AND the round/message counters — is
+    # bit-identical to the single-device drain.
+
+    def _bucket_offers_allgather(self, dist, push, bucket_width):
+        from repro.core.buckets import bucket_limit
+        ax = self.cfg.mesh_axes
+        dist_full = jax.lax.all_gather(dist, ax, tiled=True)
+        push_full = jax.lax.all_gather(push, ax, tiled=True)
+        cur = jnp.min(jnp.where(push_full, dist_full, INF))
+        limit = bucket_limit(cur, bucket_width)
+        act_full = push_full & ((dist_full < limit) | (dist_full == cur))
+        offers = jnp.where(act_full, dist_full, INF)
+        active = push & ((dist < limit) | (dist == cur))
+        return offers, active
+
+    def _bucket_offers_delta(self, dist, push, row0, bucket_width):
+        """Delta-compressed drain wave: pack the WHOLE pending set (ids +
+        dists); ``cur`` from the packed values is exact because every pending
+        vertex is packed when no partition overflows.  Overflow falls back to
+        the dense gathers — the offers stay bucket-gated there too, so the
+        wave sequence is unchanged (unlike ``_round_delta``'s superset
+        fallback, a superset here would break the pacing parity)."""
+        from repro.core.buckets import bucket_limit
+        ax = self.cfg.mesh_axes
+        cap = self.cfg.delta_cap
+        n = self.cfg.num_vertices
+        overflow = jax.lax.psum(
+            (jnp.sum(push.astype(jnp.int32)) > cap).astype(jnp.int32),
+            ax) > 0
+        local_ids = row0 + jnp.arange(self.npp, dtype=jnp.int32)
+        order = jnp.argsort(~push)
+        take = order[:cap]
+        sel = push[take]
+        pack_idx = jnp.where(sel, local_ids[take], -1)
+        pack_val = jnp.where(sel, dist[take], INF)
+        all_idx = jax.lax.all_gather(pack_idx, ax, tiled=True)
+        all_val = jax.lax.all_gather(pack_val, ax, tiled=True)
+
+        def sparse():
+            cur = jnp.min(all_val)
+            limit = bucket_limit(cur, bucket_width)
+            act = (all_val < limit) | (all_val == cur)
+            base = jnp.full((n,), INF, dist.dtype)
+            safe = jnp.clip(all_idx, 0, n - 1)
+            offers = base.at[safe].min(
+                jnp.where((all_idx >= 0) & act, all_val, INF))
+            return offers, cur
+
+        def dense():
+            dist_full = jax.lax.all_gather(dist, ax, tiled=True)
+            push_full = jax.lax.all_gather(push, ax, tiled=True)
+            cur = jnp.min(jnp.where(push_full, dist_full, INF))
+            limit = bucket_limit(cur, bucket_width)
+            act_full = push_full & ((dist_full < limit) | (dist_full == cur))
+            return jnp.where(act_full, dist_full, INF), cur
+
+        offers, cur = jax.lax.cond(overflow, dense, sparse)
+        limit = bucket_limit(cur, bucket_width)
+        active = push & ((dist < limit) | (dist == cur))
+        return offers, active
+
+    def _drain_body(self, dist, parent, push, pull, wave, row0, bucket_width):
+        """Sharded drain: (dist, parent, rounds, messages), counters equal to
+        ``run_drain``'s.  Pull phase runs unconditionally (collectives are
+        uniform across partitions) but improvements fold into ``pull`` rows
+        only and the round is counted iff any lane pulled — state-identical
+        to the single-device ``lax.cond`` gating."""
+        ax = self.cfg.mesh_axes
+        any_pull = jax.lax.psum(jnp.sum(pull.astype(jnp.int32)), ax) > 0
+        offers = jax.lax.all_gather(dist, ax, tiled=True)
+        best, arg = wave(offers)
+        improved = (best < dist) & pull
+        dist = jnp.where(improved, best, dist)
+        parent = jnp.where(improved, arg, parent)
+        push = push | improved
+        msgs0 = jax.lax.psum(jnp.sum(improved.astype(jnp.int32)), ax)
+        rounds0 = jnp.where(any_pull, jnp.int32(1), jnp.int32(0))
+
+        def cond(carry):
+            return carry[3]
+
+        def body(carry):
+            dist, parent, push, _, rounds, msgs = carry
+            if self.cfg.exchange == "delta":
+                offers, active = self._bucket_offers_delta(
+                    dist, push, row0, bucket_width)
+            else:
+                offers, active = self._bucket_offers_allgather(
+                    dist, push, bucket_width)
+            dist, parent, improved = self._apply_wave(
+                dist, parent, wave, offers)
+            push = (push & ~active) | improved
+            tot = jax.lax.psum(
+                jnp.stack([jnp.sum(improved.astype(jnp.int32)),
+                           jnp.sum(push.astype(jnp.int32))]), ax)
+            return dist, parent, push, tot[1] > 0, rounds + 1, msgs + tot[0]
+
+        init_go = jax.lax.psum(jnp.sum(push.astype(jnp.int32)), ax) > 0
+        dist, parent, _, _, rounds, msgs = jax.lax.while_loop(
+            cond, body, (dist, parent, push, init_go, rounds0, msgs0))
+        return dist, parent, rounds, msgs
+
+    def _bucket_offers_allgather_ms(self, dist, push, bucket_width):
+        from repro.core.buckets import bucket_limit
+        ax = self.cfg.mesh_axes
+        dist_full = jax.lax.all_gather(dist, ax, tiled=True, axis=1)
+        push_full = jax.lax.all_gather(push, ax, tiled=True, axis=1)
+        cur = jnp.min(jnp.where(push_full, dist_full, INF),
+                      axis=1, keepdims=True)                       # [S, 1]
+        limit = bucket_limit(cur, bucket_width)
+        act_full = push_full & ((dist_full < limit) | (dist_full == cur))
+        offers = jnp.where(act_full, dist_full, INF)
+        active = push & ((dist < limit) | (dist == cur))
+        return offers, active
+
+    def _bucket_offers_delta_ms(self, dist, push, row0, bucket_width):
+        """Per-lane packing with a per-lane dense-fallback select (both
+        operands computed — the batched rendering of the unbatched
+        ``lax.cond``, same wave sequence per lane)."""
+        from repro.core.buckets import bucket_limit
+        ax = self.cfg.mesh_axes
+        cap = self.cfg.delta_cap
+        n = self.cfg.num_vertices
+        overflow = jax.lax.psum(
+            (jnp.sum(push.astype(jnp.int32), axis=1)
+             > cap).astype(jnp.int32), ax) > 0                     # [S]
+        local_ids = row0 + jnp.arange(self.npp, dtype=jnp.int32)
+        order = jnp.argsort(~push, axis=1)
+        take = order[:, :cap]
+        sel = jnp.take_along_axis(push, take, axis=1)
+        pack_idx = jnp.where(sel, local_ids[take], -1)
+        pack_val = jnp.where(sel, jnp.take_along_axis(dist, take, axis=1),
+                             INF)
+        all_idx = jax.lax.all_gather(pack_idx, ax, tiled=True, axis=1)
+        all_val = jax.lax.all_gather(pack_val, ax, tiled=True, axis=1)
+        dist_full = jax.lax.all_gather(dist, ax, tiled=True, axis=1)
+        push_full = jax.lax.all_gather(push, ax, tiled=True, axis=1)
+        cur_sparse = jnp.min(all_val, axis=1, keepdims=True)
+        cur_dense = jnp.min(jnp.where(push_full, dist_full, INF),
+                            axis=1, keepdims=True)
+        cur = jnp.where(overflow[:, None], cur_dense, cur_sparse)   # [S, 1]
+        limit = bucket_limit(cur, bucket_width)
+        act_pack = (all_val < limit) | (all_val == cur)
+        safe = jnp.clip(all_idx, 0, n - 1)
+        sparse = jax.vmap(lambda s_, v: jnp.full((n,), INF, dist.dtype)
+                          .at[s_].min(v))(
+            safe, jnp.where((all_idx >= 0) & act_pack, all_val, INF))
+        act_full = push_full & ((dist_full < limit) | (dist_full == cur))
+        dense = jnp.where(act_full, dist_full, INF)
+        offers = jnp.where(overflow[:, None], dense, sparse)
+        active = push & ((dist < limit) | (dist == cur))
+        return offers, active
+
+    def _drain_body_ms(self, dist, parent, push, pull, wave_b, row0,
+                       bucket_width):
+        """Batched drain over [S, npp] lanes; per-lane ``go`` gates freeze a
+        drained lane's round counter exactly where its unbatched drain would
+        exit (same trick as ``_relax_body_ms``)."""
+        ax = self.cfg.mesh_axes
+        S = dist.shape[0]
+        any_pull = jax.lax.psum(
+            jnp.sum(pull.astype(jnp.int32), axis=1), ax) > 0        # [S]
+        offers = jax.lax.all_gather(dist, ax, tiled=True, axis=1)
+        best, arg = wave_b(offers)
+        improved = (best < dist) & pull
+        dist = jnp.where(improved, best, dist)
+        parent = jnp.where(improved, arg, parent)
+        push = push | improved
+        msgs0 = jax.lax.psum(jnp.sum(improved.astype(jnp.int32), axis=1), ax)
+        rounds0 = any_pull.astype(jnp.int32)
+
+        def cond(carry):
+            return jnp.any(carry[3])
+
+        def body(carry):
+            dist, parent, push, go, rounds, msgs = carry
+            if self.cfg.exchange == "delta":
+                offers, active = self._bucket_offers_delta_ms(
+                    dist, push, row0, bucket_width)
+            else:
+                offers, active = self._bucket_offers_allgather_ms(
+                    dist, push, bucket_width)
+            dist, parent, improved = self._apply_wave(
+                dist, parent, wave_b, offers)
+            push = (push & ~active) | improved
+            n_imp = jax.lax.psum(
+                jnp.sum(improved.astype(jnp.int32), axis=1), ax)
+            n_push = jax.lax.psum(
+                jnp.sum(push.astype(jnp.int32), axis=1), ax)
+            return (dist, parent, push, n_push > 0,
+                    rounds + go.astype(jnp.int32), msgs + n_imp)
+
+        init_go = jax.lax.psum(
+            jnp.sum(push.astype(jnp.int32), axis=1), ax) > 0
+        dist, parent, _, _, rounds, msgs = jax.lax.while_loop(
+            cond, body, (dist, parent, push, init_go, rounds0, msgs0))
+        return dist, parent, rounds, msgs
+
     # --------------------------------------------------- invalidation impls
-    def _invalidate_doubling(self, parent, seed):
+    # ``gate`` (optional replicated bool, or [S] per-lane bool on the _ms
+    # variants) short-circuits the marking loop when no partition seeded —
+    # the bucketed schedule's lazy deletion epoch passes ``any_seed`` so
+    # non-tree deletions cost zero marking rounds, matching the gated
+    # single-device ``mark_subtree_*``.  Stats stay identical either way:
+    # callers already mask inv_rounds with the same any_seed.
+
+    def _invalidate_doubling(self, parent, seed, gate=None):
         """Pointer-doubling subtree marking with dense all_gathers of the
         (aff, ptr) vectors — O(log depth) rounds x O(N) bytes/round."""
         ax = self.cfg.mesh_axes
 
         def dcond(carry):
             _, _, grew, _ = carry
-            return grew
+            return grew if gate is None else grew & gate
 
         def dbody(carry):
             aff, ptr, _, rounds = carry
@@ -388,7 +600,7 @@ class DistributedSSSP:
             dcond, dbody, (seed, parent, jnp.bool_(True), jnp.int32(0)))
         return aff, inv_rounds
 
-    def _invalidate_flood_dense(self, parent, seed):
+    def _invalidate_flood_dense(self, parent, seed, gate=None):
         """Paper-faithful level-by-level SetToInfinity flood with dense aff
         gathers — one round per tree level.  The distributed rendering of
         ``delete.mark_subtree_flood`` (identical wave/round structure, so the
@@ -397,7 +609,7 @@ class DistributedSSSP:
 
         def dcond(carry):
             _, grew, _ = carry
-            return grew
+            return grew if gate is None else grew & gate
 
         def dbody(carry):
             aff, _, rounds = carry
@@ -412,7 +624,7 @@ class DistributedSSSP:
             dcond, dbody, (seed, jnp.bool_(True), jnp.int32(0)))
         return aff, inv_rounds
 
-    def _invalidate_delta(self, parent, seed, row0):
+    def _invalidate_delta(self, parent, seed, row0, gate=None):
         """Paper-faithful SetToInfinity flood with delta-compressed frontier
         exchange: each wave broadcasts only the NEWLY affected vertex ids
         (packed (idx) buffers, delta_cap per partition) — O(depth) rounds x
@@ -426,7 +638,7 @@ class DistributedSSSP:
 
         def dcond(carry):
             _, _, grew, _ = carry
-            return grew
+            return grew if gate is None else grew & gate
 
         def dbody(carry):
             aff, frontier, _, rounds = carry
@@ -585,7 +797,7 @@ class DistributedSSSP:
         frontier0 = queried & jnp.isfinite(dist)
         return self._relax_body_ms(dist, parent, frontier0, wave_b)
 
-    def _invalidate_doubling_ms(self, parent, seed):
+    def _invalidate_doubling_ms(self, parent, seed, gate=None):
         """Batched pointer-doubling marking over [S, npp] per-lane forests."""
         ax = self.cfg.mesh_axes
         S = parent.shape[0]
@@ -609,14 +821,16 @@ class DistributedSSSP:
             grew_local = (jnp.any(new_aff != aff, axis=1)
                           | jnp.any(nxt != ptr, axis=1))
             grew = jax.lax.psum(grew_local.astype(jnp.int32), ax) > 0
+            if gate is not None:
+                grew = grew & gate
             return new_aff, nxt, grew, rounds + go.astype(jnp.int32)
 
+        go0 = jnp.ones((S,), jnp.bool_) if gate is None else gate
         aff, _, _, inv_rounds = jax.lax.while_loop(
-            dcond, dbody, (seed, parent, jnp.ones((S,), jnp.bool_),
-                           jnp.zeros((S,), jnp.int32)))
+            dcond, dbody, (seed, parent, go0, jnp.zeros((S,), jnp.int32)))
         return aff, inv_rounds
 
-    def _invalidate_flood_dense_ms(self, parent, seed):
+    def _invalidate_flood_dense_ms(self, parent, seed, gate=None):
         """Batched level-by-level SetToInfinity flood over per-lane forests."""
         ax = self.cfg.mesh_axes
         S = parent.shape[0]
@@ -634,14 +848,16 @@ class DistributedSSSP:
             new = aff | join
             grew = jax.lax.psum(
                 jnp.sum((new != aff).astype(jnp.int32), axis=1), ax) > 0
+            if gate is not None:
+                grew = grew & gate
             return new, grew, rounds + go.astype(jnp.int32)
 
+        go0 = jnp.ones((S,), jnp.bool_) if gate is None else gate
         aff, _, inv_rounds = jax.lax.while_loop(
-            dcond, dbody, (seed, jnp.ones((S,), jnp.bool_),
-                           jnp.zeros((S,), jnp.int32)))
+            dcond, dbody, (seed, go0, jnp.zeros((S,), jnp.int32)))
         return aff, inv_rounds
 
-    def _invalidate_delta_ms(self, parent, seed, row0):
+    def _invalidate_delta_ms(self, parent, seed, row0, gate=None):
         """Batched delta-compressed flood; per-lane packing, per-lane dense
         fallback select (same structure as ``_round_delta_ms``)."""
         ax = self.cfg.mesh_axes
@@ -676,11 +892,13 @@ class DistributedSSSP:
             aff2 = aff | new
             grew = jax.lax.psum(
                 jnp.sum(new.astype(jnp.int32), axis=1), ax) > 0
+            if gate is not None:
+                grew = grew & gate
             return aff2, new, grew, rounds + go.astype(jnp.int32)
 
+        go0 = jnp.ones((S,), jnp.bool_) if gate is None else gate
         aff, _, _, inv_rounds = jax.lax.while_loop(
-            dcond, dbody, (seed, seed, jnp.ones((S,), jnp.bool_),
-                           jnp.zeros((S,), jnp.int32)))
+            dcond, dbody, (seed, seed, go0, jnp.zeros((S,), jnp.int32)))
         return aff, inv_rounds
 
     def make_seed_from_deletions(self):

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import backends as bk_mod
+from repro.core import buckets
 from repro.core import delete as del_mod
 from repro.core import events as ev
 from repro.core import ingest, relax
@@ -70,6 +71,12 @@ class EngineConfig:
     sliced_slice_rows: int = 256  # rows per degree slice (per-slice K)
     sliced_hub_k: int = 32        # hub threshold: rows past it spill to COO
     sliced_init_k: int = 2        # initial per-slice width; doubles at rebuild
+    sliced_fused: bool = False    # fused Pallas wave kernel (DESIGN.md §9.4)
+    # bucketed delta-stepping schedule (DESIGN.md §9): "rounds" settles every
+    # epoch to fixpoint; "buckets" defers convergence work into a pending
+    # set and drains it bucket-by-bucket at query/checkpoint time
+    wave_schedule: str = "rounds"
+    bucket_width: float = 1.0     # delta; inf = one bucket (plain converge)
     # batched multi-source serving (DESIGN.md §8); None = single-source
     sources: tuple[int, ...] | None = None
 
@@ -107,9 +114,18 @@ class SSSPDelEngine(StreamEngineBase):
                     cfg.num_vertices, self.sources))
         on_tpu = jax.default_backend() == "tpu"
         use_kernel = on_tpu if cfg.ell_use_kernel is None else cfg.ell_use_kernel
+        self._use_kernel, self._interpret = use_kernel, not on_tpu
+        # "auto" starts on the dense ELL layout and falls back to sliced when
+        # a rebuild reports hub blowup (backends/base.py ELL_BLOWUP_RATIO)
+        self._auto = cfg.relax_backend == bk_mod.AUTO_BACKEND
+        self.backend_name = "ellpack" if self._auto else cfg.relax_backend
         self.backend = bk_mod.make_backend(
-            cfg.relax_backend, cfg, use_kernel=use_kernel,
+            self.backend_name, cfg, use_kernel=use_kernel,
             interpret=not on_tpu)
+        self.bucketed = cfg.wave_schedule == "buckets"
+        self._pend = buckets.empty_pending(
+            cfg.num_vertices,
+            None if self.sources is None else len(self.sources))
 
     # ------------------------------------------------------------------ adds
     def _ingest_adds(self, batch: ev.EventBatch) -> None:
@@ -127,13 +143,34 @@ class SSSPDelEngine(StreamEngineBase):
         frontier = relax.frontier_from_vertices(
             jnp.asarray(plan.src), self.cfg.num_vertices)
         self.backend.apply_adds(plan, self.alloc)
-        relax_fn = (self.backend.relax if self.sources is None
-                    else self.backend.relax_batched)
-        sssp, stats = relax_fn(self.state.sssp, edges, frontier)
-        self.state = dataclasses.replace(self.state, edges=edges, sssp=sssp)
+        if self._auto and getattr(self.backend, "blowup", False):
+            self._fallback_to_sliced()
+        if self.bucketed:
+            # deferred settle (DESIGN.md §9): record the push obligation and
+            # return — the drain delivers the offers bucket-by-bucket
+            self._pend = buckets.enqueue_push(self._pend, frontier,
+                                              self.state.sssp.dist)
+            self.state = dataclasses.replace(self.state, edges=edges)
+        else:
+            relax_fn = (self.backend.relax if self.sources is None
+                        else self.backend.relax_batched)
+            sssp, stats = relax_fn(self.state.sssp, edges, frontier)
+            self.state = dataclasses.replace(self.state, edges=edges,
+                                             sssp=sssp)
+            self._accumulate_relax(stats)
         self.n_adds += len(plan.slots)
         self.n_epochs += 1
-        self._accumulate_relax(stats)
+
+    def _fallback_to_sliced(self) -> None:
+        """relax_backend="auto": the dense-ELL rebuild just reported hub
+        blowup (K*N cells >> live edges) — swap to the sliced/hybrid layout,
+        rebuilt from the pool mirror exactly as a restore would."""
+        self._auto = False
+        self.backend_name = "sliced"
+        self.backend = bk_mod.make_backend(
+            "sliced", self.cfg, use_kernel=self._use_kernel,
+            interpret=self._interpret)
+        self.backend.restore(self.alloc)
 
     # ------------------------------------------------------------------ dels
     def _ingest_dels(self, batch: ev.EventBatch) -> None:
@@ -142,6 +179,25 @@ class SSSPDelEngine(StreamEngineBase):
             if len(slots) == 0:
                 continue
             slots_p, psrc_p, pdst_p = ingest.pad_pow2(slots, psrc, pdst)
+            if self.bucketed:
+                # ONE fused dispatch: deactivate + seed + mark + invalidate,
+                # recomputation deferred to the drain (DESIGN.md §9).  The
+                # layout tombstones still stage as their own patch op.
+                self.backend.apply_dels(pdst_p, psrc_p)
+                fn = (buckets.lazy_delete if self.sources is None
+                      else buckets.lazy_delete_batched)
+                sssp, edges, self._pend, dstats = fn(
+                    self.state.sssp, self.state.edges, self._pend,
+                    jnp.asarray(psrc_p), jnp.asarray(pdst_p),
+                    jnp.asarray(slots_p),
+                    num_vertices=self.cfg.num_vertices,
+                    use_doubling=self.cfg.use_doubling)
+                self.state = dataclasses.replace(self.state, edges=edges,
+                                                 sssp=sssp)
+                self._accumulate_delete(dstats)
+                self.n_dels += len(slots)
+                self.n_epochs += 1
+                continue
             # Epoch before the deletion is implicit: every prior batch ran to
             # convergence.  Seed from the *pre-deletion* tree, then
             # deactivate.  Batched lanes seed independently — whether a
@@ -167,9 +223,26 @@ class SSSPDelEngine(StreamEngineBase):
             self.n_epochs += 1
 
     # ----------------------------------------------------------------- query
+    def drain(self) -> None:
+        """Settle the bucketed schedule's pending work (no-op under the
+        rounds schedule or with nothing pending — the drain's cond-gated
+        pull and empty while loop cost one cheap dispatch, no host sync).
+        Public so benches/tests can force a converged tree without the
+        query()'s readback."""
+        if not self.bucketed:
+            return
+        drain_fn = (self.backend.drain if self.sources is None
+                    else self.backend.drain_batched)
+        sssp, self._pend, stats = drain_fn(
+            self.state.sssp, self.state.edges, self._pend,
+            bucket_width=self.cfg.bucket_width)
+        self.state = dataclasses.replace(self.state, sssp=sssp)
+        self._accumulate_relax(stats)
+
     def _snapshot(self, lane: int | None) -> tuple[np.ndarray, np.ndarray]:
         """Device->host readback (latency is timed by the base query());
         a routed lane query transfers only that source's [N] pair."""
+        self.drain()
         s = self.state.sssp
         dist, parent = (s.dist, s.parent) if lane is None else \
             (s.dist[lane], s.parent[lane])
@@ -182,6 +255,7 @@ class SSSPDelEngine(StreamEngineBase):
         the sharded writer used at scale).  Backend layout state is NOT
         serialized — it is a derived view, rebuilt from the pool on
         restore (the protocol's checkpoint-participation rule)."""
+        self.drain()   # a checkpoint must capture a converged tree
         e, s = self.state.edges, self.state.sssp
         return {
             "src": np.asarray(e.src), "dst": np.asarray(e.dst),
@@ -203,3 +277,7 @@ class SSSPDelEngine(StreamEngineBase):
             self.cfg.edge_capacity, self.cfg.on_duplicate,
             ckpt["src"], ckpt["dst"], ckpt["w"], ckpt["active"])
         self.backend.restore(self.alloc)
+        # checkpoints are taken post-drain, so nothing was pending
+        self._pend = buckets.empty_pending(
+            self.cfg.num_vertices,
+            None if self.sources is None else len(self.sources))

@@ -1,0 +1,30 @@
+"""One shared ``interpret`` default for every relax kernel entry point.
+
+The Pallas kernels compile through Mosaic only on TPU; everywhere else they
+must run in interpret mode (the kernel body executed as traced jax ops).
+Historically ``relax.ellpack_relax`` defaulted ``interpret=False`` while
+``ops.relax_wave`` hardcoded ``interpret=True`` — correct on exactly one
+platform each.  Both entry points (and the fused sliced kernel) now take
+``interpret=None`` and resolve it here: detect the platform once, interpret
+everywhere except TPU.  Callers that pass an explicit bool keep full control
+(tests force interpret=True regardless of platform).
+"""
+from __future__ import annotations
+
+import jax
+
+_DEFAULT_INTERPRET: bool | None = None
+
+
+def default_interpret() -> bool:
+    """True unless the Mosaic TPU compiler is available (platform probed
+    once per process; ``jax.default_backend()`` initializes the backend)."""
+    global _DEFAULT_INTERPRET
+    if _DEFAULT_INTERPRET is None:
+        _DEFAULT_INTERPRET = jax.default_backend() != "tpu"
+    return _DEFAULT_INTERPRET
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> the platform default; an explicit bool wins."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -19,6 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.relax.config import resolve_interpret
 from repro.kernels.relax.ref import ellpack_relax_ref
 from repro.kernels.relax.relax import ellpack_relax
 
@@ -28,13 +29,16 @@ _INF = jnp.float32(jnp.inf)
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
 def relax_wave(dist: jax.Array, parent: jax.Array, nbr_idx: jax.Array,
                nbr_w: jax.Array, *, frontier: jax.Array | None = None,
-               use_kernel: bool = True, interpret: bool = True):
+               use_kernel: bool = True, interpret: bool | None = None):
     """One relaxation wave in ELL layout (frontier-masked when given).
 
     ``nbr_idx``/``nbr_w`` may have more rows than ``dist`` (kernel block
     padding); the extra rows are all-+inf and are sliced off the outputs.
-    Returns (dist', parent', improved).  CPU container: interpret=True.
+    Returns (dist', parent', improved).  ``interpret=None`` resolves to the
+    platform default (interpret everywhere except TPU) — the same default
+    ``ellpack_relax`` uses, so the two entry points can no longer disagree.
     """
+    interpret = resolve_interpret(interpret)
     n = dist.shape[0]
     offers = dist if frontier is None else jnp.where(frontier, dist, _INF)
     if use_kernel:

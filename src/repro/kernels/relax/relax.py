@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.relax.config import resolve_interpret
+
 
 def _relax_kernel(dist_ref, idx_ref, w_ref, best_ref, arg_ref):
     dist = dist_ref[...]                       # (N,) VMEM-resident tile
@@ -45,13 +47,16 @@ def _relax_kernel(dist_ref, idx_ref, w_ref, best_ref, arg_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def ellpack_relax(dist: jax.Array, nbr_idx: jax.Array, nbr_w: jax.Array,
-                  *, block_rows: int = 256, interpret: bool = False
+                  *, block_rows: int = 256, interpret: bool | None = None
                   ) -> tuple[jax.Array, jax.Array]:
     """best[i], arg[i] = min-plus reduction of row i's in-neighbors.
 
     Shapes: dist (N,) f32; nbr_idx (R, K) i32 (entries in [0, N)); nbr_w
     (R, K) f32 (+inf padding).  R % block_rows == 0 (host builder pads).
+    ``interpret=None`` resolves to the platform default (interpret
+    everywhere except TPU — kernels/relax/config.py).
     """
+    interpret = resolve_interpret(interpret)
     R, K = nbr_idx.shape
     N = dist.shape[0]
     bm = min(block_rows, R)

@@ -13,8 +13,13 @@ stream the sharded engine is checkpointed, a FRESH engine (fresh planners,
 fresh backend layout) restores the snapshot and ingests the rest — the
 restored run must stay on the reference trajectory query for query.
 
+``--buckets`` runs the sharded engine under the bucketed delta-stepping
+schedule (wave_schedule="buckets", DESIGN.md §9) against the single-device
+ROUNDS reference — queries drain implicitly, so the per-query results must
+still be bit-identical (stats differ by design: lazy epochs defer waves).
+
 Usage: _dist_engine_worker.py <exchange> [batch_deletions] [use_doubling]
-                              [backend] [--ckpt]
+                              [backend] [--ckpt] [--buckets]
 Prints "OK <queries> <rounds>" on success.
 """
 import os
@@ -43,7 +48,8 @@ BACKEND_KW = {
 
 
 def main(exchange: str, batch_deletions: bool, use_doubling: bool,
-         backend: str = "segment", ckpt: bool = False) -> None:
+         backend: str = "segment", ckpt: bool = False,
+         buckets: bool = False) -> None:
     assert len(jax.devices()) == 8, f"expected 8 devices, got {len(jax.devices())}"
     mesh = _mk((2, 2, 2), ("pod", "data", "model"))
     n, src, dst, w = generators.erdos_renyi(120, 700, seed=23)
@@ -57,13 +63,16 @@ def main(exchange: str, batch_deletions: bool, use_doubling: bool,
         n, len(src) + 64, source, batch_deletions=batch_deletions,
         use_doubling=use_doubling, relax_backend=backend, **kw))
 
+    sched = (dict(wave_schedule="buckets", bucket_width=1.0)
+             if buckets else {})
+
     def mk_sharded():
         # tiny delta_cap so the delta exchange exercises its overflow fallback
         return ShardedSSSPDelEngine(
             ShardedEngineConfig(n, len(src) + 64, source, exchange=exchange,
                                 delta_cap=16, batch_deletions=batch_deletions,
                                 use_doubling=use_doubling,
-                                relax_backend=backend, **kw),
+                                relax_backend=backend, **sched, **kw),
             mesh=mesh)
 
     res_ref = ref.ingest_log(log) + [ref.query()]
@@ -85,7 +94,7 @@ def main(exchange: str, batch_deletions: bool, use_doubling: bool,
                                       err_msg=f"dist mismatch at query {i}")
         np.testing.assert_array_equal(a.parent, b.parent,
                                       err_msg=f"parent mismatch at query {i}")
-    if exchange == "allgather" and not ckpt:
+    if exchange == "allgather" and not ckpt and not buckets:
         assert ref.n_rounds == eng.n_rounds, (ref.n_rounds, eng.n_rounds)
         assert ref.n_messages == eng.n_messages, (
             ref.n_messages, eng.n_messages)
@@ -95,9 +104,10 @@ def main(exchange: str, batch_deletions: bool, use_doubling: bool,
 
 
 if __name__ == "__main__":
-    args = [a for a in sys.argv[1:] if a != "--ckpt"]
+    args = [a for a in sys.argv[1:] if a not in ("--ckpt", "--buckets")]
     exchange = args[0] if len(args) > 0 else "allgather"
     bd = bool(int(args[1])) if len(args) > 1 else False
     ud = bool(int(args[2])) if len(args) > 2 else True
     backend = args[3] if len(args) > 3 else "segment"
-    main(exchange, bd, ud, backend, ckpt="--ckpt" in sys.argv[1:])
+    main(exchange, bd, ud, backend, ckpt="--ckpt" in sys.argv[1:],
+         buckets="--buckets" in sys.argv[1:])

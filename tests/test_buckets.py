@@ -1,0 +1,287 @@
+"""Bucketed delta-stepping schedule (DESIGN.md §9): the ``buckets`` wave
+schedule must land on the SAME fixpoint as the ``rounds`` schedule —
+bit-identical final (dist, parent) at every drain point — across the bucket
+width axis, the backend axis, the batched [S, N] serving axis and the
+partition-count axis, while spending no more total rounds than the eager
+schedule at delta >= 1 (the rounds *budget* gate; sub-unit widths may
+over-serialize, which is delta-stepping working as specified, so the budget
+is asserted only for widths >= 1).
+
+Also here: the dense-ELL hub-blowup warning and the ``relax_backend="auto"``
+fallback it motivates (DESIGN.md §6) — a rebuild whose K*N cell allocation
+exceeds ELL_BLOWUP_RATIO x live edges warns once naming the sliced layout,
+and "auto" swaps the engine onto it mid-stream without leaving the
+equivalence contract.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import events as ev
+from repro.core.backends import SlicedBackend
+from repro.core.dist_engine import ShardedEngineConfig, ShardedSSSPDelEngine
+from repro.core.engine import EngineConfig, SSSPDelEngine
+from repro.core.oracle import check_tree, edges_of_pool
+from repro.graphs import generators, window
+from repro.launch.mesh import _mk
+
+WIDTHS = [0.25, 1.0, 4.0, float("inf")]
+BACKEND_KW = {
+    "segment": {},
+    "ellpack": dict(ell_init_k=2),
+    "sliced": dict(sliced_slice_rows=32, sliced_hub_k=4, sliced_init_k=1),
+}
+
+
+def _stream(seed, *, n=90, m=520, delta=0.6, query_every=None):
+    n, src, dst, w = generators.erdos_renyi(n, m, seed=seed)
+    log = window.sliding_window_stream(
+        src, dst, w, window=m // 3, delta=delta, seed=seed,
+        query_every=m // 2 if query_every is None else query_every)
+    return n, len(src), log
+
+
+def _run(cfg, log):
+    eng = SSSPDelEngine(cfg)
+    outs = eng.ingest_log(log)
+    eng.drain()
+    return eng, outs
+
+
+def _assert_equal(res_a, res_b, tag=""):
+    assert len(res_a) == len(res_b)
+    for i, (a, b) in enumerate(zip(res_a, res_b)):
+        np.testing.assert_array_equal(
+            a.dist, b.dist, err_msg=f"{tag} dist mismatch at query {i}")
+        np.testing.assert_array_equal(
+            a.parent, b.parent, err_msg=f"{tag} parent mismatch at query {i}")
+
+
+# ------------------------------------------------------- single-device axis --
+@pytest.mark.parametrize("backend", sorted(BACKEND_KW))
+@pytest.mark.parametrize("width", WIDTHS)
+def test_bucketed_bit_identical_to_rounds(backend, width):
+    """Final-state identity (DESIGN.md §9.2): every drain — the stream has
+    ADDs, tree-edge DELETEs (recompute pulls) and interleaved queries —
+    lands on the rounds schedule's exact (dist, parent) bits."""
+    n, m, log = _stream(seed=41, delta=0.6)
+    kw = BACKEND_KW[backend]
+    ref, ref_outs = _run(EngineConfig(
+        n, m + 64, 3, relax_backend=backend, **kw), log)
+    eng, outs = _run(EngineConfig(
+        n, m + 64, 3, relax_backend=backend, wave_schedule="buckets",
+        bucket_width=width, **kw), log)
+    _assert_equal(ref_outs + [ref.query()], outs + [eng.query()],
+                  tag=f"{backend} w={width}")
+    assert eng.n_dels > 0 and len(outs) >= 2  # deletes + drains exercised
+    if width >= 1.0:
+        # rounds budget: lazy epochs + bucketed drains must not spend more
+        # waves than eager per-epoch convergence (sub-1 widths may)
+        assert int(eng.n_rounds) <= int(ref.n_rounds), (
+            f"buckets w={width} spent {int(eng.n_rounds)} rounds vs "
+            f"rounds-schedule {int(ref.n_rounds)}")
+
+
+def test_bucketed_rounds_identical_across_backends():
+    """The drained wave SEQUENCE (not just the fixpoint) is backend-
+    independent: per-width round/message counters agree across all three."""
+    n, m, log = _stream(seed=43)
+    for width in (0.5, 2.0):
+        stats = []
+        for backend, kw in sorted(BACKEND_KW.items()):
+            eng, _ = _run(EngineConfig(
+                n, m + 64, 3, relax_backend=backend,
+                wave_schedule="buckets", bucket_width=width, **kw), log)
+            stats.append((backend, int(eng.n_rounds), int(eng.n_messages)))
+        assert len({s[1:] for s in stats}) == 1, stats
+
+
+def test_bucketed_oracle_at_drain_points():
+    """Every drained tree satisfies the Dijkstra oracle on the live edges."""
+    n, m, log = _stream(seed=47, query_every=130)
+    eng, outs = _run(EngineConfig(
+        n, m + 64, 3, wave_schedule="buckets", bucket_width=1.0), log)
+    assert len(outs) >= 3
+    q = eng.query()
+    e = eng.state.edges
+    es, ed, ew = edges_of_pool(e.src, e.dst, e.w, e.active)
+    check_tree(n, es, ed, ew, 3, np.asarray(q.dist), np.asarray(q.parent))
+
+
+def test_bucketed_batched_lanes_match_rounds():
+    """[S, N] serving lanes under the bucketed schedule: per-lane drains are
+    bit-identical to the rounds schedule's stacked trees, per-lane stats
+    frozen independently."""
+    n, m, log = _stream(seed=53)
+    sources = (0, 3, 11)
+    for backend in ("segment", "sliced"):
+        kw = BACKEND_KW[backend]
+        ref, ref_outs = _run(EngineConfig(
+            n, m + 64, 3, sources=sources, relax_backend=backend, **kw), log)
+        for width in (1.0, float("inf")):
+            eng, outs = _run(EngineConfig(
+                n, m + 64, 3, sources=sources, relax_backend=backend,
+                wave_schedule="buckets", bucket_width=width, **kw), log)
+            _assert_equal(ref_outs + [ref.query()], outs + [eng.query()],
+                          tag=f"batched {backend} w={width}")
+            if width >= 1.0:
+                assert int(np.asarray(eng.n_rounds).sum()) <= \
+                    int(np.asarray(ref.n_rounds).sum())
+
+
+def test_bucketed_checkpoint_restore_drains_first():
+    """A checkpoint must capture a converged tree: pending work is drained
+    before snapshotting, and a restored engine resumes with empty pending
+    state on the reference trajectory."""
+    n, m, log = _stream(seed=59)
+    cfg = lambda: EngineConfig(n, m + 64, 3, wave_schedule="buckets",  # noqa
+                               bucket_width=1.0)
+    ref, _ = _run(EngineConfig(n, m + 64, 3), log)
+    half = len(log) // 2
+    eng0 = SSSPDelEngine(cfg())
+    eng0.ingest_log(log[:half])
+    snap = eng0.checkpoint()
+    eng = SSSPDelEngine(cfg())
+    eng.restore(snap)
+    eng.ingest_log(log[half:])
+    eng.drain()
+    np.testing.assert_array_equal(ref.query().dist, eng.query().dist)
+    np.testing.assert_array_equal(ref.query().parent, eng.query().parent)
+
+
+def test_bucket_width_validation():
+    with pytest.raises(ValueError, match="bucket_width"):
+        EngineConfig(8, 16, 0, wave_schedule="buckets", bucket_width=0.0)
+    with pytest.raises(ValueError, match="wave_schedule"):
+        EngineConfig(8, 16, 0, wave_schedule="eager")
+    with pytest.raises(ValueError, match="bucket_width"):
+        # width configured while the schedule stays "rounds" = config bug
+        EngineConfig(8, 16, 0, bucket_width=2.0)
+
+
+# ------------------------------------------------------------ sharded axis --
+@pytest.mark.parametrize("exchange", ["allgather", "delta"])
+@pytest.mark.parametrize("width", [0.25, 1.0, float("inf")])
+def test_sharded_bucketed_matches_single_device(exchange, width):
+    """P=1 mesh, both exchanges: the sharded bucketed engine (broadcast
+    bucket threshold, gated lazy epochs, collective-uniform drain) is
+    bit-identical to the single-device ROUNDS engine at every query."""
+    n, m, log = _stream(seed=61)
+    ref, ref_outs = _run(EngineConfig(n, m + 64, 3), log)
+    eng = ShardedSSSPDelEngine(ShardedEngineConfig(
+        n, m + 64, 3, exchange=exchange, delta_cap=16,
+        wave_schedule="buckets", bucket_width=width))
+    outs = eng.ingest_log(log)
+    eng.drain()
+    _assert_equal(ref_outs + [ref.query()], outs + [eng.query()],
+                  tag=f"sharded {exchange} w={width}")
+
+
+def test_sharded_bucketed_stats_match_single_bucketed():
+    """Same width => same wave sequence: the sharded bucketed engine's
+    round/message counters equal the single-device bucketed engine's."""
+    n, m, log = _stream(seed=67)
+    sd, _ = _run(EngineConfig(n, m + 64, 3, wave_schedule="buckets",
+                              bucket_width=1.0), log)
+    sh = ShardedSSSPDelEngine(ShardedEngineConfig(
+        n, m + 64, 3, wave_schedule="buckets", bucket_width=1.0))
+    sh.ingest_log(log)
+    sh.drain()
+    assert int(sd.n_rounds) == int(sh.n_rounds)
+    assert int(sd.n_messages) == int(sh.n_messages)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs 8 devices (CI runs this module with "
+                           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+@pytest.mark.parametrize("exchange,sources", [
+    ("allgather", None), ("delta", None), ("allgather", (0, 5, 9))])
+def test_sharded_bucketed_p8(exchange, sources):
+    """P=8 forced host devices: bucket threshold broadcast + drain across a
+    real 8-way partition, single-source and batched lanes."""
+    mesh = _mk((8,), ("graph",))
+    n, m, log = _stream(seed=71, n=120, m=700)
+    ref, ref_outs = _run(EngineConfig(n, m + 64, 5, sources=sources), log)
+    eng = ShardedSSSPDelEngine(ShardedEngineConfig(
+        n, m + 64, 5, exchange=exchange, delta_cap=16, sources=sources,
+        wave_schedule="buckets", bucket_width=1.0), mesh=mesh)
+    assert eng.P == 8
+    outs = eng.ingest_log(log)
+    eng.drain()
+    _assert_equal(ref_outs + [ref.query()], outs + [eng.query()],
+                  tag=f"p8 {exchange} sources={sources}")
+
+
+# ----------------------------------------- hub blowup warning + auto fallback --
+def _hub_stream(n=512, m=220, hub_deg=80, seed=7):
+    """A few hub destinations dominate: dense ELL must pad every row to the
+    hub in-degree -> K*N cells >> live edges."""
+    rng = np.random.default_rng(seed)
+    hub = rng.integers(1, n, size=hub_deg)
+    src = np.r_[hub, rng.integers(0, n, size=m - hub_deg)]
+    dst = np.r_[np.zeros(hub_deg, np.int64),
+                rng.integers(0, n, size=m - hub_deg)]
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    w = rng.uniform(0.1, 1.0, size=len(src)).astype(np.float32)
+    return src.astype(np.int64), dst.astype(np.int64), w
+
+
+def test_dense_ell_blowup_warns_naming_sliced():
+    src, dst, w = _hub_stream()
+    n = 512
+    log = ev.adds(src, dst, w)
+    eng = SSSPDelEngine(EngineConfig(
+        n, len(src) + 64, 0, relax_backend="ellpack", ell_init_k=1))
+    with pytest.warns(RuntimeWarning, match="sliced"):
+        eng.ingest_log(log)
+    # warned once, not per rebuild
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        eng.ingest_log(ev.query_marker())
+
+
+def test_auto_backend_falls_back_to_sliced():
+    """relax_backend="auto": starts dense-ELL, swaps to the hybrid layout at
+    the blowup rebuild, and stays bit-identical to the segment engine."""
+    src, dst, w = _hub_stream()
+    n = 512
+    log = ev.interleave_queries(ev.adds(src, dst, w),
+                                max(len(src) // 4, 1))
+    ref = SSSPDelEngine(EngineConfig(n, len(src) + 64, 0))
+    eng = SSSPDelEngine(EngineConfig(
+        n, len(src) + 64, 0, relax_backend="auto", ell_init_k=1))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        _assert_equal(ref.ingest_log(log) + [ref.query()],
+                      eng.ingest_log(log) + [eng.query()], tag="auto")
+    assert isinstance(eng.backend, SlicedBackend)
+    assert eng.backend_name == "sliced"
+    # the hybrid layout caps hub rows at hub_k and spills the surplus, so
+    # its allocation is far below the dense block the warning fired on
+    # (K_dense = next_pow2(2 * hub in-degree) padded across ALL rows)
+    pl = eng.backend.planner
+    dense_cells = eng.cfg.num_vertices * 256   # what dense ELL allocated
+    assert pl.cells + pl.ocap < dense_cells / 8, (
+        pl.cells, pl.ocap, dense_cells)
+
+
+def test_auto_backend_composes_with_buckets():
+    src, dst, w = _hub_stream(seed=13)
+    n = 512
+    log = ev.adds(src, dst, w)
+    ref = SSSPDelEngine(EngineConfig(n, len(src) + 64, 0))
+    ref.ingest_log(log)
+    eng = SSSPDelEngine(EngineConfig(
+        n, len(src) + 64, 0, relax_backend="auto", ell_init_k=1,
+        wave_schedule="buckets", bucket_width=1.0))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        eng.ingest_log(log)
+        eng.drain()
+    np.testing.assert_array_equal(ref.query().dist, eng.query().dist)
+    np.testing.assert_array_equal(ref.query().parent, eng.query().parent)
+    assert eng.backend_name == "sliced"

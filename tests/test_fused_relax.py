@@ -1,0 +1,222 @@
+"""Fused sliced-ELL + overflow wave kernel (kernels/relax/fused.py,
+DESIGN.md §9.4), interpret mode: the single fused pallas_call must be
+bit-identical to the unfused three-dispatch composition
+``combine_lanes(sliced_gather_min, overflow_min)`` on any layout — ragged
+last run groups, empty or zero-capacity overflow lanes, pervasive weight
+ties (the smallest-src-id rule across BOTH lanes), and arbitrary
+bucket/frontier row masks — plus the roofline sanity check of the kernel's
+flop/byte model against the compiled HLO (roofline/hlo_analysis.py).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backends.sliced import (combine_lanes, overflow_min,
+                                        sliced_gather_min)
+from repro.kernels.relax.config import default_interpret, resolve_interpret
+from repro.kernels.relax.fused import (fused_cost, fused_sliced_relax,
+                                       slice_run_groups)
+from repro.roofline import hlo_analysis as H
+
+INF = np.float32(np.inf)
+
+
+def _random_layout(widths, slice_rows, n, ocap, seed, *, tie_weights=False,
+                   fill_frac=0.6, overflow_frac=0.7):
+    """Random flat sliced-ELL buffer + overflow segment over n vertices.
+    Empty cells/entries carry w=+inf (never win); live entries point at
+    random in-neighbors."""
+    rng = np.random.default_rng(seed)
+    L = slice_rows * int(np.dot(widths, np.ones_like(widths)))
+    L = slice_rows * sum(widths)
+    flat_idx = rng.integers(0, n, size=L).astype(np.int32)
+    wpool = ([0.5, 1.0] if tie_weights
+             else rng.uniform(0.1, 2.0, size=8).tolist())
+    flat_w = rng.choice(np.asarray(wpool, np.float32), size=L)
+    flat_w = np.where(rng.random(L) < fill_frac, flat_w, INF).astype(
+        np.float32)
+    osrc = rng.integers(0, n, size=ocap).astype(np.int32)
+    odst = rng.integers(0, n, size=ocap).astype(np.int32)
+    ow = rng.choice(np.asarray(wpool, np.float32), size=ocap)
+    ow = np.where(rng.random(ocap) < overflow_frac, ow, INF).astype(
+        np.float32)
+    dist = np.where(rng.random(n) < 0.8,
+                    rng.uniform(0.0, 4.0, size=n), INF).astype(np.float32)
+    return (jnp.asarray(flat_idx), jnp.asarray(flat_w), jnp.asarray(osrc),
+            jnp.asarray(odst), jnp.asarray(ow), jnp.asarray(dist))
+
+
+def _ref(offers, flat_idx, flat_w, osrc, odst, ow, widths, slice_rows, n):
+    best, arg = sliced_gather_min(offers, flat_idx, flat_w,
+                                  widths=widths, slice_rows=slice_rows)
+    R = len(widths) * slice_rows
+    obest, oarg = overflow_min(offers, osrc, odst, ow, R)
+    return combine_lanes(best, arg, obest, oarg)
+
+
+CASES = [
+    # uniform small run (single remainder group)
+    ((2, 2, 2), 8, 20, 8, False),
+    # ragged: 40 equal-width slices at slice_rows=8 split into a 256-row
+    # main block plus a 64-row remainder
+    ((2,) * 40, 8, 300, 16, False),
+    # mixed widths: several runs, each its own tile shape
+    ((1, 1, 4, 4, 4, 2, 8), 16, 100, 8, False),
+    # pervasive ties across both lanes
+    ((2, 2, 4, 4), 16, 60, 32, True),
+]
+
+
+@pytest.mark.parametrize("widths,slice_rows,n,ocap,ties", CASES)
+def test_fused_matches_unfused_composition(widths, slice_rows, n, ocap, ties):
+    flat_idx, flat_w, osrc, odst, ow, dist = _random_layout(
+        widths, slice_rows, n, ocap, seed=hash((widths, ocap)) % 1000,
+        tie_weights=ties)
+    act = jnp.ones(n, jnp.bool_)
+    want_b, want_a = _ref(dist, flat_idx, flat_w, osrc, odst, ow,
+                          widths, slice_rows, n)
+    got_b, got_a = fused_sliced_relax(
+        dist, act, flat_idx, flat_w, osrc, odst, ow,
+        widths=widths, slice_rows=slice_rows, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want_b), np.asarray(got_b))
+    np.testing.assert_array_equal(np.asarray(want_a), np.asarray(got_a))
+
+
+@pytest.mark.parametrize("widths,slice_rows,n,ocap,ties", CASES[:2])
+def test_fused_bucket_mask_fuses_offer_masking(widths, slice_rows, n, ocap,
+                                               ties):
+    """The in-kernel ``where(active, dist, inf)`` must equal pre-masked
+    offers fed to the unfused path — random masks, including all-False."""
+    flat_idx, flat_w, osrc, odst, ow, dist = _random_layout(
+        widths, slice_rows, n, ocap, seed=7, tie_weights=ties)
+    rng = np.random.default_rng(11)
+    for mask in (rng.random(n) < 0.5, np.zeros(n, bool), np.ones(n, bool)):
+        act = jnp.asarray(mask)
+        offers = jnp.where(act, dist, jnp.float32(np.inf))
+        want_b, want_a = _ref(offers, flat_idx, flat_w, osrc, odst, ow,
+                              widths, slice_rows, n)
+        got_b, got_a = fused_sliced_relax(
+            dist, act, flat_idx, flat_w, osrc, odst, ow,
+            widths=widths, slice_rows=slice_rows, interpret=True)
+        np.testing.assert_array_equal(np.asarray(want_b), np.asarray(got_b))
+        np.testing.assert_array_equal(np.asarray(want_a), np.asarray(got_a))
+
+
+def test_fused_empty_and_zero_capacity_overflow():
+    """An all-tombstoned overflow lane contributes nothing; a ZERO-capacity
+    lane (static shape 0) must not break the kernel's uniform signature."""
+    widths, slice_rows, n = (2, 4), 8, 14
+    flat_idx, flat_w, osrc, odst, ow, dist = _random_layout(
+        widths, slice_rows, n, 8, seed=3)
+    act = jnp.ones(n, jnp.bool_)
+    dead = jnp.full_like(ow, np.inf)
+    want_b, want_a = _ref(dist, flat_idx, flat_w, osrc, odst, dead,
+                          widths, slice_rows, n)
+    got_b, got_a = fused_sliced_relax(
+        dist, act, flat_idx, flat_w, osrc, odst, dead,
+        widths=widths, slice_rows=slice_rows, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want_b), np.asarray(got_b))
+    np.testing.assert_array_equal(np.asarray(want_a), np.asarray(got_a))
+    z_b, z_a = fused_sliced_relax(
+        dist, act, flat_idx, flat_w,
+        jnp.zeros(0, jnp.int32), jnp.zeros(0, jnp.int32),
+        jnp.zeros(0, jnp.float32),
+        widths=widths, slice_rows=slice_rows, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want_b), np.asarray(z_b))
+    np.testing.assert_array_equal(np.asarray(want_a), np.asarray(z_a))
+
+
+def test_fused_overflow_lane_wins_and_ties_against_ell():
+    """Hand-built case: the overflow lane holds the min for one row, ties
+    the ELL lane on another — the tie must break to the smaller src id
+    ACROSS lanes, exactly like combine_lanes."""
+    widths, slice_rows, n = (2,), 8, 8
+    dist = jnp.asarray(np.zeros(n, np.float32))
+    flat_idx = np.zeros(16, np.int32)
+    flat_w = np.full(16, INF, np.float32)
+    # row 1 via ELL: offer from src 5, w=1.0
+    flat_idx[2], flat_w[2] = 5, 1.0
+    # row 2 via ELL: offer from src 6, w=2.0
+    flat_idx[4], flat_w[4] = 6, 2.0
+    osrc = np.asarray([7, 3], np.int32)
+    odst = np.asarray([1, 2], np.int32)
+    ow = np.asarray([0.5, 2.0], np.float32)   # row1: coo wins; row2: tie
+    act = jnp.ones(n, jnp.bool_)
+    b, a = fused_sliced_relax(
+        dist, act, jnp.asarray(flat_idx), jnp.asarray(flat_w),
+        jnp.asarray(osrc), jnp.asarray(odst), jnp.asarray(ow),
+        widths=widths, slice_rows=slice_rows, interpret=True)
+    b, a = np.asarray(b), np.asarray(a)
+    assert b[1] == np.float32(0.5) and a[1] == 7     # overflow strictly wins
+    assert b[2] == np.float32(2.0) and a[2] == 3     # tie -> smaller src id
+
+    want_b, want_a = _ref(dist, jnp.asarray(flat_idx), jnp.asarray(flat_w),
+                          jnp.asarray(osrc), jnp.asarray(odst),
+                          jnp.asarray(ow), widths, slice_rows, n)
+    np.testing.assert_array_equal(np.asarray(want_b), b)
+    np.testing.assert_array_equal(np.asarray(want_a), a)
+
+
+def test_slice_run_groups_tiling_rules():
+    """Run grouping: equal-width runs merge, split at multiples of 256 rows,
+    and every group's row count divides by min(256, rows) (the pallas grid
+    divisibility requirement)."""
+    for widths, sr in [((2,) * 40, 8), ((1, 1, 4, 4, 4, 2, 8), 16),
+                       ((4,), 512), ((2, 2), 256)]:
+        groups = slice_run_groups(widths, sr)
+        assert sum(c for _, c in groups) == len(widths)
+        ks = [k for k, _ in groups]
+        for (k1, c1), (k2, c2) in zip(groups, groups[1:]):
+            if k1 == k2:   # a split run: first part must be the main block
+                assert (sr * c1) % 256 == 0
+        for k, cnt in groups:
+            rows_g = sr * cnt
+            assert rows_g % min(256, rows_g) == 0
+        assert ks == [k for k, _ in groups]
+    # all-settled-on-one-width, run length a multiple of the 256-row block:
+    # ONE dense group, no remainder
+    groups = slice_run_groups((4,) * 64, 8)
+    assert groups == [(4, 64)]
+    # ...and with a ragged tail: main block + sub-256-row remainder
+    groups = slice_run_groups((4,) * 40, 8)
+    assert groups == [(4, 32), (4, 8)]
+
+
+def test_interpret_default_is_unified():
+    """Satellite fix: both kernel entry points resolve the SAME platform
+    default — interpret everywhere except TPU (kernels/relax/config.py)."""
+    on_tpu = jax.default_backend() == "tpu"
+    assert default_interpret() == (not on_tpu)
+    assert resolve_interpret(None) == (not on_tpu)
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+
+
+def test_fused_roofline_model_matches_compiled_hlo():
+    """Flop/byte validation (ISSUE acceptance): the analytic model the
+    pallas_call's CostEstimate claims must agree with the compiled
+    interpret-mode HLO within an order of magnitude, and the kernel must
+    sit in the memory-bound regime (low arithmetic intensity)."""
+    widths, slice_rows, n, ocap = (2,) * 40, 8, 300, 16
+    flat_idx, flat_w, osrc, odst, ow, dist = _random_layout(
+        widths, slice_rows, n, ocap, seed=5)
+    act = jnp.ones(n, jnp.bool_)
+
+    @jax.jit
+    def wave(dist, act, flat_idx, flat_w, osrc, odst, ow):
+        return fused_sliced_relax(
+            dist, act, flat_idx, flat_w, osrc, odst, ow,
+            widths=widths, slice_rows=slice_rows, interpret=True)
+
+    comp = wave.lower(dist, act, flat_idx, flat_w, osrc, odst, ow).compile()
+    cost = H.analyze_text(comp.as_text())
+    model = fused_cost(widths, slice_rows, n, ocap)
+    assert cost.flops > 0 and cost.hbm_bytes > 0
+    # interpret mode emulates the kernel with real jax ops, so the walker
+    # sees the true arithmetic; band is loose (gathers don't count flops,
+    # XLA fuses the byte traffic)
+    assert model["flops"] / 20 <= cost.flops <= model["flops"] * 20, (
+        cost.flops, model)
+    assert model["intensity"] < 8.0    # memory-bound, far below any ridge
