@@ -748,7 +748,76 @@ def serving(sink: C.CsvSink, small: bool) -> None:
               identical=True)
 
 
+def obs_overhead(sink: C.CsvSink, small: bool) -> None:
+    """Observability overhead contract (DESIGN.md §10.4): the same
+    power-law stream ingested with the telemetry layer off and on, passes
+    interleaved so scheduler drift hits both variants equally.  In-run
+    asserts pin the §10 invariants — identical (dist, parent) trees and
+    bit-identical rounds/messages via ``metrics_snapshot()`` (counters
+    must not perturb the computation), and every span count equal to its
+    engine counter.  The regression gate (benchmarks/check_regression.py)
+    holds instrumented throughput at >= 0.95x uninstrumented."""
+    import jax
+    from repro.graphs import generators as gen
+
+    n = (1 << 10) if small else (1 << 11)
+    m = 4 * n
+    nv, src, dst, w = gen.power_law_hubs(n, m, n_hubs=4, seed=31,
+                                         orientation="in")
+    source = int(gen.top_in_degree_sources(nv, dst)[0])
+    log = C.stream_for(C.Dataset("plaw", nv, src, dst, w,
+                                 np.asarray([source])),
+                       window_frac=1 / 3, delta=0.3,
+                       query_every=max(1, len(src) // 12))
+
+    def mk(obs_on):
+        return SSSPDelEngine(EngineConfig(
+            num_vertices=nv, edge_capacity=m + 64, source=source,
+            relax_backend="sliced", observability=obs_on))
+
+    best = {False: 0.0, True: 0.0}
+    final = {}
+    for _ in range(3):                      # 1 warm + best-of-2 timed
+        for obs_on in (False, True):        # interleaved passes
+            eng = mk(obs_on)
+            t0 = time.perf_counter()
+            eng.ingest_log(log)
+            jax.block_until_ready(eng.state.sssp.dist)
+            eps = len(log) / (time.perf_counter() - t0)
+            if eps > best[obs_on]:
+                best[obs_on], final[obs_on] = eps, eng
+    for obs_on in (False, True):
+        eng = final[obs_on]
+        snap = eng.metrics_snapshot()
+        sink.emit("obs_overhead", dataset="plaw", n=nv, edges=m,
+                  backend="sliced", observability=obs_on,
+                  events=len(log), events_per_s=round(best[obs_on], 1),
+                  epochs=eng.n_epochs, rounds=snap["rounds"],
+                  messages=snap["messages"],
+                  spans=sum(snap["spans"].values()))
+
+    # §10 invariants on the benchmark stream: telemetry must be free of
+    # algorithmic effect and internally consistent
+    q_off, q_on = final[False].query(), final[True].query()
+    np.testing.assert_array_equal(q_off.dist, q_on.dist)
+    np.testing.assert_array_equal(q_off.parent, q_on.parent)
+    on = final[True]
+    snap = on.metrics_snapshot()
+    assert int(snap["rounds"]) == int(on.n_rounds)
+    assert int(snap["messages"]) == int(on.n_messages)
+    assert int(final[False].n_rounds) == int(on.n_rounds)
+    sp, ct = snap["spans"], snap["counters"]
+    for kind, name in (("add_epoch", "add_epochs"),
+                       ("del_epoch", "del_epochs"),
+                       ("drain", "drains"), ("query", "queries")):
+        assert sp.get(kind, 0) == ct.get(name, 0), (kind, sp, ct)
+    _check_oracle(on, sink, "obs_overhead_oracle")
+    sink.emit("obs_overhead_summary", backend="sliced",
+              on_vs_off=round(best[True] / max(best[False], 1e-9), 3),
+              identical=True)
+
+
 ALL = [table2_static_baseline, fig1_query_latency, fig2_latency_over_time,
        fig3_source_selection, fig4_stability, fig5_throughput,
        fig6_batch_bsp, backend_shootout, hub_shootout, bucket_shootout,
-       dist_engine, serving]
+       dist_engine, serving, obs_overhead]

@@ -30,6 +30,11 @@ Gates (per delta value found in the section):
     layout, one fused epoch per batch instead of S), with the per-lane
     bit-parity record (``serving_summary.identical``) present and true and
     the latency/stability metric fields present on every batched row.
+  * obs_overhead — instrumented ingest (observability on) must hold
+    >= 0.95x the uninstrumented throughput on the same stream (DESIGN.md
+    §10.4: lazy device counters + host-side spans stay out of the epoch
+    path), with the bit-identity record (``obs_overhead_summary.identical``)
+    present and true.
   * bucket_shootout — the lazy bucketed schedule must hold >= 2.0x the
     eager rounds schedule's events/s on the delta=0.5 ER stream for every
     backend (DESIGN.md §9: the round tax), with the final-state parity
@@ -45,7 +50,7 @@ import json
 import sys
 
 DEFAULT_SECTIONS = ("backend_shootout", "dist_engine", "hub_shootout",
-                    "bucket_shootout", "serving")
+                    "bucket_shootout", "serving", "obs_overhead")
 
 
 def _rows(records: list[dict], bench: str) -> list[dict]:
@@ -238,11 +243,34 @@ def gate_bucket_shootout(records: list[dict]) -> list[str]:
     return errors
 
 
+def gate_obs_overhead(records: list[dict]) -> list[str]:
+    errors: list[str] = []
+    rows = _rows(records, "obs_overhead")
+    summaries = _rows(records, "obs_overhead_summary")
+    if not rows or not summaries:
+        return ["obs_overhead: no records found"]
+    by = _by(rows, "observability")
+    for s in summaries:
+        if str(s.get("identical")) != "True":
+            errors.append(f"obs_overhead: bit-identity record missing or "
+                          f"false: identical={s.get('identical')}")
+    # instrumented ingest must stay within 5% of uninstrumented (DESIGN.md
+    # §10.4); the rounds/messages bit-identity itself is asserted in-run
+    ratio = _ratio_gate(errors, "obs_overhead on/off ingest",
+                        float(by[(True,)]["events_per_s"]),
+                        float(by[(False,)]["events_per_s"]),
+                        floor=0.95)
+    print(f"obs_overhead: instrumented/uninstrumented ingest {ratio:.2f}x, "
+          f"identical={[str(s.get('identical')) for s in summaries]}")
+    return errors
+
+
 GATES = {
     "backend_shootout": gate_backend_shootout,
     "bucket_shootout": gate_bucket_shootout,
     "dist_engine": gate_dist_engine,
     "hub_shootout": gate_hub_shootout,
+    "obs_overhead": gate_obs_overhead,
     "serving": gate_serving,
 }
 

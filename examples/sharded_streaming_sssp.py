@@ -31,6 +31,13 @@ Serving-layer trace flags (DESIGN.md §8): ``--record-trace PATH`` saves
 the generated workload; ``--replay-trace PATH`` replays a recorded trace
 through the sharded engine + metrics harness (missing/incompatible paths
 exit with code 2).
+
+Observability flags (DESIGN.md §10): ``--trace-out PATH`` writes the
+engine's span trace as Chrome trace-event JSON (loads in Perfetto),
+``--log-json PATH`` writes spans + the final ``metrics_snapshot`` as
+JSONL; either enables the engine's counter registry / flight recorder,
+and a nonexistent parent directory exits with code 2.  ``--buckets``
+switches both engines to the bucketed delta-stepping wave schedule.
 """
 import argparse
 import time
@@ -45,7 +52,10 @@ from repro.core.engine import RELAX_BACKENDS, EngineConfig, SSSPDelEngine
 from repro.graphs import generators as gen
 from repro.graphs import partition as part_mod
 from repro.graphs import window as win
+from repro.obs import out_path_or_exit
 from repro.serving import TraceRecorder, load_trace_or_exit, replay_trace
+
+from streaming_sssp import add_obs_flags, dump_obs
 
 
 def main():
@@ -71,7 +81,17 @@ def main():
                    help="replay a recorded trace through the sharded "
                         "engine and report the serving metrics "
                         "(unknown paths exit 2)")
+    p.add_argument("--buckets", action="store_true",
+                   help="bucketed delta-stepping wave schedule "
+                        "(core/buckets.py, DESIGN.md §9) on both engines")
+    add_obs_flags(p)
     args = p.parse_args()
+    # fail fast on unwritable observability destinations (exit 2)
+    for path in (args.trace_out, args.log_json):
+        if path:
+            out_path_or_exit(path)
+    obs_on = bool(args.trace_out or args.log_json)
+    schedule = "buckets" if args.buckets else "rounds"
 
     if args.replay_trace:
         trace = load_trace_or_exit(args.replay_trace)
@@ -85,11 +105,13 @@ def main():
             n, trace.dst[trace.kind == ev.ADD].astype(np.int64))[0])
         eng = ShardedSSSPDelEngine(ShardedEngineConfig(
             n, epp, source, exchange=args.exchange,
-            relax_backend=args.backend))
+            relax_backend=args.backend, wave_schedule=schedule,
+            observability=obs_on))
         report = replay_trace(eng, trace)
         print(f"trace: {args.replay_trace} source={source} "
-              f"partitions={parts}")
+              f"partitions={parts} schedule={schedule}")
         print(report.summary())
+        dump_obs(eng, args)
         return
 
     if args.hubs:
@@ -120,7 +142,8 @@ def main():
     epp = int(len(src) * 1.3) // max(parts // 2, 1) + 64
     eng = ShardedSSSPDelEngine(
         ShardedEngineConfig(n, epp, source, exchange=args.exchange,
-                            relax_backend=args.backend),
+                            relax_backend=args.backend,
+                            wave_schedule=schedule, observability=obs_on),
         relabel=relabel)
     lat, stab = [], []
     t0 = time.perf_counter()
@@ -140,10 +163,13 @@ def main():
     print(f"partition fill (live edges/shard): min={fill.min()} "
           f"max={fill.max()} imbalance={fill.max()/max(fill.mean(), 1):.2f}x")
 
+    dump_obs(eng, args)
+
     # cross-check: the sharded run must equal the single-device engine
     # running the same relaxation backend
     ref = SSSPDelEngine(EngineConfig(n, int(len(src) * 1.3) + 64, source,
-                                     relax_backend=args.backend))
+                                     relax_backend=args.backend,
+                                     wave_schedule=schedule))
     ref.ingest_log(log)
     q_ref, q = ref.query(), eng.query()
     np.testing.assert_array_equal(q_ref.dist, q.dist)

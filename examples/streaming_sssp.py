@@ -14,6 +14,16 @@ Serving-layer trace flags (DESIGN.md §8):
     # replay a recorded trace through the engine + metrics harness
     # (a missing/incompatible trace path exits with code 2)
     ... streaming_sssp.py --replay-trace /tmp/stream.trace
+
+Observability flags (DESIGN.md §10) — either enables the engine's span
+tracer / counter registry / flight recorder:
+
+    # Chrome trace-event JSON of every epoch/drain/query span (Perfetto)
+    ... streaming_sssp.py --trace-out /tmp/stream.trace.json
+    # JSONL spans + a final metrics_snapshot line
+    ... streaming_sssp.py --log-json /tmp/stream.jsonl
+
+(a nonexistent parent directory for either path exits with code 2)
 """
 import argparse
 import time
@@ -25,8 +35,31 @@ from repro.core.baseline import ReMoBaseline
 from repro.core.engine import EngineConfig, SSSPDelEngine
 from repro.graphs import generators as gen
 from repro.graphs import window as win
+from repro.obs import out_path_or_exit, write_log_jsonl
 from repro.serving import (ServingTrace, TraceRecorder, load_trace_or_exit,
                            replay_trace)
+
+
+def add_obs_flags(p: argparse.ArgumentParser) -> None:
+    """The shared --trace-out/--log-json flags (both examples)."""
+    p.add_argument("--trace-out", metavar="PATH",
+                   help="write the engine span trace as Chrome trace-event "
+                        "JSON (loads in Perfetto; a missing parent "
+                        "directory exits 2)")
+    p.add_argument("--log-json", metavar="PATH",
+                   help="write spans + the final metrics_snapshot as JSONL "
+                        "(a missing parent directory exits 2)")
+
+
+def dump_obs(eng, args) -> None:
+    """Write the requested observability artifacts for a finished engine."""
+    if args.trace_out:
+        eng.obs.tracer.save_chrome(args.trace_out)
+        n_ev = sum(eng.obs.tracer.span_counts().values())
+        print(f"wrote chrome trace: {args.trace_out} ({n_ev} events)")
+    if args.log_json:
+        write_log_jsonl(eng, args.log_json)
+        print(f"wrote span/metrics JSONL: {args.log_json}")
 
 
 def trace_bounds(trace: ServingTrace) -> tuple[int, int]:
@@ -56,7 +89,13 @@ def main():
     p.add_argument("--replay-trace", metavar="PATH",
                    help="replay a recorded trace through the engine and "
                         "report the serving metrics (unknown paths exit 2)")
+    add_obs_flags(p)
     args = p.parse_args()
+    # fail fast on unwritable observability destinations (exit 2)
+    for path in (args.trace_out, args.log_json):
+        if path:
+            out_path_or_exit(path)
+    obs_on = bool(args.trace_out or args.log_json)
 
     if args.replay_trace:
         trace = load_trace_or_exit(args.replay_trace)
@@ -65,10 +104,12 @@ def main():
         source = int(gen.top_in_degree_sources(
             n, trace.dst[trace.kind == ev.ADD].astype(np.int64))[0])
         eng = SSSPDelEngine(EngineConfig(n, cap, source,
-                                         relax_backend=args.backend))
+                                         relax_backend=args.backend,
+                                         observability=obs_on))
         report = replay_trace(eng, trace)
         print(f"trace: {args.replay_trace} source={source}")
         print(report.summary())
+        dump_obs(eng, args)
         return
 
     if args.power_law:
@@ -93,7 +134,8 @@ def main():
 
     cap = int(len(src) * 1.3) + 64
     eng = SSSPDelEngine(EngineConfig(n, cap, source,
-                                     relax_backend=args.backend))
+                                     relax_backend=args.backend,
+                                     observability=obs_on))
     lat, stab = [], []
     t0 = time.perf_counter()
 
@@ -115,6 +157,7 @@ def main():
     print(f"ingestion: {len(log)/wall:.0f} events/s "
           f"({eng.n_epochs} epochs, {eng.n_rounds} message waves, "
           f"{eng.n_adds} adds, {eng.n_dels} dels)")
+    dump_obs(eng, args)
 
 
 if __name__ == "__main__":

@@ -215,6 +215,17 @@ class RelaxBackend:
         """Device-side occupancy invariants (diagnostics/tests)."""
         return {}
 
+    def layout_counters(self) -> dict[str, int]:
+        """Monotone host-side layout event totals for the obs layer
+        (DESIGN.md §10): rebuild count and overflow-lane placements so far.
+        Engines diff successive calls (``EngineObs.note_layout``); totals
+        may reset when the "auto" policy swaps layouts — deltas clamp.
+        Works for all three backends: segment has no planner (zeros), the
+        ELL-family planners carry ``rebuilds``, sliced also ``spills``."""
+        pl = getattr(self, "planner", None)
+        return {"rebuilds": int(getattr(pl, "rebuilds", 0)),
+                "overflow_hits": int(getattr(pl, "spills", 0))}
+
 
 def make_backend(name: str, cfg: Any, *, num_vertices: int | None = None,
                  use_kernel: bool = False, interpret: bool = True
@@ -300,6 +311,19 @@ class ShardedBackend:
     def update_del_arrays(self, new_vals: tuple) -> None:
         """Fold the del epoch's mutated layout arrays back into the
         coordinator state (order matches ``del_mutated``)."""
+
+    def layout_counters(self) -> dict[str, int]:
+        """Sharded twin of ``RelaxBackend.layout_counters``.  Rebuilds are
+        coupled (any shard's overflow rebuilds ALL shards, so every planner
+        advances together) — the max over planners counts global rebuild
+        EVENTS, matching the single-device figure.  Overflow-lane
+        placements are genuinely per-partition and sum."""
+        pls = getattr(self, "planners", None) or []
+        return {
+            "rebuilds": max((int(getattr(p, "rebuilds", 0)) for p in pls),
+                            default=0),
+            "overflow_hits": sum(int(getattr(p, "spills", 0)) for p in pls),
+        }
 
 
 def make_sharded_backend(name: str, cfg: Any, ds: Any,

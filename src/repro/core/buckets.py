@@ -68,6 +68,15 @@ def empty_pending(num_vertices: int,
                         pull=jnp.zeros(shape, jnp.bool_))
 
 
+def pending_occupancy(pend: PendingState) -> tuple[jax.Array, jax.Array]:
+    """Lazy device occupancy of the pending masks — (push, pull) counts as
+    i32 device scalars, or [S] per-lane vectors on a batched engine.  Fed
+    to the obs counter registry at drain entry (DESIGN.md §10.1): no host
+    sync, just one cheap eager reduction the registry accumulates."""
+    return (jnp.sum(pend.push.astype(jnp.int32), axis=-1),
+            jnp.sum(pend.pull.astype(jnp.int32), axis=-1))
+
+
 def bucket_limit(cur: jax.Array, bucket_width: float) -> jax.Array:
     """Exclusive upper bound of the lowest nonempty bucket given the minimum
     pending distance ``cur``.  ``bucket_width=inf`` degenerates to one

@@ -80,7 +80,8 @@ from repro.core import ingest
 from repro.core.backends.base import SHARDED_BACKENDS
 from repro.core.distributed import (DistConfig, DistributedSSSP,
                                     _SHARD_MAP_KW, _shard_map,
-                                    inactive_dst_layout)
+                                    inactive_dst_layout,
+                                    per_partition_occupancy)
 from repro.core.state import INF, NO_PARENT
 from repro.core.stream import StreamEngineBase
 from repro.launch import mesh as mesh_mod
@@ -125,12 +126,19 @@ class ShardedEngineConfig:
     bucket_width: float = 1.0
     # batched multi-source serving (DESIGN.md §8); None = single-source
     sources: tuple[int, ...] | None = None
+    # observability (DESIGN.md §10) — same contract as EngineConfig; the
+    # sharded registry folds per-partition [P] vectors, no new collectives
+    observability: bool = False
+    obs_flight_capacity: int = 128
 
     def __post_init__(self):
         bk_mod.validate_backend_config(self)
         if self.exchange not in EXCHANGES:
             raise ValueError(f"unknown exchange {self.exchange!r}; valid: "
                              f"{EXCHANGES}")
+        if self.obs_flight_capacity < 1:
+            raise ValueError(f"obs_flight_capacity must be >= 1; got "
+                             f"{self.obs_flight_capacity}")
         if self.sources is not None:
             self.sources = tuple(int(s) for s in self.sources)
             bad = [s for s in self.sources
@@ -151,7 +159,9 @@ class ShardedSSSPDelEngine(StreamEngineBase):
 
     def __init__(self, cfg: ShardedEngineConfig, mesh: Mesh | None = None,
                  relabel: tuple[np.ndarray, np.ndarray, int] | None = None):
-        super().__init__(sources=cfg.sources)
+        super().__init__(sources=cfg.sources,
+                         observability=cfg.observability,
+                         flight_capacity=cfg.obs_flight_capacity)
         self.cfg = cfg
         if mesh is None:
             mesh = mesh_mod._mk((len(jax.devices()),), ("graph",))
@@ -252,29 +262,39 @@ class ShardedSSSPDelEngine(StreamEngineBase):
                               plan.src, plan.dst, plan.w))
         if not parts:
             return
-        self.bk.stage_adds(plans)   # layout patches (or coupled rebuild)
         gslot, bsrc, bdst, bw = (np.concatenate(x) for x in zip(*parts))
         n_acc = len(gslot)
-        gslot, bsrc, bdst, bw = ingest.pad_pow2(
-            gslot.astype(np.int32), bsrc, bdst, bw)
-        add_epoch, _, _ = self._epoch_pair()
-        if self.bucketed:
-            # deferred settle (DESIGN.md §9): patch the pools, enqueue the
-            # inserted tails as push obligations, no relaxation
-            (self.esrc, self.edst, self.ew, self.eact,
-             self._push) = add_epoch(
-                self.dist, self.esrc, self.edst, self.ew, self.eact,
-                self._push, jnp.asarray(gslot), jnp.asarray(bsrc),
-                jnp.asarray(bdst), jnp.asarray(bw))
-        else:
-            (self.dist, self.parent, self.esrc, self.edst, self.ew,
-             self.eact, self._dev_rounds, self._dev_messages) = add_epoch(
-                self.dist, self.parent, self.esrc, self.edst, self.ew,
-                self.eact, *self.bk.arrays(),
-                jnp.asarray(gslot), jnp.asarray(bsrc), jnp.asarray(bdst),
-                jnp.asarray(bw), self._dev_rounds, self._dev_messages)
-        self.n_adds += n_acc
-        self.n_epochs += 1
+        with self.obs.epoch("add_epoch", events=n_acc):
+            self.bk.stage_adds(plans)  # layout patches (or coupled rebuild)
+            self.obs.note_layout(self.bk.layout_counters())
+            if self.obs.enabled:
+                # host-planned figures (§10.1): frontier = distinct inserted
+                # tails; adds_per_part = a [P] numpy tally — no device work
+                self.obs.counters.inc("frontier", len(np.unique(bsrc)))
+                per_part = np.zeros(self.P, np.int64)
+                for p, plan in plans:
+                    per_part[p] = len(plan.slots)
+                self.obs.counters.inc("adds_per_part", per_part)
+            gslot, bsrc, bdst, bw = ingest.pad_pow2(
+                gslot.astype(np.int32), bsrc, bdst, bw)
+            add_epoch, _, _ = self._epoch_pair()
+            if self.bucketed:
+                # deferred settle (DESIGN.md §9): patch the pools, enqueue
+                # the inserted tails as push obligations, no relaxation
+                (self.esrc, self.edst, self.ew, self.eact,
+                 self._push) = add_epoch(
+                    self.dist, self.esrc, self.edst, self.ew, self.eact,
+                    self._push, jnp.asarray(gslot), jnp.asarray(bsrc),
+                    jnp.asarray(bdst), jnp.asarray(bw))
+            else:
+                (self.dist, self.parent, self.esrc, self.edst, self.ew,
+                 self.eact, self._dev_rounds, self._dev_messages) = add_epoch(
+                    self.dist, self.parent, self.esrc, self.edst, self.ew,
+                    self.eact, *self.bk.arrays(),
+                    jnp.asarray(gslot), jnp.asarray(bsrc), jnp.asarray(bdst),
+                    jnp.asarray(bw), self._dev_rounds, self._dev_messages)
+            self.n_adds += n_acc
+            self.n_epochs += 1
 
     # ------------------------------------------------------------------ dels
     def _ingest_dels(self, batch: ev.EventBatch) -> None:
@@ -294,40 +314,48 @@ class ShardedSSSPDelEngine(StreamEngineBase):
                 continue
             gslot, psrc, pdst = (np.concatenate(x) for x in zip(*parts))
             n_del = len(gslot)
-            gslot, psrc, pdst = ingest.pad_pow2(
-                gslot.astype(np.int32), psrc, pdst)
-            _, del_epoch, _ = self._epoch_pair()
-            # the layout tombstone runs INSIDE the fused epoch (before the
-            # recompute wave; the seed reads only the parent forest) — a
-            # staged patch would cost one extra dispatch per deletion, and
-            # deletions are per-event in the paper-faithful mode
-            n_mut = len(type(self.bk).del_mutated)
-            if self.bucketed:
-                # invalidation-only epoch: seed + mark + SetToInfinity +
-                # tombstone; the recompute pull and push waves are deferred
-                # into the pending masks (DESIGN.md §9)
-                out = del_epoch(
-                    self.dist, self.parent, self.eact, *self.bk.arrays(),
-                    self._push, self._pull, jnp.asarray(gslot),
-                    jnp.asarray(psrc), jnp.asarray(pdst),
-                    self._dev_rounds, self._dev_messages)
-                self.dist, self.parent, self.eact = out[:3]
-                if n_mut:
-                    self.bk.update_del_arrays(out[3:3 + n_mut])
-                (self._push, self._pull, self._dev_rounds,
-                 self._dev_messages) = out[3 + n_mut:]
-            else:
-                out = del_epoch(
-                    self.dist, self.parent, self.esrc, self.edst, self.ew,
-                    self.eact, *self.bk.arrays(),
-                    jnp.asarray(gslot), jnp.asarray(psrc),
-                    jnp.asarray(pdst), self._dev_rounds, self._dev_messages)
-                self.dist, self.parent, self.eact = out[:3]
-                if n_mut:
-                    self.bk.update_del_arrays(out[3:3 + n_mut])
-                self._dev_rounds, self._dev_messages = out[3 + n_mut:]
-            self.n_dels += n_del
-            self.n_epochs += 1
+            with self.obs.epoch("del_epoch", events=n_del):
+                if self.obs.enabled:
+                    per_part = np.zeros(self.P, np.int64)
+                    for g, _, _ in parts:
+                        per_part[int(g[0] // self.epp)] = len(g)
+                    self.obs.counters.inc("dels_per_part", per_part)
+                gslot, psrc, pdst = ingest.pad_pow2(
+                    gslot.astype(np.int32), psrc, pdst)
+                _, del_epoch, _ = self._epoch_pair()
+                # the layout tombstone runs INSIDE the fused epoch (before
+                # the recompute wave; the seed reads only the parent forest)
+                # — a staged patch would cost one extra dispatch per
+                # deletion, and deletions are per-event in the
+                # paper-faithful mode
+                n_mut = len(type(self.bk).del_mutated)
+                if self.bucketed:
+                    # invalidation-only epoch: seed + mark + SetToInfinity +
+                    # tombstone; the recompute pull and push waves are
+                    # deferred into the pending masks (DESIGN.md §9)
+                    out = del_epoch(
+                        self.dist, self.parent, self.eact, *self.bk.arrays(),
+                        self._push, self._pull, jnp.asarray(gslot),
+                        jnp.asarray(psrc), jnp.asarray(pdst),
+                        self._dev_rounds, self._dev_messages)
+                    self.dist, self.parent, self.eact = out[:3]
+                    if n_mut:
+                        self.bk.update_del_arrays(out[3:3 + n_mut])
+                    (self._push, self._pull, self._dev_rounds,
+                     self._dev_messages) = out[3 + n_mut:]
+                else:
+                    out = del_epoch(
+                        self.dist, self.parent, self.esrc, self.edst,
+                        self.ew, self.eact, *self.bk.arrays(),
+                        jnp.asarray(gslot), jnp.asarray(psrc),
+                        jnp.asarray(pdst), self._dev_rounds,
+                        self._dev_messages)
+                    self.dist, self.parent, self.eact = out[:3]
+                    if n_mut:
+                        self.bk.update_del_arrays(out[3:3 + n_mut])
+                    self._dev_rounds, self._dev_messages = out[3 + n_mut:]
+                self.n_dels += n_del
+                self.n_epochs += 1
 
     # ----------------------------------------------------------------- query
     def drain(self) -> None:
@@ -337,13 +365,27 @@ class ShardedSSSPDelEngine(StreamEngineBase):
         contract as the single-device ``SSSPDelEngine.drain``."""
         if not self.bucketed:
             return
-        _, _, drain_epoch = self._epoch_pair()
-        (self.dist, self.parent, self._dev_rounds,
-         self._dev_messages) = drain_epoch(
-            self.dist, self.parent, self.esrc, self.edst, self.ew, self.eact,
-            *self.bk.arrays(), self._push, self._pull,
-            self._dev_rounds, self._dev_messages)
-        self._push = self._pull = self._zero_pend
+        if self.obs.enabled:
+            # bucket occupancy at drain entry (lazy shard-local sums, §10.1):
+            # [P] per-partition row counts, or [S] per-lane totals batched —
+            # accumulated on device, drained with the registry snapshot
+            self.obs.counters.add("pending_push", per_partition_occupancy(
+                self._push, self.P, self.npp))
+            self.obs.counters.add("pending_pull", per_partition_occupancy(
+                self._pull, self.P, self.npp))
+        with self.obs.epoch("drain"):
+            _, _, drain_epoch = self._epoch_pair()
+            r0 = self._dev_rounds
+            (self.dist, self.parent, self._dev_rounds,
+             self._dev_messages) = drain_epoch(
+                self.dist, self.parent, self.esrc, self.edst, self.ew,
+                self.eact, *self.bk.arrays(), self._push, self._pull,
+                self._dev_rounds, self._dev_messages)
+            self._push = self._pull = self._zero_pend
+            if self.obs.enabled:
+                # waves this drain spent — a lazy device delta of the same
+                # counter n_rounds reads (bit-consistent by construction)
+                self.obs.counters.add("drain_waves", self._dev_rounds - r0)
 
     def _snapshot(self, lane: int | None) -> tuple[np.ndarray, np.ndarray]:
         """Sharded device->host readback plus the inverse relabeling, if
@@ -371,17 +413,18 @@ class ShardedSSSPDelEngine(StreamEngineBase):
         mirrors — no device readback for the pool) plus the padded
         dist/parent windows.  Backend layout state is rebuilt on restore,
         never serialized."""
-        self.drain()   # a checkpoint must capture a converged tree
-        return {
-            "src": np.concatenate([a.msrc for a in self.allocs]),
-            "dst": np.concatenate([a.mdst for a in self.allocs]),
-            "w": np.concatenate([a.mw for a in self.allocs]),
-            "active": np.concatenate([a.mactive for a in self.allocs]),
-            "dist": np.asarray(jax.device_get(self.dist)),
-            "parent": np.asarray(jax.device_get(self.parent)),
-            "source": np.asarray(self._source_pad),
-            "cursor": np.asarray(0),
-        }
+        with self.obs.epoch("checkpoint"):
+            self.drain()   # a checkpoint must capture a converged tree
+            return {
+                "src": np.concatenate([a.msrc for a in self.allocs]),
+                "dst": np.concatenate([a.mdst for a in self.allocs]),
+                "w": np.concatenate([a.mw for a in self.allocs]),
+                "active": np.concatenate([a.mactive for a in self.allocs]),
+                "dist": np.asarray(jax.device_get(self.dist)),
+                "parent": np.asarray(jax.device_get(self.parent)),
+                "source": np.asarray(self._source_pad),
+                "cursor": np.asarray(0),
+            }
 
     def restore(self, ckpt: dict[str, np.ndarray]) -> None:
         """Crash-restart from a ``checkpoint()`` snapshot taken by an engine
@@ -422,6 +465,8 @@ class ShardedSSSPDelEngine(StreamEngineBase):
             np.asarray(ckpt["parent"], np.int32), sh)
         self.bk.allocs = self.allocs
         self.bk.restore()
+        # the restore's layout rebuild is a real rebuild event (§10)
+        self.obs.note_layout(self.bk.layout_counters())
         # checkpoints are taken post-drain, so nothing was pending
         if self.bucketed:
             self._push = self._pull = self._zero_pend

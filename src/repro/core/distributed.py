@@ -63,6 +63,19 @@ def inactive_dst_layout(P: int, npp: int, epp: int) -> np.ndarray:
     return np.repeat(np.arange(P, dtype=np.int64) * npp, epp).astype(np.int32)
 
 
+def per_partition_occupancy(mask: jax.Array, P: int, npp: int) -> jax.Array:
+    """Live counts of a sharded bool vertex mask for the obs counter
+    registry (DESIGN.md §10.1): an [N] mask reshapes to (P, npp) and sums
+    shard-local rows — each partition reduces only the window it owns, no
+    collective, no host sync — yielding a [P] per-partition vector the
+    registry accumulates lazily.  A batched [S, N] mask reduces over the
+    vertex axis instead ([S] per-lane totals, folded through the existing
+    sharded-sum machinery — still no new collective pattern)."""
+    if mask.ndim == 2:
+        return jnp.sum(mask.astype(jnp.int32), axis=-1)
+    return jnp.sum(mask.astype(jnp.int32).reshape(P, npp), axis=-1)
+
+
 @dataclasses.dataclass(frozen=True)
 class DistConfig:
     num_vertices: int        # padded: divisible by P

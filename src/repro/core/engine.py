@@ -79,10 +79,18 @@ class EngineConfig:
     bucket_width: float = 1.0     # delta; inf = one bucket (plain converge)
     # batched multi-source serving (DESIGN.md §8); None = single-source
     sources: tuple[int, ...] | None = None
+    # observability (DESIGN.md §10): device-side counter registry + span
+    # tracer + flight recorder; off by default — the obs_overhead bench +
+    # check_regression gate hold instrumented ingest >= 0.95x uninstrumented
+    observability: bool = False
+    obs_flight_capacity: int = 128
 
     def __post_init__(self):
         # fail at construction with the valid set, not deep in layout init
         bk_mod.validate_backend_config(self)
+        if self.obs_flight_capacity < 1:
+            raise ValueError(f"obs_flight_capacity must be >= 1; got "
+                             f"{self.obs_flight_capacity}")
         if self.sources is not None:
             self.sources = tuple(int(s) for s in self.sources)
             bad = [s for s in self.sources
@@ -103,7 +111,9 @@ class SSSPDelEngine(StreamEngineBase):
     """
 
     def __init__(self, cfg: EngineConfig):
-        super().__init__(sources=cfg.sources)
+        super().__init__(sources=cfg.sources,
+                         observability=cfg.observability,
+                         flight_capacity=cfg.obs_flight_capacity)
         self.cfg = cfg
         self.alloc = ingest.SlotAllocator(cfg.edge_capacity, cfg.on_duplicate)
         self.state = GraphState.init(cfg.num_vertices, cfg.edge_capacity, cfg.source)
@@ -132,34 +142,45 @@ class SSSPDelEngine(StreamEngineBase):
         plan = self.alloc.plan_adds(batch.src, batch.dst, batch.w)
         if len(plan.slots) == 0:
             return
-        slots_p, src_p, dst_p, w_p = ingest.pad_pow2(
-            plan.slots, plan.src, plan.dst, plan.w)
-        edges = ingest.apply_adds(self.state.edges, jnp.asarray(slots_p),
-                                  jnp.asarray(src_p), jnp.asarray(dst_p),
-                                  jnp.asarray(w_p))
-        # Frontier = tails of the inserted edges (paper Listing 3: tail offers
-        # its distance to the head).  Relaxing from the tails delivers exactly
-        # those offers (plus no-op re-offers along other out-edges).
-        frontier = relax.frontier_from_vertices(
-            jnp.asarray(plan.src), self.cfg.num_vertices)
-        self.backend.apply_adds(plan, self.alloc)
-        if self._auto and getattr(self.backend, "blowup", False):
-            self._fallback_to_sliced()
-        if self.bucketed:
-            # deferred settle (DESIGN.md §9): record the push obligation and
-            # return — the drain delivers the offers bucket-by-bucket
-            self._pend = buckets.enqueue_push(self._pend, frontier,
-                                              self.state.sssp.dist)
-            self.state = dataclasses.replace(self.state, edges=edges)
-        else:
-            relax_fn = (self.backend.relax if self.sources is None
-                        else self.backend.relax_batched)
-            sssp, stats = relax_fn(self.state.sssp, edges, frontier)
-            self.state = dataclasses.replace(self.state, edges=edges,
-                                             sssp=sssp)
-            self._accumulate_relax(stats)
-        self.n_adds += len(plan.slots)
-        self.n_epochs += 1
+        with self.obs.epoch("add_epoch", events=len(plan.slots)):
+            slots_p, src_p, dst_p, w_p = ingest.pad_pow2(
+                plan.slots, plan.src, plan.dst, plan.w)
+            edges = ingest.apply_adds(self.state.edges, jnp.asarray(slots_p),
+                                      jnp.asarray(src_p), jnp.asarray(dst_p),
+                                      jnp.asarray(w_p))
+            # Frontier = tails of the inserted edges (paper Listing 3: tail
+            # offers its distance to the head).  Relaxing from the tails
+            # delivers exactly those offers (plus no-op re-offers along
+            # other out-edges).
+            frontier = relax.frontier_from_vertices(
+                jnp.asarray(plan.src), self.cfg.num_vertices)
+            self.backend.apply_adds(plan, self.alloc)
+            if self._auto and getattr(self.backend, "blowup", False):
+                self._fallback_to_sliced()
+            self.obs.note_layout(self.backend.layout_counters())
+            if self.obs.enabled:
+                # frontier = distinct inserted tails — the host plan already
+                # knows the figure the device mask encodes, so counting here
+                # costs no device dispatch in the hot ingest path (§10.4);
+                # the device-counter path carries the drain-side figures
+                # (drain_waves, pending occupancy) the epochs computed anyway
+                self.obs.counters.inc("frontier",
+                                      len(np.unique(plan.src)))
+            if self.bucketed:
+                # deferred settle (DESIGN.md §9): record the push obligation
+                # and return — the drain delivers the offers bucket-by-bucket
+                self._pend = buckets.enqueue_push(self._pend, frontier,
+                                                  self.state.sssp.dist)
+                self.state = dataclasses.replace(self.state, edges=edges)
+            else:
+                relax_fn = (self.backend.relax if self.sources is None
+                            else self.backend.relax_batched)
+                sssp, stats = relax_fn(self.state.sssp, edges, frontier)
+                self.state = dataclasses.replace(self.state, edges=edges,
+                                                 sssp=sssp)
+                self._accumulate_relax(stats)
+            self.n_adds += len(plan.slots)
+            self.n_epochs += 1
 
     def _fallback_to_sliced(self) -> None:
         """relax_backend="auto": the dense-ELL rebuild just reported hub
@@ -178,49 +199,55 @@ class SSSPDelEngine(StreamEngineBase):
             slots, psrc, pdst = self.alloc.plan_dels(gsrc, gdst)
             if len(slots) == 0:
                 continue
-            slots_p, psrc_p, pdst_p = ingest.pad_pow2(slots, psrc, pdst)
-            if self.bucketed:
-                # ONE fused dispatch: deactivate + seed + mark + invalidate,
-                # recomputation deferred to the drain (DESIGN.md §9).  The
-                # layout tombstones still stage as their own patch op.
-                self.backend.apply_dels(pdst_p, psrc_p)
-                fn = (buckets.lazy_delete if self.sources is None
-                      else buckets.lazy_delete_batched)
-                sssp, edges, self._pend, dstats = fn(
-                    self.state.sssp, self.state.edges, self._pend,
-                    jnp.asarray(psrc_p), jnp.asarray(pdst_p),
-                    jnp.asarray(slots_p),
-                    num_vertices=self.cfg.num_vertices,
-                    use_doubling=self.cfg.use_doubling)
-                self.state = dataclasses.replace(self.state, edges=edges,
-                                                 sssp=sssp)
-                self._accumulate_delete(dstats)
-                self.n_dels += len(slots)
-                self.n_epochs += 1
-                continue
-            # Epoch before the deletion is implicit: every prior batch ran to
-            # convergence.  Seed from the *pre-deletion* tree, then
-            # deactivate.  Batched lanes seed independently — whether a
-            # deleted edge was a tree edge depends on each lane's forest.
-            if self.sources is None:
-                seed = del_mod.deletion_seed_for_edges(
-                    self.state.sssp, jnp.asarray(psrc_p),
-                    jnp.asarray(pdst_p), self.cfg.num_vertices)
-                delete_fn = self.backend.delete
-            else:
-                seed = del_mod.deletion_seed_for_edges_batched(
-                    self.state.sssp, jnp.asarray(psrc_p),
-                    jnp.asarray(pdst_p), self.cfg.num_vertices)
-                delete_fn = self.backend.delete_batched
-            edges = ingest.apply_dels(self.state.edges, jnp.asarray(slots_p))
+            with self.obs.epoch("del_epoch", events=len(slots)):
+                self._del_group(slots, psrc, pdst)
+
+    def _del_group(self, slots: np.ndarray, psrc: np.ndarray,
+                   pdst: np.ndarray) -> None:
+        """One dispatched deletion epoch (one span, one flight record)."""
+        slots_p, psrc_p, pdst_p = ingest.pad_pow2(slots, psrc, pdst)
+        if self.bucketed:
+            # ONE fused dispatch: deactivate + seed + mark + invalidate,
+            # recomputation deferred to the drain (DESIGN.md §9).  The
+            # layout tombstones still stage as their own patch op.
             self.backend.apply_dels(pdst_p, psrc_p)
-            # Non-tree deletions (all-false seed) are a device no-op with
-            # zeroed stats — cheaper than syncing on bool(jnp.any(seed)).
-            sssp, dstats = delete_fn(self.state.sssp, edges, seed)
-            self.state = dataclasses.replace(self.state, edges=edges, sssp=sssp)
+            fn = (buckets.lazy_delete if self.sources is None
+                  else buckets.lazy_delete_batched)
+            sssp, edges, self._pend, dstats = fn(
+                self.state.sssp, self.state.edges, self._pend,
+                jnp.asarray(psrc_p), jnp.asarray(pdst_p),
+                jnp.asarray(slots_p),
+                num_vertices=self.cfg.num_vertices,
+                use_doubling=self.cfg.use_doubling)
+            self.state = dataclasses.replace(self.state, edges=edges,
+                                             sssp=sssp)
             self._accumulate_delete(dstats)
             self.n_dels += len(slots)
             self.n_epochs += 1
+            return
+        # Epoch before the deletion is implicit: every prior batch ran to
+        # convergence.  Seed from the *pre-deletion* tree, then
+        # deactivate.  Batched lanes seed independently — whether a
+        # deleted edge was a tree edge depends on each lane's forest.
+        if self.sources is None:
+            seed = del_mod.deletion_seed_for_edges(
+                self.state.sssp, jnp.asarray(psrc_p),
+                jnp.asarray(pdst_p), self.cfg.num_vertices)
+            delete_fn = self.backend.delete
+        else:
+            seed = del_mod.deletion_seed_for_edges_batched(
+                self.state.sssp, jnp.asarray(psrc_p),
+                jnp.asarray(pdst_p), self.cfg.num_vertices)
+            delete_fn = self.backend.delete_batched
+        edges = ingest.apply_dels(self.state.edges, jnp.asarray(slots_p))
+        self.backend.apply_dels(pdst_p, psrc_p)
+        # Non-tree deletions (all-false seed) are a device no-op with
+        # zeroed stats — cheaper than syncing on bool(jnp.any(seed)).
+        sssp, dstats = delete_fn(self.state.sssp, edges, seed)
+        self.state = dataclasses.replace(self.state, edges=edges, sssp=sssp)
+        self._accumulate_delete(dstats)
+        self.n_dels += len(slots)
+        self.n_epochs += 1
 
     # ----------------------------------------------------------------- query
     def drain(self) -> None:
@@ -231,13 +258,23 @@ class SSSPDelEngine(StreamEngineBase):
         query()'s readback."""
         if not self.bucketed:
             return
-        drain_fn = (self.backend.drain if self.sources is None
-                    else self.backend.drain_batched)
-        sssp, self._pend, stats = drain_fn(
-            self.state.sssp, self.state.edges, self._pend,
-            bucket_width=self.cfg.bucket_width)
-        self.state = dataclasses.replace(self.state, sssp=sssp)
-        self._accumulate_relax(stats)
+        if self.obs.enabled:
+            # bucket occupancy at drain entry (lazy device sums, §10.1);
+            # [S] per-lane vectors on a batched engine
+            occ_push, occ_pull = buckets.pending_occupancy(self._pend)
+            self.obs.counters.add("pending_push", occ_push)
+            self.obs.counters.add("pending_pull", occ_pull)
+        with self.obs.epoch("drain"):
+            drain_fn = (self.backend.drain if self.sources is None
+                        else self.backend.drain_batched)
+            sssp, self._pend, stats = drain_fn(
+                self.state.sssp, self.state.edges, self._pend,
+                bucket_width=self.cfg.bucket_width)
+            self.state = dataclasses.replace(self.state, sssp=sssp)
+            self._accumulate_relax(stats)
+            if self.obs.enabled:
+                # waves this drain spent (the §9 bucket pacing figure)
+                self.obs.counters.add("drain_waves", stats.rounds)
 
     def _snapshot(self, lane: int | None) -> tuple[np.ndarray, np.ndarray]:
         """Device->host readback (latency is timed by the base query());
@@ -255,14 +292,16 @@ class SSSPDelEngine(StreamEngineBase):
         the sharded writer used at scale).  Backend layout state is NOT
         serialized — it is a derived view, rebuilt from the pool on
         restore (the protocol's checkpoint-participation rule)."""
-        self.drain()   # a checkpoint must capture a converged tree
-        e, s = self.state.edges, self.state.sssp
-        return {
-            "src": np.asarray(e.src), "dst": np.asarray(e.dst),
-            "w": np.asarray(e.w), "active": np.asarray(e.active),
-            "dist": np.asarray(s.dist), "parent": np.asarray(s.parent),
-            "source": np.asarray(s.source), "cursor": np.asarray(self.state.cursor),
-        }
+        with self.obs.epoch("checkpoint"):
+            self.drain()   # a checkpoint must capture a converged tree
+            e, s = self.state.edges, self.state.sssp
+            return {
+                "src": np.asarray(e.src), "dst": np.asarray(e.dst),
+                "w": np.asarray(e.w), "active": np.asarray(e.active),
+                "dist": np.asarray(s.dist), "parent": np.asarray(s.parent),
+                "source": np.asarray(s.source),
+                "cursor": np.asarray(self.state.cursor),
+            }
 
     def restore(self, ckpt: dict[str, np.ndarray]) -> None:
         self.state = GraphState(
@@ -277,6 +316,8 @@ class SSSPDelEngine(StreamEngineBase):
             self.cfg.edge_capacity, self.cfg.on_duplicate,
             ckpt["src"], ckpt["dst"], ckpt["w"], ckpt["active"])
         self.backend.restore(self.alloc)
+        # the restore's layout rebuild is a real rebuild event (§10)
+        self.obs.note_layout(self.backend.layout_counters())
         # checkpoints are taken post-drain, so nothing was pending
         self._pend = buckets.empty_pending(
             self.cfg.num_vertices,

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import events as ev
+from repro.obs import EngineObs
 
 
 @dataclasses.dataclass
@@ -55,7 +56,13 @@ class QueryResult:
 class StreamEngineBase:
     """Host-side driver over jitted device epochs; subclasses own the state."""
 
-    def __init__(self, sources: tuple[int, ...] | None = None) -> None:
+    def __init__(self, sources: tuple[int, ...] | None = None, *,
+                 observability: bool = False,
+                 flight_capacity: int = 128) -> None:
+        # observability layer (DESIGN.md §10): counter registry + span
+        # tracer + flight recorder; every hook no-ops when disabled
+        self.obs = EngineObs(enabled=observability,
+                             flight_capacity=flight_capacity)
         # Batched multi-source serving mode (DESIGN.md §8): ``sources`` is
         # the static tuple of maintained sources; None = classic
         # single-source engine.  ``_lane_of`` routes query sources to rows
@@ -192,7 +199,10 @@ class StreamEngineBase:
                     f"source {source} is not served by this engine "
                     f"(source={self.cfg.source})")
         t0 = time.perf_counter()
-        dist, parent = self._snapshot(lane)
+        # the query span NESTS any drain span _snapshot dispatches — the
+        # bucketed engines settle pending work inside the query (§10.2)
+        with self.obs.epoch("query", lane=lane):
+            dist, parent = self._snapshot(lane)
         dt = time.perf_counter() - t0
         return QueryResult(dist=dist, parent=parent, latency_s=dt,
                            epoch_stats=self._stream_stats(),
@@ -220,6 +230,31 @@ class StreamEngineBase:
                 if on_query is not None:
                     on_query(res)
         return results
+
+    # ---------------------------------------------------------- observability
+    def metrics_snapshot(self) -> dict[str, Any]:
+        """One-stop observable state (DESIGN.md §10): the stream counters,
+        rounds/messages drained from the SAME ``_dev_rounds`` /
+        ``_dev_messages`` device scalars as ``n_rounds`` / ``n_messages``
+        (bit-identical by construction), the counter registry's snapshot
+        (its only device_get), span counts, and flight-recorder occupancy.
+        Consumed by ``ServingReport``, both examples, and the benches."""
+        return {
+            "epochs": self.n_epochs, "adds": self.n_adds,
+            "dels": self.n_dels, "rounds": self.n_rounds,
+            "messages": self.n_messages,
+            "counters": self.obs.counters.snapshot(),
+            "spans": self.obs.tracer.span_counts(),
+            "flight": {"records": self.obs.recorder.total,
+                       "capacity": self.obs.recorder.capacity},
+        }
+
+    def dump_flight_recorder(self, file=None) -> str:
+        """Postmortem: write the flight-recorder ring (most recent epoch
+        records) as JSONL to ``file`` (default stderr) and return it."""
+        return self.obs.recorder.dump(
+            file=file, header=f"flight recorder "
+            f"({self.obs.recorder.total} records total)")
 
     # ------------------------------------------------------------- stability
     def stability_vs_prev(self, parent: np.ndarray,

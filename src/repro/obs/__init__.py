@@ -1,0 +1,140 @@
+"""Engine observability layer (DESIGN.md §10): device-side counter
+registry, span tracing with Perfetto export, and a per-epoch flight
+recorder — shared by both engines via ``StreamEngineBase``.
+
+``EngineObs`` bundles the three pieces behind one facade the engines
+drive:
+
+  * ``with obs.epoch(kind, **attrs):`` wraps one dispatched epoch — it
+    opens a tracer span (plus the jax.profiler TraceAnnotation), bumps
+    the matching host counter (``add_epoch`` -> ``add_epochs``), appends
+    a flight-recorder record with the dispatch wall time, and on an
+    escaping exception dumps the flight recorder ONCE before re-raising.
+  * ``obs.note_layout(totals)`` diffs the backend's monotone layout
+    totals (``RelaxBackend.layout_counters()``: rebuilds, overflow-lane
+    hits) against the last observation, folding the deltas into counters
+    and emitting one ``rebuild`` instant event per rebuild — so the span
+    stream and the counter registry can never disagree (they are derived
+    from the same deltas).  Totals may reset when the "auto" backend
+    swaps layouts; negative deltas clamp to zero.
+  * ``obs.counters`` / ``obs.tracer`` / ``obs.recorder`` for direct use
+    (device-value accumulation, instants, extra records).
+
+Disabled (the default) every hook no-ops; the ``obs_overhead`` bench +
+``check_regression`` gate hold instrumented ingest >= 0.95x
+uninstrumented (§10.4).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from contextlib import contextmanager
+from typing import Any, Iterator
+
+from repro.obs.counters import CounterRegistry
+from repro.obs.recorder import FlightRecorder
+from repro.obs.spans import (Span, SpanTracer, load_chrome_trace,
+                             span_counts_of)
+
+__all__ = [
+    "CounterRegistry", "EngineObs", "FlightRecorder", "Span", "SpanTracer",
+    "load_chrome_trace", "out_path_or_exit", "span_counts_of",
+    "write_log_jsonl",
+]
+
+# span kind -> counter name: every epoch span bumps its counter from the
+# SAME code path, which is what makes span counts and counters bit-consistent
+_PLURAL = {
+    "add_epoch": "add_epochs",
+    "del_epoch": "del_epochs",
+    "drain": "drains",
+    "query": "queries",
+    "checkpoint": "checkpoints",
+}
+
+
+class EngineObs:
+    def __init__(self, enabled: bool = False, flight_capacity: int = 128):
+        self.enabled = bool(enabled)
+        self.counters = CounterRegistry(self.enabled)
+        self.tracer = SpanTracer(self.enabled)
+        self.recorder = FlightRecorder(flight_capacity)
+        self._layout_last: dict[str, int] = {}
+        self._dumped = False
+
+    @contextmanager
+    def epoch(self, kind: str, **attrs) -> Iterator[None]:
+        if not self.enabled:
+            yield
+            return
+        t0 = time.perf_counter()
+        try:
+            with self.tracer.span(kind, **attrs):
+                yield
+        except BaseException as exc:
+            self.recorder.record(kind, error=repr(exc), **attrs)
+            self.dump_on_error(exc)
+            raise
+        self.counters.inc(_PLURAL.get(kind, kind + "s"))
+        self.recorder.record(
+            kind, wall_ms=round((time.perf_counter() - t0) * 1e3, 3), **attrs)
+
+    def note_layout(self, totals: dict[str, int]) -> None:
+        """Fold the backend's monotone layout totals (rebuilds,
+        overflow_hits, ...) into counters by delta; one ``rebuild``
+        instant event per rebuild delta."""
+        if not self.enabled:
+            return
+        for name, total in totals.items():
+            delta = max(0, int(total) - self._layout_last.get(name, 0))
+            self._layout_last[name] = int(total)
+            if delta == 0:
+                continue
+            self.counters.inc(name, delta)
+            if name == "rebuilds":
+                for _ in range(delta):
+                    self.tracer.instant("rebuild")
+
+    def dump_on_error(self, exc: BaseException) -> None:
+        """One-shot flight-recorder postmortem (nested epochs dump once)."""
+        if self._dumped:
+            return
+        self._dumped = True
+        self.recorder.dump(
+            header=f"flight recorder postmortem "
+                   f"({self.recorder.total} records total): {exc!r}")
+
+
+# ----------------------------------------------------------- CLI plumbing --
+def out_path_or_exit(path: str) -> str:
+    """Validate a --trace-out / --log-json destination up front: a missing
+    parent directory exits 2 (usage error) before any engine work runs."""
+    parent = os.path.dirname(os.path.abspath(path))
+    if not os.path.isdir(parent):
+        print(f"error: output parent directory does not exist: {parent}",
+              file=sys.stderr)
+        raise SystemExit(2)
+    return path
+
+
+def _jsonable(v: Any) -> Any:
+    import numpy as np
+    if isinstance(v, dict):
+        return {k: _jsonable(x) for k, x in v.items()}
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, np.generic):
+        return v.item()
+    return v
+
+
+def write_log_jsonl(engine, path: str) -> None:
+    """JSONL export (--log-json): every span line followed by one final
+    ``metrics_snapshot`` line — the machine-readable twin of --trace-out."""
+    import json
+    lines = engine.obs.tracer.jsonl_lines()
+    lines.append(json.dumps(
+        {"kind": "metrics_snapshot", **_jsonable(engine.metrics_snapshot())}))
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")

@@ -1,0 +1,80 @@
+"""Device-side counter registry (DESIGN.md §10.1).
+
+Extends the §2.4 lazy-stats discipline from two hardwired scalars
+(rounds, messages) to an open set of named counters.  Two kinds live in
+one registry:
+
+  * **device counters** — ``add(name, value)`` folds a device scalar (or
+    an ``[S]`` per-lane / ``[P]`` per-partition vector) into a lazily
+    accumulated device array with a plain ``+``: no host sync, no new
+    collectives — the value is whatever the epoch already computed or a
+    cheap eager reduction over state the engine already holds.  ``peak``
+    folds with ``maximum`` instead (high-water marks).
+  * **host counters** — ``inc(name, n)`` for numbers that are born on the
+    host (planned batch sizes, planner rebuild totals, per-partition numpy
+    tallies); ``n`` may be an int or a numpy array and accumulates by
+    ``+`` as well.
+
+``snapshot()`` is the ONLY read-back point: one ``jax.device_get`` over
+the whole device dict (query/checkpoint/report time), mirroring how
+``n_rounds`` drains ``_dev_rounds``.  A disabled registry no-ops every
+write so the instrumented ingest path stays on the §10.4 overhead
+contract.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["CounterRegistry"]
+
+
+class CounterRegistry:
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._dev: dict[str, jax.Array] = {}
+        self._host: dict[str, Any] = {}
+
+    # ------------------------------------------------------- device counters
+    def add(self, name: str, value) -> None:
+        """Lazily accumulate a device value — shape-agnostic (scalar, [S]
+        per-lane, [P] per-partition); never blocks on the device."""
+        if not self.enabled:
+            return
+        cur = self._dev.get(name)
+        self._dev[name] = value if cur is None else cur + value
+
+    def peak(self, name: str, value) -> None:
+        """High-water-mark fold of a device value (elementwise maximum)."""
+        if not self.enabled:
+            return
+        cur = self._dev.get(name)
+        self._dev[name] = value if cur is None else np.maximum(cur, value) \
+            if isinstance(cur, np.ndarray) else jax.numpy.maximum(cur, value)
+
+    # --------------------------------------------------------- host counters
+    def inc(self, name: str, n=1) -> None:
+        """Host-side accumulate; ``n`` may be an int or a numpy array (e.g.
+        a [P] per-partition tally) — both fold with ``+``."""
+        if not self.enabled:
+            return
+        self._host[name] = self._host.get(name, 0) + n
+
+    # --------------------------------------------------------------- readout
+    def names(self) -> list[str]:
+        return sorted(set(self._host) | set(self._dev))
+
+    def snapshot(self) -> dict[str, Any]:
+        """Drain every counter to host values — ONE ``device_get`` over the
+        device dict (the §2.4 read-back point); ints for scalars, numpy
+        arrays for vector counters."""
+        out: dict[str, Any] = {
+            k: (int(v) if np.ndim(v) == 0 else np.asarray(v))
+            for k, v in self._host.items()}
+        if self._dev:
+            for k, v in jax.device_get(self._dev).items():
+                got = int(v) if np.ndim(v) == 0 else np.asarray(v)
+                out[k] = out[k] + got if k in out else got
+        return out

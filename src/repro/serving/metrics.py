@@ -29,9 +29,15 @@ import numpy as np
 
 
 def pctile(xs, q) -> float:
-    """Percentile with the empty-input convention every caller shares."""
-    return (float(np.percentile(np.asarray(xs, np.float64), q))
-            if len(xs) else float("nan"))
+    """Percentile with the edge-case conventions every caller shares:
+    empty input -> NaN (never raises), a single sample is every percentile
+    of itself, and any input shape is accepted — generators and other
+    len()-less iterables are materialized, scalars wrap, [S, N] stacks
+    flatten."""
+    if not hasattr(xs, "__len__") and not isinstance(xs, np.ndarray):
+        xs = list(xs) if np.iterable(xs) else [xs]
+    arr = np.asarray(xs, np.float64).reshape(-1)
+    return float(np.percentile(arr, q)) if arr.size else float("nan")
 
 
 def percentiles(xs, qs=(50, 95, 99)) -> dict[str, float]:
@@ -76,6 +82,10 @@ class ServingReport:
                                                repr=False)
     churns: list[dict[str, float]] = dataclasses.field(default_factory=list,
                                                        repr=False)
+    # the engine's metrics_snapshot() at replay end (DESIGN.md §10):
+    # epochs/rounds/messages plus the obs counter registry and span counts
+    engine_metrics: dict[str, Any] | None = dataclasses.field(default=None,
+                                                              repr=False)
 
     @property
     def stability_parent(self) -> float:
@@ -98,7 +108,7 @@ class ServingReport:
         ])
 
     def to_record(self) -> dict[str, Any]:
-        return {
+        rec = {
             "engine": self.engine,
             "n_sources": self.n_sources,
             "events": self.events,
@@ -114,3 +124,9 @@ class ServingReport:
             "churn_mean": round(self.churn_mean["any"], 6),
             "stability_parent": round(self.stability_parent, 6),
         }
+        if self.engine_metrics is not None:
+            # flatten the two algorithmic figures the bench records track;
+            # [S] per-lane vectors stringify via the sink's default=str
+            rec["rounds"] = self.engine_metrics.get("rounds")
+            rec["messages"] = self.engine_metrics.get("messages")
+        return rec

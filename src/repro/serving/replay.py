@@ -94,4 +94,7 @@ def replay_trace(engine: StreamEngineBase, trace: ServingTrace, *,
                     "any": mean("any")},
         latencies=latencies,
         churns=churns,
+        # the engine's own telemetry (DESIGN.md §10) — rounds/messages plus
+        # the obs counter/span snapshot when observability is enabled
+        engine_metrics=engine.metrics_snapshot(),
     )

@@ -1,0 +1,92 @@
+"""Subprocess worker for the telemetry-layer acceptance scenario (P=8).
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 (set by the
+parent test process).  Records a power-law hub stream as a serving trace,
+replays it through the 8-partition ``ShardedSSSPDelEngine`` under the
+bucketed delta-stepping schedule with observability enabled, writes the
+span trace as Chrome trace-event JSON to argv[1], reloads it, and asserts
+the DESIGN.md §10 contract:
+
+  * the exported trace's span counts equal the live tracer's AND the
+    engine's own epoch/drain/rebuild counters (nothing dropped or
+    double-counted on the export path);
+  * ``metrics_snapshot()`` / ``ServingReport.engine_metrics`` report
+    rounds/messages bit-identical to the engine's ``n_rounds`` /
+    ``n_messages`` (the §2.4 lazy device scalars are the single source of
+    truth — instrumentation reads them, never re-derives them).
+
+Usage: _obs_worker.py <chrome-trace-out.json>
+Prints "OK <events> <spans> <rounds>" on success.
+"""
+import os
+import sys
+
+# must precede any jax import in this process
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.dist_engine import (ShardedEngineConfig,  # noqa: E402
+                                    ShardedSSSPDelEngine)
+from repro.graphs import generators, window  # noqa: E402
+from repro.launch.mesh import _mk  # noqa: E402
+from repro.obs import load_chrome_trace, span_counts_of  # noqa: E402
+from repro.serving import TraceRecorder, replay_trace  # noqa: E402
+
+
+def main(trace_out: str) -> None:
+    assert len(jax.devices()) == 8, \
+        f"expected 8 devices, got {len(jax.devices())}"
+    mesh = _mk((2, 2, 2), ("pod", "data", "model"))
+    n, src, dst, w = generators.power_law_hubs(120, 700, n_hubs=4, seed=23,
+                                               orientation="in")
+    source = int(generators.top_in_degree_sources(n, dst, 1)[0])
+    log = window.sliding_window_stream(src, dst, w, window=len(src) // 3,
+                                       delta=0.6, seed=23,
+                                       query_every=len(src) // 4)
+    rec = TraceRecorder()
+    rec.extend_from_log(log)
+    trace = rec.trace()
+
+    eng = ShardedSSSPDelEngine(
+        ShardedEngineConfig(n, len(src) + 64, source,
+                            wave_schedule="buckets", bucket_width=1.0,
+                            relax_backend="sliced", sliced_slice_rows=8,
+                            sliced_hub_k=4, sliced_init_k=1,
+                            observability=True),
+        mesh=mesh)
+    report = replay_trace(eng, trace)
+
+    # export -> reload roundtrip: the Chrome trace must carry exactly the
+    # spans the live tracer recorded
+    eng.obs.tracer.save_chrome(trace_out)
+    events = load_chrome_trace(trace_out)
+    sp = eng.obs.tracer.span_counts()
+    assert span_counts_of(events) == sp, (span_counts_of(events), sp)
+
+    # span counts == the engine's own epoch/drain/rebuild counters
+    ct = eng.metrics_snapshot()["counters"]
+    assert sp["add_epoch"] == ct["add_epochs"], (sp, ct)
+    assert sp["del_epoch"] == ct["del_epochs"], (sp, ct)
+    assert sp["add_epoch"] + sp["del_epoch"] == eng.n_epochs
+    assert sp.get("drain", 0) == ct.get("drains", 0), (sp, ct)
+    assert sp.get("query", 0) == ct.get("queries", 0) == report.queries
+    assert sp.get("rebuild", 0) == ct.get("rebuilds", 0), (sp, ct)
+    assert ct.get("rebuilds", 0) > 0, "tiny sliced knobs must rebuild"
+
+    # metrics_snapshot / engine_metrics rounds+messages == the §2.4 lazy
+    # device stats, bit for bit
+    em = report.engine_metrics
+    assert int(em["rounds"]) == int(eng.n_rounds), (em, eng.n_rounds)
+    assert int(em["messages"]) == int(eng.n_messages)
+    snap = eng.metrics_snapshot()
+    assert int(snap["rounds"]) == int(eng.n_rounds)
+    assert int(snap["messages"]) == int(eng.n_messages)
+
+    print(f"OK {len(events)} {sum(sp.values())} {eng.n_rounds}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1])

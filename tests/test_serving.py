@@ -319,6 +319,27 @@ def test_churn_and_percentile_helpers():
     assert pctile([1.0, 2.0, 3.0], 50) == 2.0
 
 
+def test_percentile_edge_cases_never_raise():
+    """Satellite (DESIGN.md §10 ride-along): the percentile helpers must
+    hold their conventions on degenerate inputs — empty -> NaN (never an
+    exception), one sample is every percentile of itself, scalars wrap,
+    generators materialize, [S, N] stacks flatten."""
+    import math
+
+    from repro.serving.metrics import percentiles
+    for empty in ([], np.array([]), np.zeros((0, 4)), iter(())):
+        assert math.isnan(pctile(empty, 50))
+    assert all(math.isnan(v) for v in percentiles([]).values())
+    for q in (0, 50, 99, 100):
+        assert pctile([7.5], q) == 7.5          # single sample
+        assert pctile(7.5, q) == 7.5            # bare scalar wraps
+        assert pctile(np.float32(7.5), q) == 7.5
+    assert pctile((x for x in (1.0, 2.0, 3.0)), 50) == 2.0   # generator
+    stacked = np.array([[1.0, 2.0], [3.0, 4.0]])             # [S, N] flattens
+    assert pctile(stacked, 50) == 2.5
+    assert percentiles([5.0]) == {"p50": 5.0, "p95": 5.0, "p99": 5.0}
+
+
 def test_percentile_helper_is_shared_with_benchmarks():
     """benchmarks/common.py must re-export THE serving implementation so
     bench sections and the harness can never disagree."""
