@@ -817,7 +817,43 @@ def obs_overhead(sink: C.CsvSink, small: bool) -> None:
               identical=True)
 
 
+def scale(sink: C.CsvSink, small: bool) -> None:
+    """Paper-scale ingest trajectory (DESIGN.md §11): synthetic N-vertex /
+    10N-edge ADD streams synthesized and ingested chunk-by-chunk, one
+    FRESH subprocess per size so ``resource.getrusage`` peak RSS is an
+    honest per-workload number (benchmarks/scale_worker.py documents the
+    budget formula: pool-capacity + vertex + O(chunk) terms, never
+    O(stream)).  Small mode runs N ∈ {64k, 256k}; the full run adds the
+    acceptance point N=1M / E=10M.  The smallest size cross-checks the
+    final tree against the Dijkstra oracle; the regression gate
+    (check_regression.gate_scale) holds the events/s floor and the RSS
+    ceiling from this PR onward."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    sizes = [1 << 16, 1 << 18] + ([] if small else [1 << 20])
+    for n in sizes:
+        cmd = [sys.executable, "-m", "benchmarks.scale_worker",
+               "--n", str(n), "--e", str(10 * n)]
+        if n == sizes[0]:
+            cmd.append("--check-oracle")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in ("src", env.get("PYTHONPATH", "")) if p)
+        out = subprocess.run(cmd, capture_output=True, text=True, env=env)
+        assert out.returncode == 0, (
+            f"scale worker n={n} failed:\n{out.stderr[-2000:]}")
+        rec = json.loads(out.stdout.strip().splitlines()[-1])
+        assert rec["rss_ok"], (
+            f"scale n={n}: peak RSS {rec['peak_rss_mb']}MB over budget "
+            f"{rec['rss_budget_mb']}MB")
+        assert rec.get("oracle_match", True), f"scale n={n}: oracle mismatch"
+        sink.emit("scale", **rec)
+
+
 ALL = [table2_static_baseline, fig1_query_latency, fig2_latency_over_time,
        fig3_source_selection, fig4_stability, fig5_throughput,
        fig6_batch_bsp, backend_shootout, hub_shootout, bucket_shootout,
-       dist_engine, serving, obs_overhead]
+       dist_engine, serving, obs_overhead, scale]

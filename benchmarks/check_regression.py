@@ -42,6 +42,12 @@ Gates (per delta value found in the section):
     existing Pallas sliced wave (>= 1.0x) and stay within dispatch-overhead
     parity of the jnp three-dispatch path (>= 0.8x) on the power-law hub
     layout.
+  * scale — every paper-scale ingest row (DESIGN.md §11) must hold the
+    chunked-ingest events/s floor (absolute, deliberately loose for CI
+    hosts) AND stay under its own documented RSS budget
+    (benchmarks/scale_worker.py: pool capacity + vertex + O(chunk) terms,
+    never O(stream)); the smallest size must carry a passing oracle-parity
+    record.
 """
 from __future__ import annotations
 
@@ -50,7 +56,13 @@ import json
 import sys
 
 DEFAULT_SECTIONS = ("backend_shootout", "dist_engine", "hub_shootout",
-                    "bucket_shootout", "serving", "obs_overhead")
+                    "bucket_shootout", "serving", "obs_overhead", "scale")
+
+# absolute floor for the scale section's chunked ingest (events/s): local
+# runs measure 150k-350k across N=64k..1M; CI's shared 2-core runners are
+# ~5-10x slower, a real O(batch)->O(stream) control-plane regression is
+# >100x at the top size
+SCALE_EVENTS_PER_S_FLOOR = 10_000.0
 
 
 def _rows(records: list[dict], bench: str) -> list[dict]:
@@ -265,8 +277,34 @@ def gate_obs_overhead(records: list[dict]) -> list[str]:
     return errors
 
 
+def gate_scale(records: list[dict]) -> list[str]:
+    errors: list[str] = []
+    rows = _rows(records, "scale")
+    if not rows:
+        return ["scale: no records found"]
+    smallest = min(rows, key=lambda r: int(r["n"]))
+    if str(smallest.get("oracle_match")) != "True":
+        errors.append(f"scale n={smallest['n']}: oracle parity record "
+                      f"missing or false: "
+                      f"oracle_match={smallest.get('oracle_match')}")
+    for r in sorted(rows, key=lambda r: int(r["n"])):
+        n, eps = int(r["n"]), float(r["events_per_s"])
+        peak = float(r["peak_rss_mb"])
+        budget = float(r["rss_budget_mb"])
+        if eps < SCALE_EVENTS_PER_S_FLOOR:
+            errors.append(f"scale n={n}: ingest {eps:.0f} events/s < "
+                          f"required {SCALE_EVENTS_PER_S_FLOOR:.0f}")
+        if peak > budget:
+            errors.append(f"scale n={n}: peak RSS {peak:.0f}MB > budget "
+                          f"{budget:.0f}MB (O(stream) host state?)")
+        print(f"scale n={n}: {eps:.0f} events/s, peak RSS {peak:.0f}MB / "
+              f"budget {budget:.0f}MB, waves={r.get('waves')}")
+    return errors
+
+
 GATES = {
     "backend_shootout": gate_backend_shootout,
+    "scale": gate_scale,
     "bucket_shootout": gate_bucket_shootout,
     "dist_engine": gate_dist_engine,
     "hub_shootout": gate_hub_shootout,

@@ -1,0 +1,89 @@
+"""CI scale smoke (DESIGN.md §11): the paper-scale ingest pipeline end to
+end at N=64k, exercised exactly the way a user reaches it —
+
+  1. write an RMAT(16) edge list to disk in SNAP text format;
+  2. run the real-dataset loader CLI path (graphs/datasets.py): parse,
+     compact ids, synthesize the sliding-window dynamic portion, write a
+     version-2 CHUNKED trace;
+  3. stream the trace back through ``open_trace`` -> ``replay_trace``
+     (O(chunk) peak memory) into a ``repro.make_engine`` engine;
+  4. cross-check the final converged tree bit-for-bit shape-wise against
+     the Dijkstra oracle on the engine's own live-edge mirror.
+
+Run: ``PYTHONPATH=src python -m benchmarks.scale_smoke [--scale 16]``
+Exit 0 on parity, 1 on divergence — wired as a CI step on both jax legs.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=16,
+                    help="RMAT scale (N = 2**scale)")
+    ap.add_argument("--edge-factor", type=int, default=8)
+    ap.add_argument("--delta", type=float, default=0.2)
+    ap.add_argument("--chunk-events", type=int, default=65536)
+    args = ap.parse_args()
+
+    import repro
+    from repro.core import oracle
+    from repro.graphs import datasets as ds
+    from repro.graphs import generators as gen
+    from repro.serving.replay import replay_trace
+
+    n, src, dst, w = gen.rmat(args.scale, edge_factor=args.edge_factor,
+                              seed=3)
+    with tempfile.TemporaryDirectory() as d:
+        edges_path = os.path.join(d, "rmat.txt")
+        with open(edges_path, "w") as f:
+            f.write("# synthetic RMAT edge list (scale smoke)\n")
+            f.write("\n".join(f"{u} {v} {x:.4f}"
+                              for u, v, x in zip(src, dst, w)))
+            f.write("\n")
+        trace_path = os.path.join(d, "rmat.trace")
+        rc = ds.main([edges_path, trace_path, "--delta", str(args.delta),
+                      "--window-frac", "0.5",
+                      "--chunk-events", str(args.chunk_events)])
+        assert rc == 0
+
+        n_ids, _, cdst = ds.compact_ids(src, dst)
+        source = int(gen.top_in_degree_sources(n_ids, cdst)[0])
+        eng = repro.make_engine(
+            num_vertices=n_ids, edge_capacity=len(src) + 64, source=source,
+            batch_deletions=True, wave_schedule="buckets",
+            bucket_width=float("inf"))
+        t0 = time.perf_counter()
+        with repro.open_trace(trace_path) as reader:
+            assert reader.n_chunks > 1, (
+                f"expected a chunked trace, got {reader.n_chunks} chunk(s)")
+            report = replay_trace(eng, reader)
+        res = eng.query()
+        wall = time.perf_counter() - t0
+
+    lsrc, ldst, lw = eng.alloc.active_coo()
+    dist_ref, _ = oracle.dijkstra(n_ids, lsrc, ldst, lw, source)
+    dist = np.asarray(res.dist)
+    ok = bool(np.allclose(np.where(np.isfinite(dist), dist, -1),
+                          np.where(np.isfinite(dist_ref), dist_ref, -1),
+                          rtol=1e-5, atol=1e-5))
+    print(f"scale_smoke: n={n_ids} events={report.events} "
+          f"(topo={report.topology_events}) replay={wall:.1f}s "
+          f"events/s={report.events_per_s:.0f} live={len(lsrc)} "
+          f"oracle_match={ok}")
+    if not ok:
+        print("scale_smoke: engine diverged from Dijkstra oracle",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,12 +5,17 @@ Run: PYTHONPATH=src python examples/quickstart.py
 Builds a graph edge by edge, deletes a tree edge (triggering the paper's
 invalidation + recomputation epochs), queries the shortest-path tree on
 demand, and cross-checks every answer against a textbook Dijkstra oracle.
+
+``repro.make_engine`` is the one public entry point for both engines
+(DESIGN.md §11.5): the same call with ``partitions=P`` (or ``mesh=``)
+returns the sharded engine instead — ``edge_capacity`` is always the
+total pool budget.
 """
 import numpy as np
 
+import repro
 from repro.core import events as ev
 from repro.core import oracle
-from repro.core.engine import EngineConfig, SSSPDelEngine
 
 
 def main():
@@ -18,8 +23,7 @@ def main():
     #   0 ────────► 1 ────────► 2
     #   │                       ▲
     #   └────────── 5.0 ────────┘         (plus a later shortcut 0->3->2)
-    eng = SSSPDelEngine(EngineConfig(num_vertices=8, edge_capacity=64,
-                                     source=0))
+    eng = repro.make_engine(num_vertices=8, edge_capacity=64, source=0)
     log = ev.EventLog.concatenate([
         ev.adds([0, 1, 0], [1, 2, 2], [1.0, 1.0, 5.0]),
         ev.query_marker(),                 # tree: 0->1->2 (dist 2)

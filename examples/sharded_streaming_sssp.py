@@ -30,7 +30,9 @@ mass (power-law hubs otherwise load a single shard).
 Serving-layer trace flags (DESIGN.md §8): ``--record-trace PATH`` saves
 the generated workload; ``--replay-trace PATH`` replays a recorded trace
 through the sharded engine + metrics harness (missing/incompatible paths
-exit with code 2).
+exit with code 2).  ``--dataset PATH`` streams a real SNAP/Konect edge
+list through the same pipeline (graphs/datasets.py; bad paths exit 2).
+Engines are built through ``repro.make_engine`` (DESIGN.md §11.5).
 
 Observability flags (DESIGN.md §10): ``--trace-out PATH`` writes the
 engine's span trace as Chrome trace-event JSON (loads in Perfetto),
@@ -46,9 +48,9 @@ import numpy as np
 
 import jax
 
+import repro
 from repro.core import events as ev
-from repro.core.dist_engine import ShardedEngineConfig, ShardedSSSPDelEngine
-from repro.core.engine import RELAX_BACKENDS, EngineConfig, SSSPDelEngine
+from repro.core.engine import RELAX_BACKENDS
 from repro.graphs import generators as gen
 from repro.graphs import partition as part_mod
 from repro.graphs import window as win
@@ -74,6 +76,9 @@ def main():
     p.add_argument("--balanced", action="store_true",
                    help="edge-balanced vertex relabeling "
                         "(graphs/partition.edge_balanced_relabeling)")
+    p.add_argument("--dataset", metavar="PATH",
+                   help="replay a real SNAP/Konect edge list (graphs/"
+                        "datasets.py; bad paths exit 2)")
     p.add_argument("--record-trace", metavar="PATH",
                    help="save the generated workload as a serving trace "
                         "(repro/serving/trace.py, DESIGN.md §8.2)")
@@ -93,23 +98,31 @@ def main():
     obs_on = bool(args.trace_out or args.log_json)
     schedule = "buckets" if args.buckets else "rounds"
 
-    if args.replay_trace:
-        trace = load_trace_or_exit(args.replay_trace)
-        topo = trace.kind != ev.QUERY
-        n = int(max(trace.src[topo].max(initial=0),
-                    trace.dst[topo].max(initial=0))) + 1
-        n_topo = int(topo.sum())
+    if args.dataset:
+        n, trace = repro.load_dataset_or_exit(
+            args.dataset, window_frac=args.window_frac, delta=args.delta)
+        log = ev.interleave_queries(trace.to_log(),
+                                    max(1, trace.n_topology // 10))
+        trace = repro.ServingTrace.from_log(log)
+
+    if args.replay_trace or args.dataset:
+        if args.replay_trace:
+            trace = load_trace_or_exit(args.replay_trace)
+            topo = trace.kind != ev.QUERY
+            n = int(max(trace.src[topo].max(initial=0),
+                        trace.dst[topo].max(initial=0))) + 1
         parts = len(jax.devices())
-        epp = int(n_topo * 1.3) // max(parts // 2, 1) + 64
+        epp = int(trace.n_topology * 1.3) // max(parts // 2, 1) + 64
         source = int(gen.top_in_degree_sources(
             n, trace.dst[trace.kind == ev.ADD].astype(np.int64))[0])
-        eng = ShardedSSSPDelEngine(ShardedEngineConfig(
-            n, epp, source, exchange=args.exchange,
+        eng = repro.make_engine(
+            num_vertices=n, edge_capacity=epp * parts, source=source,
+            partitions=parts, exchange=args.exchange,
             relax_backend=args.backend, wave_schedule=schedule,
-            observability=obs_on))
+            observability=obs_on)
         report = replay_trace(eng, trace)
-        print(f"trace: {args.replay_trace} source={source} "
-              f"partitions={parts} schedule={schedule}")
+        print(f"trace: {args.replay_trace or args.dataset} "
+              f"source={source} partitions={parts} schedule={schedule}")
         print(report.summary())
         dump_obs(eng, args)
         return
@@ -140,11 +153,11 @@ def main():
         relabel = part_mod.edge_balanced_relabeling(n, dst, parts)
 
     epp = int(len(src) * 1.3) // max(parts // 2, 1) + 64
-    eng = ShardedSSSPDelEngine(
-        ShardedEngineConfig(n, epp, source, exchange=args.exchange,
-                            relax_backend=args.backend,
-                            wave_schedule=schedule, observability=obs_on),
-        relabel=relabel)
+    eng = repro.make_engine(
+        num_vertices=n, edge_capacity=epp * parts, source=source,
+        partitions=parts, exchange=args.exchange,
+        relax_backend=args.backend, wave_schedule=schedule,
+        observability=obs_on, relabel=relabel)
     lat, stab = [], []
     t0 = time.perf_counter()
 
@@ -167,9 +180,10 @@ def main():
 
     # cross-check: the sharded run must equal the single-device engine
     # running the same relaxation backend
-    ref = SSSPDelEngine(EngineConfig(n, int(len(src) * 1.3) + 64, source,
-                                     relax_backend=args.backend,
-                                     wave_schedule=schedule))
+    ref = repro.make_engine(num_vertices=n,
+                            edge_capacity=int(len(src) * 1.3) + 64,
+                            source=source, relax_backend=args.backend,
+                            wave_schedule=schedule)
     ref.ingest_log(log)
     q_ref, q = ref.query(), eng.query()
     np.testing.assert_array_equal(q_ref.dist, q.dist)

@@ -7,6 +7,13 @@ deletions (probability --delta), queries every W/10 events, and reports the
 paper's three metrics: query latency, tree stability, ingestion rate —
 plus a from-scratch ReMo baseline for the latency comparison.
 
+Engines are built through the one public entry point ``repro.make_engine``
+(DESIGN.md §11.5).  Real datasets (SNAP/Konect edge lists, .gz ok) stream
+through the same pipeline — the loader synthesizes the sliding-window
+dynamic portion deterministically and a bad path exits with code 2:
+
+    ... streaming_sssp.py --dataset /path/to/edges.txt
+
 Serving-layer trace flags (DESIGN.md §8):
 
     # save the generated workload as an on-disk trace
@@ -30,9 +37,9 @@ import time
 
 import numpy as np
 
+import repro
 from repro.core import events as ev
 from repro.core.baseline import ReMoBaseline
-from repro.core.engine import EngineConfig, SSSPDelEngine
 from repro.graphs import generators as gen
 from repro.graphs import window as win
 from repro.obs import out_path_or_exit, write_log_jsonl
@@ -83,6 +90,10 @@ def main():
     p.add_argument("--power-law", action="store_true",
                    help="stream in-degree power-law hubs instead of RMAT "
                         "(the sliced backend's target workload)")
+    p.add_argument("--dataset", metavar="PATH",
+                   help="replay a real SNAP/Konect edge list (graphs/"
+                        "datasets.py): deterministic sliding-window event "
+                        "synthesis + serving metrics (bad paths exit 2)")
     p.add_argument("--record-trace", metavar="PATH",
                    help="save the generated workload as a serving trace "
                         "(repro/serving/trace.py, DESIGN.md §8.2)")
@@ -97,17 +108,25 @@ def main():
             out_path_or_exit(path)
     obs_on = bool(args.trace_out or args.log_json)
 
-    if args.replay_trace:
-        trace = load_trace_or_exit(args.replay_trace)
-        n, n_topo = trace_bounds(trace)
-        cap = int(n_topo * 1.3) + 64
+    if args.dataset:
+        n, trace = repro.load_dataset_or_exit(
+            args.dataset, window_frac=args.window_frac, delta=args.delta)
+        log = ev.interleave_queries(trace.to_log(),
+                                    max(1, trace.n_topology // 10))
+        trace = ServingTrace.from_log(log)
+
+    if args.replay_trace or args.dataset:
+        if args.replay_trace:
+            trace = load_trace_or_exit(args.replay_trace)
+            n, _ = trace_bounds(trace)
+        cap = int(trace.n_topology * 1.3) + 64
         source = int(gen.top_in_degree_sources(
             n, trace.dst[trace.kind == ev.ADD].astype(np.int64))[0])
-        eng = SSSPDelEngine(EngineConfig(n, cap, source,
-                                         relax_backend=args.backend,
-                                         observability=obs_on))
+        eng = repro.make_engine(num_vertices=n, edge_capacity=cap,
+                                source=source, relax_backend=args.backend,
+                                observability=obs_on)
         report = replay_trace(eng, trace)
-        print(f"trace: {args.replay_trace} source={source}")
+        print(f"trace: {args.replay_trace or args.dataset} source={source}")
         print(report.summary())
         dump_obs(eng, args)
         return
@@ -129,13 +148,14 @@ def main():
     if args.record_trace:
         rec = TraceRecorder()
         rec.extend_from_log(log)
-        rec.trace().save(args.record_trace)
+        # version-2 chunked container: replayable at O(chunk) host memory
+        rec.trace().save(args.record_trace, chunk_events=65536)
         print(f"recorded trace: {args.record_trace} ({len(log)} events)")
 
     cap = int(len(src) * 1.3) + 64
-    eng = SSSPDelEngine(EngineConfig(n, cap, source,
-                                     relax_backend=args.backend,
-                                     observability=obs_on))
+    eng = repro.make_engine(num_vertices=n, edge_capacity=cap,
+                            source=source, relax_backend=args.backend,
+                            observability=obs_on)
     lat, stab = [], []
     t0 = time.perf_counter()
 

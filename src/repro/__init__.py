@@ -1,0 +1,60 @@
+"""repro — dynamic distributed SSSP (the paper's SSSP-Del) in JAX.
+
+Stable public surface (DESIGN.md §11.5).  Downstream code should import
+from here instead of reaching into ``repro.core.*`` module paths:
+
+    import repro
+    eng = repro.make_engine(num_vertices=n, edge_capacity=m, source=0)
+    report = repro.replay_trace(eng, repro.open_trace("trace.npz"))
+
+Attributes resolve lazily (PEP 562) so ``import repro`` stays cheap and
+never initializes jax device state by itself.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "EngineConfig",
+    "ServingTrace",
+    "ShardedEngineConfig",
+    "ShardedSSSPDelEngine",
+    "SSSPDelEngine",
+    "TraceReader",
+    "TraceRecorder",
+    "dataset_to_trace",
+    "load_dataset_or_exit",
+    "make_engine",
+    "open_trace",
+    "replay_trace",
+]
+
+_EXPORTS = {
+    "EngineConfig": ("repro.core.engine", "EngineConfig"),
+    "SSSPDelEngine": ("repro.core.engine", "SSSPDelEngine"),
+    "ShardedEngineConfig": ("repro.core.dist_engine", "ShardedEngineConfig"),
+    "ShardedSSSPDelEngine": ("repro.core.dist_engine",
+                             "ShardedSSSPDelEngine"),
+    "make_engine": ("repro.core.factory", "make_engine"),
+    "ServingTrace": ("repro.serving.trace", "ServingTrace"),
+    "TraceReader": ("repro.serving.trace", "TraceReader"),
+    "TraceRecorder": ("repro.serving.trace", "TraceRecorder"),
+    "open_trace": ("repro.serving.trace", "open_trace"),
+    "replay_trace": ("repro.serving.replay", "replay_trace"),
+    "dataset_to_trace": ("repro.graphs.datasets", "dataset_to_trace"),
+    "load_dataset_or_exit": ("repro.graphs.datasets", "load_dataset_or_exit"),
+}
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+    value = getattr(importlib.import_module(mod_name), attr)
+    globals()[name] = value  # cache: next access skips __getattr__
+    return value
+
+
+def __dir__() -> list[str]:
+    return sorted(set(globals()) | set(__all__))

@@ -44,14 +44,52 @@ class SSSPArchConfig:
                       sliced_init_k=self.sliced_init_k)
         return kw
 
+    def make_engine(self, *, edge_capacity: int | None = None,
+                    source: int = 0,
+                    sources: tuple[int, ...] | None = None,
+                    partitions: int | None = None, mesh=None, **overrides):
+        """Build a READY engine carrying this arch config's backend
+        selection — the one entry point for both engines (DESIGN.md §11.5;
+        lazy import keeps configs/ free of core dependencies).
+
+        Single host by default; pass ``mesh=`` or ``partitions=`` for the
+        sharded engine (its total pool defaults to this config's
+        ``edges_per_part`` x P when ``edge_capacity`` is omitted).
+        ``sources`` selects batched multi-source serving (DESIGN.md §8);
+        ``source`` is then ignored."""
+        from repro.core.factory import make_engine as _make
+        kw = dict(self._backend_kw())
+        if mesh is not None or partitions is not None:
+            kw.update(exchange=self.exchange, delta_cap=self.delta_cap)
+            if edge_capacity is None:
+                P = partitions
+                if P is None:
+                    P = 1
+                    for a in mesh.axis_names:
+                        P *= mesh.shape[a]
+                edge_capacity = self.edges_per_part * P
+        elif edge_capacity is None:
+            raise ValueError("edge_capacity is required for the "
+                             "single-host engine")
+        kw.update(overrides)
+        return _make(num_vertices=self.num_vertices,
+                     edge_capacity=edge_capacity, source=source,
+                     sources=sources, partitions=partitions, mesh=mesh,
+                     **kw)
+
+    # -------------------------------------------------- deprecated shims
+    # The config-object bridges predate core/factory.make_engine; they
+    # remain as thin shims so downstream pins keep working one release.
     def engine_config(self, *, edge_capacity: int, source: int,
                       sources: tuple[int, ...] | None = None, **overrides):
-        """Bridge to the single-host engine: an ``EngineConfig`` carrying
-        this arch config's backend selection (lazy import keeps configs/
-        free of core dependencies).  ``sources`` selects the serving
-        layer's batched multi-source mode (DESIGN.md §8): S stacked trees
-        over one shared layout, ``source`` then ignored."""
+        """Deprecated: use ``make_engine`` (returns a ready engine) or
+        construct ``EngineConfig`` directly."""
+        import warnings
+
         from repro.core.engine import EngineConfig
+        warnings.warn("SSSPArchConfig.engine_config is deprecated; use "
+                      "SSSPArchConfig.make_engine / repro.make_engine",
+                      DeprecationWarning, stacklevel=2)
         kw = dict(num_vertices=self.num_vertices,
                   edge_capacity=edge_capacity, source=source,
                   sources=sources, **self._backend_kw())
@@ -61,11 +99,14 @@ class SSSPArchConfig:
     def sharded_engine_config(self, *, source: int,
                               sources: tuple[int, ...] | None = None,
                               **overrides):
-        """Bridge to the sharded engine: a ``ShardedEngineConfig`` carrying
-        this arch config's backend selection, exchange strategy and
-        per-partition pool capacity.  ``sources`` selects batched
-        multi-source serving (DESIGN.md §8), same as ``engine_config``."""
+        """Deprecated: use ``make_engine(partitions=...)`` /
+        ``make_engine(mesh=...)``."""
+        import warnings
+
         from repro.core.dist_engine import ShardedEngineConfig
+        warnings.warn("SSSPArchConfig.sharded_engine_config is deprecated; "
+                      "use SSSPArchConfig.make_engine / repro.make_engine",
+                      DeprecationWarning, stacklevel=2)
         kw = dict(num_vertices=self.num_vertices,
                   edges_per_part=self.edges_per_part, source=source,
                   exchange=self.exchange, delta_cap=self.delta_cap,

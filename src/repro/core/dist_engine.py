@@ -130,9 +130,13 @@ class ShardedEngineConfig:
     # sharded registry folds per-partition [P] vectors, no new collectives
     observability: bool = False
     obs_flight_capacity: int = 128
+    # control-plane implementation (DESIGN.md §11); same knob as
+    # EngineConfig.alloc_impl, applied to every per-partition planner
+    alloc_impl: str = "columnar"
 
     def __post_init__(self):
         bk_mod.validate_backend_config(self)
+        ingest.allocator_cls(self.alloc_impl)  # raises on unknown impl
         if self.exchange not in EXCHANGES:
             raise ValueError(f"unknown exchange {self.exchange!r}; valid: "
                              f"{EXCHANGES}")
@@ -197,8 +201,9 @@ class ShardedSSSPDelEngine(StreamEngineBase):
                 int(s if self.perm is None else self.perm[s])
                 for s in self.sources)
         # control plane: one planner per partition, local Epp-slot pools
-        self.allocs = [ingest.SlotAllocator(cfg.edges_per_part,
-                                            cfg.on_duplicate)
+        self.allocs = [ingest.make_allocator(cfg.edges_per_part,
+                                             cfg.on_duplicate,
+                                             cfg.alloc_impl)
                        for _ in range(self.P)]
         # relaxation backend: per-shard planners + sharded layout arrays
         self.bk = bk_mod.make_sharded_backend(
@@ -441,8 +446,9 @@ class ShardedSSSPDelEngine(StreamEngineBase):
             f"checkpoint has {len(ckpt['src'])} pool slots; this engine "
             f"expects {self.P * self.epp} — same edges_per_part required")
         epp = self.epp
+        alloc_cls = ingest.allocator_cls(self.cfg.alloc_impl)
         self.allocs = [
-            ingest.SlotAllocator.from_pool(
+            alloc_cls.from_pool(
                 epp, self.cfg.on_duplicate,
                 ckpt["src"][p * epp:(p + 1) * epp],
                 ckpt["dst"][p * epp:(p + 1) * epp],

@@ -84,10 +84,15 @@ class EngineConfig:
     # check_regression gate hold instrumented ingest >= 0.95x uninstrumented
     observability: bool = False
     obs_flight_capacity: int = 128
+    # control-plane implementation (DESIGN.md §11): "columnar" (numpy
+    # open-addressing index; the paper-scale default) or "dict" (the Python
+    # reference).  Bit-identical outputs either way.
+    alloc_impl: str = "columnar"
 
     def __post_init__(self):
         # fail at construction with the valid set, not deep in layout init
         bk_mod.validate_backend_config(self)
+        ingest.allocator_cls(self.alloc_impl)  # raises on unknown impl
         if self.obs_flight_capacity < 1:
             raise ValueError(f"obs_flight_capacity must be >= 1; got "
                              f"{self.obs_flight_capacity}")
@@ -115,7 +120,8 @@ class SSSPDelEngine(StreamEngineBase):
                          observability=cfg.observability,
                          flight_capacity=cfg.obs_flight_capacity)
         self.cfg = cfg
-        self.alloc = ingest.SlotAllocator(cfg.edge_capacity, cfg.on_duplicate)
+        self.alloc = ingest.make_allocator(cfg.edge_capacity,
+                                           cfg.on_duplicate, cfg.alloc_impl)
         self.state = GraphState.init(cfg.num_vertices, cfg.edge_capacity, cfg.source)
         if self.sources is not None:
             # stacked [S, N] trees over the single shared edge pool
@@ -312,7 +318,7 @@ class SSSPDelEngine(StreamEngineBase):
             cursor=jnp.asarray(ckpt["cursor"]),
         )
         # rebuild host planner state (slot map + mirror) from the pool
-        self.alloc = ingest.SlotAllocator.from_pool(
+        self.alloc = ingest.allocator_cls(self.cfg.alloc_impl).from_pool(
             self.cfg.edge_capacity, self.cfg.on_duplicate,
             ckpt["src"], ckpt["dst"], ckpt["w"], ckpt["active"])
         self.backend.restore(self.alloc)

@@ -1,0 +1,93 @@
+"""``make_engine`` — the one front door to both dynamic engines.
+
+Callers used to pick between ``configs/sssp_del.engine_config`` (single
+host) and ``sharded_engine_config`` (mesh) and then construct the engine
+themselves; the factory collapses that into one call that returns a READY
+engine (DESIGN.md §11.5):
+
+    eng = make_engine(num_vertices=n, edge_capacity=m, source=0)          # single
+    eng = make_engine(num_vertices=n, edge_capacity=m, source=0,
+                      partitions=8)                                       # sharded
+    eng = make_engine(num_vertices=n, edge_capacity=m, source=0,
+                      mesh=my_mesh, relax_backend="sliced")               # sharded
+
+Selection rule: passing ``mesh=`` or ``partitions=`` builds the sharded
+engine (``partitions=P`` makes a 1-axis mesh over the first P local
+devices; ``mesh`` wins when both are given and P must then match its
+size).  ``edge_capacity`` is always the TOTAL edge budget — the sharded
+path divides it into ``ceil(edge_capacity / P)`` slots per partition, so
+switching a workload between the two engines never changes its pool math.
+
+Every remaining keyword must be a field of the selected config dataclass
+(``EngineConfig`` / ``ShardedEngineConfig``); anything else raises a
+ValueError listing the valid knobs, mirroring the configs' own
+``__post_init__`` style.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+def _valid_knobs(cfg_cls, exclude: tuple[str, ...]) -> tuple[str, ...]:
+    return tuple(f.name for f in dataclasses.fields(cfg_cls)
+                 if f.name not in exclude)
+
+
+def make_engine(*, num_vertices: int, edge_capacity: int, source: int = 0,
+                sources: tuple[int, ...] | None = None,
+                partitions: int | None = None, mesh: Any | None = None,
+                relabel: Any | None = None, **knobs):
+    """Build a ready single-host or sharded engine (see module docstring).
+
+    ``relabel`` (sharded only) forwards the edge-balanced relabeling
+    triple to ``ShardedSSSPDelEngine``.
+    """
+    fixed = ("num_vertices", "edge_capacity", "edges_per_part", "source",
+             "sources")
+    if mesh is None and partitions is None:
+        if relabel is not None:
+            raise ValueError(
+                "relabel= requires the sharded engine; pass mesh= or "
+                "partitions= to select it")
+        from repro.core.engine import EngineConfig, SSSPDelEngine
+        valid = _valid_knobs(EngineConfig, fixed)
+        bad = sorted(set(knobs) - set(valid))
+        if bad:
+            raise ValueError(
+                f"unknown engine knob(s) {bad} for the single-host "
+                f"engine; valid knobs: {valid}")
+        return SSSPDelEngine(EngineConfig(
+            num_vertices=num_vertices, edge_capacity=edge_capacity,
+            source=source, sources=sources, **knobs))
+
+    import jax
+
+    from repro.core.dist_engine import (ShardedEngineConfig,
+                                        ShardedSSSPDelEngine)
+    from repro.launch import mesh as mesh_mod
+    if mesh is None:
+        avail = len(jax.devices())
+        if not 1 <= partitions <= avail:
+            raise ValueError(
+                f"partitions={partitions} but only {avail} device(s) are "
+                f"visible; pass mesh= for an explicit layout")
+        mesh = mesh_mod._mk((partitions,), ("graph",))
+    P = 1
+    for a in mesh.axis_names:
+        P *= mesh.shape[a]
+    if partitions is not None and partitions != P:
+        raise ValueError(
+            f"partitions={partitions} does not match mesh size {P}; pass "
+            "only one of mesh= / partitions=")
+    valid = _valid_knobs(ShardedEngineConfig, fixed)
+    bad = sorted(set(knobs) - set(valid))
+    if bad:
+        raise ValueError(
+            f"unknown engine knob(s) {bad} for the sharded engine; "
+            f"valid knobs: {valid}")
+    cfg = ShardedEngineConfig(
+        num_vertices=num_vertices,
+        edges_per_part=-(-edge_capacity // P),  # total budget / P, ceil
+        source=source, sources=sources, **knobs)
+    return ShardedSSSPDelEngine(cfg, mesh=mesh, relabel=relabel)

@@ -17,6 +17,17 @@ Duplicate policy: the paper preprocesses inputs to simple graphs; adds of an
 already-present edge are dropped by default (``on_duplicate="ignore"``) or
 treated as weight-*decrease* updates (``"min"`` — still monotone, still safe
 for insertion mode; increases are dropped).
+
+Two control-plane implementations share the contract (DESIGN.md §11):
+
+* ``SlotAllocator`` — the original ``dict[(u, v), int]`` reference.  Simple,
+  but the per-row Python-object probes and ``.tolist()`` round-trips make it
+  the host-RSS and latency ceiling at E ≥ 10M.
+* ``ColumnarSlotAllocator`` — the default.  ``slot_of`` becomes an
+  open-addressing numpy hash table over packed ``(u << 32) | v`` keys and the
+  free list becomes an i32 stack, so a batch costs a handful of vectorized
+  probe rounds and zero per-edge Python objects.  Bit-identical to the dict
+  reference (pinned by tests/test_ingest.py).
 """
 from __future__ import annotations
 
@@ -35,6 +46,43 @@ class PlannedAdds(NamedTuple):
     dst: np.ndarray    # i32[m]
     w: np.ndarray      # f32[m]
     fresh: np.ndarray  # bool[m]; False = weight-decrease of an existing edge
+
+
+_MAX_ID = np.int64(1) << 31
+
+
+def _check_ids(src: np.ndarray, dst: np.ndarray) -> None:
+    """Both allocators pack (u, v) into one int64 key as (u << 32) | v; a
+    negative or ≥ 2**31 id would silently alias another edge, so reject it
+    loudly instead (ISSUE 8 regression)."""
+    for name, a in (("src", src), ("dst", dst)):
+        if len(a) == 0:
+            continue
+        lo, hi = a.min(), a.max()
+        if lo < 0 or hi >= _MAX_ID:
+            bad = int(lo) if lo < 0 else int(hi)
+            raise ValueError(
+                f"vertex id {bad} in {name} is outside [0, 2**31): packed "
+                "(src << 32) | dst keys are int64, ids beyond 31 bits would "
+                "silently alias another edge")
+
+
+def _coalesce_adds(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
+                   on_duplicate: str):
+    """Collapse within-batch duplicate (u, v) rows to one row each, in
+    first-occurrence order; "min" keeps the smallest weight among the
+    duplicates.  Returns (uu i32, vv i32, ww f32, keys i64)."""
+    key = (src << 32) | dst
+    uniq, first, inv = np.unique(key, return_index=True, return_inverse=True)
+    if len(uniq) != len(src) and on_duplicate == "min":
+        wmin = np.full(len(uniq), np.inf, np.float32)
+        np.minimum.at(wmin, inv, w)
+    else:
+        wmin = w[first]
+    order = np.argsort(first, kind="stable")
+    uu = (uniq >> 32).astype(np.int32)[order]
+    vv = (uniq & 0xFFFFFFFF).astype(np.int32)[order]
+    return uu, vv, wmin[order], uniq[order]
 
 
 class SlotAllocator:
@@ -83,20 +131,8 @@ class SlotAllocator:
         m = len(src)
         if m == 0:
             return self._empty_adds()
-        # Collapse within-batch duplicates: one row per (u,v), first-occurrence
-        # order; "min" keeps the smallest weight among the duplicates.
-        key = (src << 32) | dst
-        uniq, first, inv = np.unique(key, return_index=True,
-                                     return_inverse=True)
-        if len(uniq) != m and self.on_duplicate == "min":
-            wmin = np.full(len(uniq), np.inf, np.float32)
-            np.minimum.at(wmin, inv, w)
-        else:
-            wmin = w[first]
-        order = np.argsort(first, kind="stable")
-        uu = (uniq >> 32).astype(np.int32)[order]
-        vv = (uniq & 0xFFFFFFFF).astype(np.int32)[order]
-        ww = wmin[order]
+        _check_ids(src, dst)
+        uu, vv, ww, _ = _coalesce_adds(src, dst, w, self.on_duplicate)
 
         # Collision probe against the live-edge map (the only dict use).
         slot_of = self.slot_of
@@ -151,6 +187,7 @@ class SlotAllocator:
         is a no-op."""
         src = np.asarray(src, np.int64)
         dst = np.asarray(dst, np.int64)
+        _check_ids(src, dst)
         pop = self.slot_of.pop
         found = [(s, int(u), int(v))
                  for u, v in zip(src.tolist(), dst.tolist())
@@ -164,6 +201,249 @@ class SlotAllocator:
         self.free.extend(slots.tolist())
         self.mactive[slots] = False
         return slots, ps, pd
+
+
+# open-addressing sentinels: packed keys are always ≥ 0 (ids < 2**31)
+_EMPTY = np.int64(-1)
+_DELETED = np.int64(-2)
+# Fibonacci multiplicative hash constant (2**64 / φ)
+_HASH_MULT = np.uint64(0x9E3779B97F4A7C15)
+
+
+class ColumnarSlotAllocator:
+    """Columnar control plane: the (u, v) -> slot map as an open-addressing
+    numpy hash table, the free list as an i32 stack.  Same contract and
+    bit-identical outputs to :class:`SlotAllocator` (same slot-assignment
+    order, same duplicate/deletion semantics), but a batch of m events costs
+    a few vectorized probe rounds instead of m Python dict operations —
+    this is what keeps host RSS and ingest latency flat at E ≥ 10M.
+
+    The index table stores only packed int64 keys + i32 slots; when it fills
+    past ~3/4 (live keys + deletion tombstones) it doubles and rehashes the
+    *live* keys straight out of the column mirror — the old table is dropped
+    before the new one is populated, so growth never holds two copies of the
+    mirror columns (they are fixed-capacity and never copied at all).
+    """
+
+    def __init__(self, capacity: int, on_duplicate: str = "ignore"):
+        assert on_duplicate in ("ignore", "min")
+        self.capacity = capacity
+        self.on_duplicate = on_duplicate
+        self.msrc = np.zeros(capacity, np.int32)
+        self.mdst = np.zeros(capacity, np.int32)
+        self.mw = np.zeros(capacity, np.float32)
+        self.mactive = np.zeros(capacity, np.bool_)
+        # free stack: same bottom-to-top order as the dict reference's list
+        # (pops come off the top = high indices, batch-reversed)
+        self._free = np.arange(capacity - 1, -1, -1, dtype=np.int32)
+        self._ntop = capacity
+        self._tsize = 0
+        self._rebuild(0)
+
+    @classmethod
+    def from_pool(cls, capacity: int, on_duplicate: str, src: np.ndarray,
+                  dst: np.ndarray, w: np.ndarray, active: np.ndarray
+                  ) -> "ColumnarSlotAllocator":
+        """Rebuild planner state from a checkpointed pool snapshot."""
+        a = cls(capacity, on_duplicate)
+        act = np.asarray(active, bool)
+        a.msrc[:] = src; a.mdst[:] = dst; a.mw[:] = w; a.mactive[:] = act
+        idx = np.arange(capacity - 1, -1, -1, dtype=np.int32)
+        fr = idx[~act[idx]]
+        a._free[:len(fr)] = fr
+        a._ntop = len(fr)
+        a._rebuild(int(act.sum()))
+        return a
+
+    def active_coo(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(src, dst, w) of the live edges, from the host mirror."""
+        act = self.mactive
+        return self.msrc[act], self.mdst[act], self.mw[act]
+
+    # ------------------------------------------------------- debug/test views
+    @property
+    def slot_of(self) -> dict[tuple[int, int], int]:
+        """Dict view of the live map (O(capacity); tests/debug only)."""
+        live = np.nonzero(self.mactive)[0]
+        return {(int(self.msrc[i]), int(self.mdst[i])): int(i) for i in live}
+
+    @property
+    def free(self) -> list[int]:
+        """List view of the free stack, same order as the dict reference's
+        ``free`` list (tests/debug only)."""
+        return self._free[:self._ntop].tolist()
+
+    # -------------------------------------------------------- open addressing
+    def _probe0(self, keys: np.ndarray) -> np.ndarray:
+        h = keys.astype(np.uint64) * _HASH_MULT
+        return (h >> np.uint64(self._shift)).astype(np.int64)
+
+    def _rebuild(self, min_live: int) -> None:
+        """(Re)build the index table sized for ``min_live`` keys at ≤ 1/2
+        load, rehashing live keys from the mirror and dropping tombstones."""
+        size = max(16, self._tsize)
+        while (min_live + 1) * 2 > size:
+            size <<= 1
+        self._tkeys = np.full(size, _EMPTY, np.int64)  # old table freed here
+        self._tvals = np.zeros(size, np.int32)
+        self._tsize = size
+        self._shift = 65 - size.bit_length()  # 64 - log2(size)
+        self._used = 0  # non-EMPTY cells (live + tombstones)
+        live = np.nonzero(self.mactive)[0].astype(np.int32)
+        self._live = len(live)
+        if len(live):
+            keys = ((self.msrc[live].astype(np.int64) << 32)
+                    | self.mdst[live].astype(np.int64))
+            self._insert(keys, live)
+
+    def _lookup(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Batched probe for distinct keys.  Returns (slots i32, cells i64)
+        with -1 where absent.  Each probe round is pure array work; the loop
+        runs for the longest collision chain only."""
+        n = len(keys)
+        slots = np.full(n, -1, np.int32)
+        cells = np.full(n, -1, np.int64)
+        if n == 0 or self._used == 0:
+            return slots, cells
+        mask = self._tsize - 1
+        pos = self._probe0(keys)
+        idx = np.arange(n)
+        while len(idx):
+            p = pos[idx]
+            tk = self._tkeys[p]
+            found = tk == keys[idx]
+            if found.any():
+                slots[idx[found]] = self._tvals[p[found]]
+                cells[idx[found]] = p[found]
+            idx = idx[~(found | (tk == _EMPTY))]  # EMPTY terminates: absent
+            pos[idx] = (pos[idx] + 1) & mask
+        return slots, cells
+
+    def _insert(self, keys: np.ndarray, vals: np.ndarray) -> None:
+        """Batched insert of distinct keys known to be absent.  First free
+        cell (EMPTY or tombstone) on the chain wins; same-cell contention
+        within the batch is resolved one probe round at a time."""
+        mask = self._tsize - 1
+        pos = self._probe0(keys)
+        idx = np.arange(len(keys))
+        while len(idx):
+            p = pos[idx]
+            tk = self._tkeys[p]
+            freec = (tk == _EMPTY) | (tk == _DELETED)
+            if freec.any():
+                cand = idx[freec]
+                pc = p[freec]
+                # one winner per contended cell (first in batch order)
+                _, firsts = np.unique(pc, return_index=True)
+                win = cand[firsts]
+                wp = pc[firsts]
+                self._used += int((self._tkeys[wp] == _EMPTY).sum())
+                self._tkeys[wp] = keys[win]
+                self._tvals[wp] = vals[win]
+                keep = np.ones(len(idx), bool)
+                keep[np.searchsorted(idx, win)] = False
+                idx = idx[keep]
+            pos[idx] = (pos[idx] + 1) & mask
+
+    def _ensure_headroom(self, k: int) -> None:
+        """Grow/compact before inserting k keys: keep live load ≤ 1/2 and
+        live+tombstone load ≤ 3/4 so every probe chain hits an EMPTY cell."""
+        if ((self._live + k) * 2 > self._tsize
+                or (self._used + k) * 4 > self._tsize * 3):
+            self._rebuild(self._live + k)
+
+    # ------------------------------------------------------------------ adds
+    def plan_adds(self, src: np.ndarray, dst: np.ndarray, w: np.ndarray
+                  ) -> PlannedAdds:
+        """Plan a batch of insertions; returns the accepted writes."""
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int64)
+        w = np.asarray(w, np.float32)
+        if len(src) == 0:
+            return SlotAllocator._empty_adds()
+        _check_ids(src, dst)
+        uu, vv, ww, keys = _coalesce_adds(src, dst, w, self.on_duplicate)
+
+        slots, _ = self._lookup(keys)
+        hit = slots >= 0
+
+        out: list[tuple[np.ndarray, ...]] = []
+        new_u, new_v, new_w = uu[~hit], vv[~hit], ww[~hit]
+        k = len(new_u)
+        if k:
+            if k > self._ntop:
+                raise RuntimeError("edge pool capacity exhausted")
+            new_slots = self._free[self._ntop - k:self._ntop][::-1].copy()
+            self._ntop -= k
+            self._ensure_headroom(k)
+            self._insert(keys[~hit], new_slots)
+            self._live += k
+            self.msrc[new_slots] = new_u
+            self.mdst[new_slots] = new_v
+            self.mw[new_slots] = new_w
+            self.mactive[new_slots] = True
+            out.append((new_slots, new_u, new_v, new_w,
+                        np.ones(k, np.bool_)))
+
+        if hit.any() and self.on_duplicate == "min":
+            dslots, du, dv, dw = slots[hit], uu[hit], vv[hit], ww[hit]
+            better = dw < self.mw[dslots]  # weight increases are dropped
+            if better.any():
+                dslots, du, dv, dw = (dslots[better], du[better],
+                                      dv[better], dw[better])
+                self.mw[dslots] = dw
+                out.append((dslots, du, dv, dw,
+                            np.zeros(len(dslots), np.bool_)))
+
+        if not out:
+            return SlotAllocator._empty_adds()
+        return PlannedAdds(*(np.concatenate(parts) for parts in zip(*out)))
+
+    # ------------------------------------------------------------------ dels
+    def plan_dels(self, src: np.ndarray, dst: np.ndarray):
+        """Returns (slots, src, dst) for deletions of edges that exist.
+        Deleting a non-existent edge (or the same edge twice in one batch)
+        is a no-op — identical semantics to the dict reference."""
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int64)
+        _check_ids(src, dst)
+        z32 = np.empty(0, np.int32)
+        if len(src) == 0:
+            return z32, z32.copy(), z32.copy()
+        # in-batch duplicate dels collapse to the first occurrence
+        key = (src << 32) | dst
+        uniq, first = np.unique(key, return_index=True)
+        keys = uniq[np.argsort(first, kind="stable")]
+        slots, cells = self._lookup(keys)
+        found = slots >= 0
+        if not found.any():
+            return z32, z32.copy(), z32.copy()
+        fslots = slots[found]
+        fkeys = keys[found]
+        self._tkeys[cells[found]] = _DELETED  # tombstone; _used unchanged
+        self._live -= len(fslots)
+        self._free[self._ntop:self._ntop + len(fslots)] = fslots
+        self._ntop += len(fslots)
+        self.mactive[fslots] = False
+        return (fslots, (fkeys >> 32).astype(np.int32),
+                (fkeys & 0xFFFFFFFF).astype(np.int32))
+
+
+ALLOC_IMPLS = ("columnar", "dict")
+
+
+def allocator_cls(impl: str = "columnar"):
+    """Resolve an ``alloc_impl`` config knob to an allocator class."""
+    if impl not in ALLOC_IMPLS:
+        raise ValueError(
+            f"unknown alloc_impl {impl!r}; valid values: {ALLOC_IMPLS}")
+    return ColumnarSlotAllocator if impl == "columnar" else SlotAllocator
+
+
+def make_allocator(capacity: int, on_duplicate: str = "ignore",
+                   impl: str = "columnar"):
+    """Construct the configured control-plane implementation."""
+    return allocator_cls(impl)(capacity, on_duplicate)
 
 
 def pad_pow2(*arrays: np.ndarray) -> tuple[np.ndarray, ...]:

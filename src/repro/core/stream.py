@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable
+from typing import Any, Callable, Iterable
 
 import jax
 import jax.numpy as jnp
@@ -209,26 +209,35 @@ class StreamEngineBase:
                            source=None if source is None else int(source))
 
     # ---------------------------------------------------------------- stream
-    def ingest_log(self, log: ev.EventLog,
+    def ingest_log(self, log: "ev.EventLog | Iterable[ev.EventLog]",
                    on_query: Callable[[QueryResult], None] | None = None
                    ) -> list[QueryResult]:
         """Drive the engine over an event log; returns query results.
+
+        ``log`` may be a single ``EventLog`` or any iterable of them (e.g.
+        a generator lowering ``TraceReader.chunks()``): chunks are ingested
+        in order with only the current chunk resident, so paper-scale
+        streams cost O(chunk) host memory here (DESIGN.md §11).  A run
+        split across a chunk boundary ingests as two batches — converged
+        results are identical, epoch counters may differ.
 
         QUERY markers carrying a source (events.query_marker(source=s)) are
         routed to that lane on a batched engine; markers with ``-1`` (and
         every marker on a single-source engine) read the full state.
         """
+        chunks = [log] if isinstance(log, ev.EventLog) else log
         results: list[QueryResult] = []
-        for batch in log.runs():
-            if batch.kind == ev.ADD:
-                self._ingest_adds(batch)
-            elif batch.kind == ev.DEL:
-                self._ingest_dels(batch)
-            else:
-                res = self.query(source=self.route_of(batch.query_source))
-                results.append(res)
-                if on_query is not None:
-                    on_query(res)
+        for chunk in chunks:
+            for batch in chunk.runs():
+                if batch.kind == ev.ADD:
+                    self._ingest_adds(batch)
+                elif batch.kind == ev.DEL:
+                    self._ingest_dels(batch)
+                else:
+                    res = self.query(source=self.route_of(batch.query_source))
+                    results.append(res)
+                    if on_query is not None:
+                        on_query(res)
         return results
 
     # ---------------------------------------------------------- observability

@@ -24,7 +24,7 @@ from typing import Callable
 from repro.core import events as ev
 from repro.core.stream import QueryResult, StreamEngineBase
 from repro.serving.metrics import ServingReport, churn, percentiles
-from repro.serving.trace import ServingTrace
+from repro.serving.trace import ServingTrace, TraceReader
 
 
 def _engine_label(engine: StreamEngineBase) -> str:
@@ -33,11 +33,21 @@ def _engine_label(engine: StreamEngineBase) -> str:
     return f"{kind}/{getattr(engine.cfg, 'relax_backend', '?')}"
 
 
-def replay_trace(engine: StreamEngineBase, trace: ServingTrace, *,
+def replay_trace(engine: StreamEngineBase,
+                 trace: ServingTrace | TraceReader, *,
                  pace: bool = False,
                  on_query: Callable[[QueryResult], None] | None = None
                  ) -> ServingReport:
     """Replay ``trace`` through ``engine``; returns the ``ServingReport``.
+
+    ``trace`` may be an in-memory ``ServingTrace`` or a streaming
+    ``TraceReader`` (serving/trace.py): the replay loop consumes one chunk
+    at a time, so peak host memory is O(chunk) + the engine's own state,
+    never O(stream).  A run of consecutive ADDs (or DELs) that straddles a
+    chunk boundary ingests as two batches — the converged (dist, parent)
+    is identical (insertion is order-free, deletions are per-event unless
+    ``batch_deletions``), only epoch counters may differ from a monolithic
+    replay.
 
     Latency comes from each ``QueryResult.latency_s`` (the snapshot
     readback timed in ``StreamEngineBase.query``).  Churn compares each
@@ -46,45 +56,57 @@ def replay_trace(engine: StreamEngineBase, trace: ServingTrace, *,
     observation of a scope contributes no churn sample.  Throughput is
     topology events over the whole replay wall-clock.
     """
-    log = trace.to_log()
+    chunks = (trace.chunks() if isinstance(trace, TraceReader)
+              else iter((trace,)))
     latencies: list[float] = []
     churns: list[dict[str, float]] = []
     prev: dict[object, tuple] = {}
     n_queries = 0
-    cursor = 0
+    n_events = 0
+    n_topo = 0
+    t_first: float | None = None
     t0 = time.perf_counter()
-    for batch in log.runs():
-        if pace:
-            lag = float(trace.t[cursor] - trace.t[0]) \
-                - (time.perf_counter() - t0)
-            if lag > 0:
-                time.sleep(lag)
-        if batch.kind == ev.ADD:
-            engine._ingest_adds(batch)
-            cursor += len(batch)
-        elif batch.kind == ev.DEL:
-            engine._ingest_dels(batch)
-            cursor += len(batch)
-        else:
-            res = engine.query(source=engine.route_of(batch.query_source))
-            n_queries += 1
-            cursor += 1
-            latencies.append(res.latency_s)
-            key = res.source if res.source is not None else "*"
-            if key in prev:
-                pd, pp = prev[key]
-                churns.append(churn(pd, pp, res.dist, res.parent))
-            prev[key] = (res.dist, res.parent)
-            if on_query is not None:
-                on_query(res)
+    for piece in chunks:
+        if len(piece) == 0:
+            continue
+        if t_first is None:
+            t_first = float(piece.t[0])
+        n_events += len(piece)
+        n_topo += piece.n_topology
+        log = piece.to_log()
+        cursor = 0
+        for batch in log.runs():
+            if pace:
+                lag = float(piece.t[cursor] - t_first) \
+                    - (time.perf_counter() - t0)
+                if lag > 0:
+                    time.sleep(lag)
+            if batch.kind == ev.ADD:
+                engine._ingest_adds(batch)
+                cursor += len(batch)
+            elif batch.kind == ev.DEL:
+                engine._ingest_dels(batch)
+                cursor += len(batch)
+            else:
+                res = engine.query(
+                    source=engine.route_of(batch.query_source))
+                n_queries += 1
+                cursor += 1
+                latencies.append(res.latency_s)
+                key = res.source if res.source is not None else "*"
+                if key in prev:
+                    pd, pp = prev[key]
+                    churns.append(churn(pd, pp, res.dist, res.parent))
+                prev[key] = (res.dist, res.parent)
+                if on_query is not None:
+                    on_query(res)
     wall = time.perf_counter() - t0
-    n_topo = trace.n_topology
     mean = (lambda k: (sum(c[k] for c in churns) / len(churns))
             if churns else 0.0)
     return ServingReport(
         engine=_engine_label(engine),
         n_sources=len(engine.sources) if engine.sources else 1,
-        events=len(trace),
+        events=n_events,
         topology_events=n_topo,
         queries=n_queries,
         wall_s=wall,

@@ -24,6 +24,14 @@ magic) with struct-of-arrays columns:
 query-source column rides along — events.py QUERY markers carry it);
 ``from_log`` lifts a generated log into a trace with synthetic timestamps.
 ``TraceRecorder`` stamps live events with a monotonic clock.
+
+Format (version 2) — the chunked container for paper-scale streams
+(DESIGN.md §11): the same five columns, split into fixed-size chunks stored
+as separate npz members (``kind_00000000``, ``src_00000000``, ...) plus a
+``chunk_sizes`` index.  npz members decompress lazily, so ``open_trace`` /
+``TraceReader.chunks()`` stream the file with O(chunk) peak host memory —
+replaying a 10M-event trace never materializes 10M-row columns.  Version-1
+files still load (and read as a single chunk).
 """
 from __future__ import annotations
 
@@ -36,8 +44,9 @@ import numpy as np
 from repro.core import events as ev
 
 TRACE_MAGIC = "sssp-del-trace"
-TRACE_VERSION = 1
+TRACE_VERSION = 2
 _COLUMNS = ("kind", "src", "dst", "w", "t")
+_DTYPES = (np.uint8, np.int64, np.int64, np.float32, np.float64)
 
 
 class TraceFormatError(ValueError):
@@ -101,12 +110,32 @@ class ServingTrace:
                             np.asarray(log.dst, np.int64),
                             np.asarray(log.w, np.float32), t)
 
+    # ----------------------------------------------------------------- chunks
+    def iter_chunks(self, events_per_chunk: int):
+        """Yield this trace as consecutive slices of ≤ ``events_per_chunk``
+        rows (views, no copies) — the in-memory side of the chunked path."""
+        if events_per_chunk < 1:
+            raise ValueError(f"events_per_chunk must be >= 1; got "
+                             f"{events_per_chunk}")
+        for lo in range(0, len(self), events_per_chunk):
+            hi = lo + events_per_chunk
+            yield ServingTrace(self.kind[lo:hi], self.src[lo:hi],
+                               self.dst[lo:hi], self.w[lo:hi], self.t[lo:hi])
+
     # ------------------------------------------------------------------ disk
-    def save(self, path: str) -> None:
+    def save(self, path: str, *, chunk_events: int | None = None) -> None:
+        """Write version 1 (monolithic columns) by default; passing
+        ``chunk_events`` writes the version-2 chunked container, which
+        ``open_trace`` can later replay with O(chunk) peak memory."""
+        if chunk_events is not None:
+            with ChunkedTraceWriter(path) as wr:
+                for piece in self.iter_chunks(chunk_events):
+                    wr.append(piece)
+            return
         with open(path, "wb") as f:
             np.savez_compressed(
                 f, magic=np.asarray(TRACE_MAGIC),
-                version=np.asarray(TRACE_VERSION),
+                version=np.asarray(1),
                 kind=self.kind.astype(np.uint8),
                 src=self.src.astype(np.int64),
                 dst=self.dst.astype(np.int64),
@@ -115,32 +144,145 @@ class ServingTrace:
 
     @staticmethod
     def load(path: str) -> "ServingTrace":
-        """Load and validate a trace.  Raises ``FileNotFoundError`` for a
-        missing path and ``TraceFormatError`` for anything that is not a
-        compatible trace (CLI entry points map both to exit code 2)."""
+        """Load and validate a trace (either version, fully materialized).
+        Raises ``FileNotFoundError`` for a missing path and
+        ``TraceFormatError`` for anything that is not a compatible trace
+        (CLI entry points map both to exit code 2).  For O(chunk)-memory
+        streaming of version-2 files use ``open_trace`` instead."""
+        with open_trace(path) as r:
+            pieces = list(r.chunks())
+        if not pieces:
+            z8, z64 = np.empty(0, np.uint8), np.empty(0, np.int64)
+            return ServingTrace(z8, z64, z64.copy(),
+                                np.empty(0, np.float32),
+                                np.empty(0, np.float64))
+        if len(pieces) == 1:
+            return pieces[0]
+        return ServingTrace(*(np.concatenate([getattr(p, c) for p in pieces])
+                              for c in _COLUMNS))
+
+
+class ChunkedTraceWriter:
+    """Incremental version-2 trace writer: append ``ServingTrace`` pieces
+    one at a time; nothing but the current piece is ever resident, so a
+    stream synthesizer can emit a 10M-event trace in O(chunk) memory.
+
+    Members are standard ``.npy`` entries in a deflated zip — byte-level
+    compatible with ``np.savez_compressed`` / ``np.load``.
+    """
+
+    def __init__(self, path: str):
+        self._zf = zipfile.ZipFile(path, "w", zipfile.ZIP_DEFLATED)
+        self._sizes: list[int] = []
+        self._closed = False
+
+    def _member(self, name: str, arr: np.ndarray) -> None:
+        import io
+
+        from numpy.lib import format as npf
+        buf = io.BytesIO()
+        # note: np.ascontiguousarray would promote the 0-d magic/version
+        # members to 1-d, which np.savez does not do
+        npf.write_array(buf, np.asarray(arr), allow_pickle=False)
+        self._zf.writestr(name + ".npy", buf.getvalue())
+
+    def append(self, piece: ServingTrace) -> None:
+        assert not self._closed, "writer already closed"
+        i = len(self._sizes)
+        for col, dt in zip(_COLUMNS, _DTYPES):
+            self._member(f"{col}_{i:08d}", getattr(piece, col).astype(dt))
+        self._sizes.append(len(piece))
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._member("magic", np.asarray(TRACE_MAGIC))
+        self._member("version", np.asarray(TRACE_VERSION))
+        self._member("chunk_sizes", np.asarray(self._sizes, np.int64))
+        self._zf.close()
+        self._closed = True
+
+    def __enter__(self) -> "ChunkedTraceWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class TraceReader:
+    """Streaming handle over an on-disk trace: ``chunks()`` yields
+    ``ServingTrace`` pieces, decompressing one chunk's members at a time
+    (npz entries load lazily), so replay memory is O(chunk) not O(stream).
+
+    Version-1 files read as a single chunk — correct, but without the
+    memory bound; write with ``save(chunk_events=...)`` to get it.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
         try:
-            z = np.load(path, allow_pickle=False)
+            self._z = np.load(path, allow_pickle=False)
         except (zipfile.BadZipFile, ValueError, OSError) as e:
             # np.load raises plain ValueError for non-npz bytes
             if isinstance(e, FileNotFoundError):
                 raise
             raise TraceFormatError(f"{path}: not a readable trace "
                                    f"({e})") from e
-        with z:
-                files = set(z.files)
-                if "magic" not in files or str(z["magic"]) != TRACE_MAGIC:
-                    raise TraceFormatError(
-                        f"{path}: not a {TRACE_MAGIC} file")
-                version = int(z["version"])
-                if version > TRACE_VERSION:
-                    raise TraceFormatError(
-                        f"{path}: trace version {version} is newer than "
-                        f"supported {TRACE_VERSION}")
+        try:
+            files = set(self._z.files)
+            if "magic" not in files or str(self._z["magic"]) != TRACE_MAGIC:
+                raise TraceFormatError(f"{path}: not a {TRACE_MAGIC} file")
+            self.version = int(self._z["version"])
+            if self.version > TRACE_VERSION:
+                raise TraceFormatError(
+                    f"{path}: trace version {self.version} is newer than "
+                    f"supported {TRACE_VERSION}")
+            if self.version == 1:
                 missing = [c for c in _COLUMNS if c not in files]
                 if missing:
                     raise TraceFormatError(
                         f"{path}: missing column(s) {missing}")
-                return ServingTrace(*(z[c] for c in _COLUMNS))
+                self.chunk_sizes = None  # length known only after reading
+            else:
+                if "chunk_sizes" not in files:
+                    raise TraceFormatError(f"{path}: missing chunk_sizes")
+                self.chunk_sizes = self._z["chunk_sizes"].astype(np.int64)
+                missing = [f"{c}_{i:08d}"
+                           for i in range(len(self.chunk_sizes))
+                           for c in _COLUMNS
+                           if f"{c}_{i:08d}" not in files]
+                if missing:
+                    raise TraceFormatError(
+                        f"{path}: missing chunk member(s) {missing[:4]}")
+        except Exception:
+            self._z.close()
+            raise
+
+    @property
+    def n_chunks(self) -> int:
+        return 1 if self.chunk_sizes is None else len(self.chunk_sizes)
+
+    def chunks(self):
+        """Yield the trace as ``ServingTrace`` pieces, in stream order."""
+        if self.chunk_sizes is None:
+            yield ServingTrace(*(self._z[c] for c in _COLUMNS))
+            return
+        for i in range(len(self.chunk_sizes)):
+            yield ServingTrace(*(self._z[f"{c}_{i:08d}"] for c in _COLUMNS))
+
+    def close(self) -> None:
+        self._z.close()
+
+    def __enter__(self) -> "TraceReader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def open_trace(path: str) -> TraceReader:
+    """Open a trace for chunked streaming (see ``TraceReader``)."""
+    return TraceReader(path)
 
 
 def load_trace_or_exit(path: str) -> ServingTrace:

@@ -226,13 +226,31 @@ def test_arch_config_bridges_backend_selection():
     from repro.configs import sssp_del as c_sssp
     arch = dataclasses.replace(c_sssp.REDUCED, relax_backend="ellpack",
                                num_vertices=64, ell_init_k=2)
-    eng = SSSPDelEngine(arch.engine_config(edge_capacity=256, source=0))
+    eng = arch.make_engine(edge_capacity=256, source=0)
+    assert isinstance(eng, SSSPDelEngine)
     assert isinstance(eng.backend, EllpackBackend)
     eng.ingest_log(ev.adds([0, 1, 2], [1, 2, 3], [1.0, 1.0, 1.0]))
     _oracle_check(eng, 64, 0)
-    sh_cfg = dataclasses.replace(arch, edges_per_part=256) \
-        .sharded_engine_config(source=0)
-    assert sh_cfg.relax_backend == "ellpack" and sh_cfg.ell_init_k == 2
+    sh = dataclasses.replace(arch, edges_per_part=256) \
+        .make_engine(partitions=1, source=0)
+    assert sh.cfg.relax_backend == "ellpack" and sh.cfg.ell_init_k == 2
+    assert sh.cfg.edges_per_part == 256 and sh.P == 1
+
+
+def test_arch_config_deprecated_bridges_warn_but_work():
+    """engine_config / sharded_engine_config stay as thin shims that point
+    at make_engine (DESIGN.md §11.5)."""
+    import dataclasses
+    import warnings
+    from repro.configs import sssp_del as c_sssp
+    arch = dataclasses.replace(c_sssp.REDUCED, num_vertices=64,
+                               edges_per_part=256)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        cfg = arch.engine_config(edge_capacity=256, source=0)
+        sh_cfg = arch.sharded_engine_config(source=0)
+    assert [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert cfg.num_vertices == 64 and sh_cfg.edges_per_part == 256
 
 
 @pytest.mark.parametrize("backend", ["ellpack", "sliced"])

@@ -1,9 +1,15 @@
 """Ingestion-layer unit tests: pad_pow2 contract, vectorized slot planning,
-and the host COO mirror the ELL rebuild path depends on."""
+and the host COO mirror the ELL rebuild path depends on.
+
+The allocator tests run against BOTH control planes (DESIGN.md §11): the
+dict reference and the columnar open-addressing implementation, which is
+pinned bit-identical to the reference (same slot order, same free-stack
+order) by the property test at the bottom."""
 import numpy as np
 import pytest
 
 from repro.core import ingest
+from repro.testing import given, settings, st
 
 
 # ---------------------------------------------------------------- pad_pow2 --
@@ -41,12 +47,17 @@ def test_pad_pow2_rejects_mismatched_lengths():
 
 
 # ----------------------------------------------------------- SlotAllocator --
-def _alloc(cap=32, dup="ignore"):
-    return ingest.SlotAllocator(cap, dup)
+@pytest.fixture(params=ingest.ALLOC_IMPLS)
+def impl(request):
+    return request.param
 
 
-def test_plan_adds_assigns_distinct_slots_and_mirror():
-    a = _alloc()
+def _alloc(cap=32, dup="ignore", impl="dict"):
+    return ingest.make_allocator(cap, dup, impl=impl)
+
+
+def test_plan_adds_assigns_distinct_slots_and_mirror(impl):
+    a = _alloc(impl=impl)
     plan = a.plan_adds(np.array([0, 1, 2]), np.array([1, 2, 3]),
                        np.array([1.0, 2.0, 3.0]))
     assert len(np.unique(plan.slots)) == 3
@@ -56,8 +67,8 @@ def test_plan_adds_assigns_distinct_slots_and_mirror():
     np.testing.assert_allclose(np.sort(mw), [1.0, 2.0, 3.0])
 
 
-def test_plan_adds_ignore_drops_duplicates_within_and_across_batches():
-    a = _alloc()
+def test_plan_adds_ignore_drops_duplicates_within_and_across_batches(impl):
+    a = _alloc(impl=impl)
     p1 = a.plan_adds(np.array([0, 0, 0]), np.array([1, 1, 2]),
                      np.array([1.0, 9.0, 2.0]))
     assert len(p1.slots) == 2  # in-batch dup of (0,1) collapsed to first
@@ -65,8 +76,8 @@ def test_plan_adds_ignore_drops_duplicates_within_and_across_batches():
     assert len(p2.slots) == 0  # cross-batch duplicate dropped
 
 
-def test_plan_adds_min_keeps_decreases_drops_increases():
-    a = _alloc(dup="min")
+def test_plan_adds_min_keeps_decreases_drops_increases(impl):
+    a = _alloc(dup="min", impl=impl)
     a.plan_adds(np.array([0]), np.array([1]), np.array([4.0]))
     p = a.plan_adds(np.array([0, 0]), np.array([1, 1]), np.array([9.0, 3.0]))
     # in-batch min is 3.0 < 4.0 -> one non-fresh decrease emitted
@@ -78,8 +89,8 @@ def test_plan_adds_min_keeps_decreases_drops_increases():
     assert mw[0] == pytest.approx(3.0)
 
 
-def test_plan_dels_pops_and_frees():
-    a = _alloc(cap=4)
+def test_plan_dels_pops_and_frees(impl):
+    a = _alloc(cap=4, impl=impl)
     p = a.plan_adds(np.array([0, 1]), np.array([1, 2]), np.array([1.0, 1.0]))
     slots, ps, pd = a.plan_dels(np.array([0, 0, 5]), np.array([1, 1, 6]))
     assert slots.tolist() == [p.slots[0]]  # dup del + missing edge are no-ops
@@ -90,20 +101,132 @@ def test_plan_dels_pops_and_frees():
     assert len(p2.slots) == 2
 
 
-def test_capacity_exhaustion_raises():
-    a = _alloc(cap=2)
+def test_capacity_exhaustion_raises(impl):
+    a = _alloc(cap=2, impl=impl)
     a.plan_adds(np.array([0, 1]), np.array([1, 2]), np.array([1.0, 1.0]))
     with pytest.raises(RuntimeError):
         a.plan_adds(np.array([2]), np.array([3]), np.array([1.0]))
 
 
-def test_from_pool_roundtrip():
-    a = _alloc(cap=8)
+def test_from_pool_roundtrip(impl):
+    a = _alloc(cap=8, impl=impl)
     a.plan_adds(np.array([0, 1, 2]), np.array([1, 2, 3]),
                 np.array([1.0, 2.0, 3.0]))
     a.plan_dels(np.array([1]), np.array([2]))
-    b = ingest.SlotAllocator.from_pool(8, "ignore", a.msrc, a.mdst, a.mw,
-                                       a.mactive)
+    b = ingest.allocator_cls(impl).from_pool(8, "ignore", a.msrc, a.mdst,
+                                             a.mw, a.mactive)
     assert b.slot_of == a.slot_of
     assert sorted(b.free) == sorted(a.free)
     np.testing.assert_array_equal(b.mactive, a.mactive)
+
+# ------------------------------------------------- vertex-id validation ----
+@pytest.mark.parametrize("bad", [-1, 1 << 31, (1 << 31) + 7])
+def test_plan_adds_rejects_out_of_range_ids(impl, bad):
+    """Regression: ids outside [0, 2**31) would silently alias another edge
+    in the packed (src << 32) | dst int64 key — must raise instead."""
+    a = _alloc(impl=impl)
+    with pytest.raises(ValueError, match=r"outside \[0, 2\*\*31\)"):
+        a.plan_adds(np.array([0, bad]), np.array([1, 2]),
+                    np.array([1.0, 1.0]))
+    with pytest.raises(ValueError, match=r"outside \[0, 2\*\*31\)"):
+        a.plan_adds(np.array([0]), np.array([bad]), np.array([1.0]))
+
+
+@pytest.mark.parametrize("bad", [-1, 1 << 31])
+def test_plan_dels_rejects_out_of_range_ids(impl, bad):
+    a = _alloc(impl=impl)
+    a.plan_adds(np.array([0]), np.array([1]), np.array([1.0]))
+    with pytest.raises(ValueError, match=r"outside \[0, 2\*\*31\)"):
+        a.plan_dels(np.array([bad]), np.array([1]))
+
+
+def test_max_valid_id_is_accepted(impl):
+    top = (1 << 31) - 1
+    a = _alloc(impl=impl)
+    p = a.plan_adds(np.array([top]), np.array([top - 1]), np.array([1.0]))
+    assert len(p.slots) == 1
+    slots, _, _ = a.plan_dels(np.array([top]), np.array([top - 1]))
+    assert slots.tolist() == p.slots.tolist()
+
+
+def test_make_allocator_unknown_impl_raises():
+    with pytest.raises(ValueError, match="valid values"):
+        ingest.make_allocator(8, impl="btree")
+
+
+# --------------------------------- columnar == dict reference (property) ---
+def _assert_same_state(cols, ref):
+    assert cols.slot_of == ref.slot_of
+    assert cols.free == ref.free  # ORDER matters: same future slot choices
+    np.testing.assert_array_equal(cols.mactive, ref.mactive)
+    np.testing.assert_array_equal(cols.msrc, ref.msrc)
+    np.testing.assert_array_equal(cols.mdst, ref.mdst)
+    np.testing.assert_array_equal(cols.mw, ref.mw)
+
+
+def _assert_same_plan(pc, pr):
+    np.testing.assert_array_equal(pc.slots, pr.slots)
+    np.testing.assert_array_equal(pc.src, pr.src)
+    np.testing.assert_array_equal(pc.dst, pr.dst)
+    np.testing.assert_array_equal(pc.w, pr.w)
+    np.testing.assert_array_equal(pc.fresh, pr.fresh)
+
+
+@settings(max_examples=6)
+@given(seed=st.integers(min_value=0, max_value=1 << 20),
+       dup=st.sampled_from(["ignore", "min"]))
+def test_columnar_matches_dict_reference(seed, dup):
+    """Bit-identity pin (DESIGN.md §11): over randomized add / del /
+    duplicate / checkpoint-restore sequences, the columnar allocator makes
+    the same slot choices in the same order as the dict reference — plans,
+    slot_of, free-stack ORDER and mirrors all equal at every step."""
+    rng = np.random.default_rng(seed)
+    # a few huge ids keep the packed-key/hash path honest
+    ids = np.array([0, 1, 2, 3, 5, 8, 13, 100, 10**6, (1 << 31) - 1],
+                   dtype=np.int64)
+    cap = len(ids) * len(ids) + 16
+    ref = ingest.make_allocator(cap, dup, impl="dict")
+    col = ingest.make_allocator(cap, dup, impl="columnar")
+    for _ in range(50):
+        op = rng.random()
+        k = int(rng.integers(1, 9))
+        src = ids[rng.integers(0, len(ids), k)]
+        dst = ids[rng.integers(0, len(ids), k)]
+        if op < 0.55:
+            w = rng.uniform(0.1, 4.0, k).astype(np.float32)
+            _assert_same_plan(col.plan_adds(src, dst, w),
+                              ref.plan_adds(src, dst, w))
+        elif op < 0.9:
+            sc, psc, pdc = col.plan_dels(src, dst)
+            sr, psr, pdr = ref.plan_dels(src, dst)
+            np.testing.assert_array_equal(sc, sr)
+            np.testing.assert_array_equal(psc, psr)
+            np.testing.assert_array_equal(pdc, pdr)
+        else:  # checkpoint-restore: both sides rebuilt from pool mirrors
+            ref = ingest.SlotAllocator.from_pool(
+                cap, dup, ref.msrc, ref.mdst, ref.mw, ref.mactive)
+            col = ingest.ColumnarSlotAllocator.from_pool(
+                cap, dup, col.msrc, col.mdst, col.mw, col.mactive)
+        _assert_same_state(col, ref)
+
+
+def test_columnar_table_growth_matches_dict():
+    """Churn past several index doublings/compactions: the capacity-growing
+    open-addressing table never changes slot-assignment order."""
+    cap = 5000
+    ref = ingest.make_allocator(cap, impl="dict")
+    col = ingest.make_allocator(cap, impl="columnar")
+    rng = np.random.default_rng(0)
+    for step in range(8):
+        m = 600
+        src = rng.integers(0, 3000, m)
+        dst = rng.integers(0, 3000, m)
+        w = rng.uniform(0.1, 1.0, m).astype(np.float32)
+        _assert_same_plan(col.plan_adds(src, dst, w),
+                          ref.plan_adds(src, dst, w))
+        ds = rng.integers(0, 3000, m // 2)
+        dd = rng.integers(0, 3000, m // 2)
+        np.testing.assert_array_equal(col.plan_dels(ds, dd)[0],
+                                      ref.plan_dels(ds, dd)[0])
+    assert col._tsize > 1024  # the index actually grew
+    _assert_same_state(col, ref)

@@ -1,0 +1,391 @@
+"""Paper-scale ingest stack (DESIGN.md §11): columnar control plane at the
+engine level, chunked trace replay, the real-dataset loader, the
+``make_engine`` factory, and the stable ``repro`` public surface.
+
+Allocator-level bit-identity is pinned in tests/test_ingest.py; here the
+pin is end-to-end: a full dynamic stream through engines that differ ONLY
+in ``alloc_impl`` must produce identical (dist, parent) at every query and
+identical device counters — across relaxation backends and under sharding.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro
+from repro.core import events as ev
+from repro.graphs import datasets as ds
+from repro.graphs import generators, window
+from repro.launch.mesh import _mk
+from repro.serving.replay import replay_trace
+from repro.serving.trace import ServingTrace, TraceFormatError
+
+HERE = os.path.dirname(__file__)
+
+BACKEND_KW = {
+    "segment": {},
+    "ellpack": dict(ell_init_k=2),
+    "sliced": dict(sliced_slice_rows=8, sliced_hub_k=4, sliced_init_k=1),
+}
+
+
+def _dynamic_stream(seed, *, n=90, m=520, delta=0.6):
+    n, src, dst, w = generators.erdos_renyi(n, m, seed=seed)
+    log = window.sliding_window_stream(src, dst, w, window=m // 3,
+                                       delta=delta, seed=seed,
+                                       query_every=m // 2)
+    return n, len(src), log
+
+
+def _assert_results_equal(res_a, res_b):
+    assert len(res_a) == len(res_b)
+    for i, (a, b) in enumerate(zip(res_a, res_b)):
+        np.testing.assert_array_equal(a.dist, b.dist,
+                                      err_msg=f"dist mismatch at query {i}")
+        np.testing.assert_array_equal(a.parent, b.parent,
+                                      err_msg=f"parent mismatch at query {i}")
+
+
+# ----------------------------- engine-level columnar == dict bit-identity --
+@pytest.mark.parametrize("backend", ["segment", "ellpack", "sliced"])
+def test_engine_columnar_matches_dict_single(backend):
+    n, m, log = _dynamic_stream(seed=41)
+    kw = BACKEND_KW[backend]
+    res = {}
+    for impl in ("dict", "columnar"):
+        eng = repro.make_engine(num_vertices=n, edge_capacity=m + 64,
+                                source=3, relax_backend=backend,
+                                alloc_impl=impl, **kw)
+        res[impl] = eng.ingest_log(log) + [eng.query()]
+        res[impl + "_stats"] = (eng.n_rounds, eng.n_messages, eng.n_epochs,
+                                eng.n_adds, eng.n_dels)
+    _assert_results_equal(res["dict"], res["columnar"])
+    assert res["dict_stats"] == res["columnar_stats"]
+
+
+@pytest.mark.parametrize("backend", ["segment", "ellpack", "sliced"])
+def test_engine_columnar_matches_dict_sharded_p1(backend):
+    n, m, log = _dynamic_stream(seed=43)
+    kw = BACKEND_KW[backend]
+    res = {}
+    for impl in ("dict", "columnar"):
+        eng = repro.make_engine(num_vertices=n, edge_capacity=m + 64,
+                                source=3, partitions=1,
+                                relax_backend=backend, alloc_impl=impl, **kw)
+        res[impl] = eng.ingest_log(log) + [eng.query()]
+        res[impl + "_stats"] = (eng.n_rounds, eng.n_messages, eng.n_epochs)
+    _assert_results_equal(res["dict"], res["columnar"])
+    assert res["dict_stats"] == res["columnar_stats"]
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs 8 devices (CI runs this module with "
+                           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+@pytest.mark.parametrize("backend", ["segment", "ellpack", "sliced"])
+def test_engine_columnar_matches_dict_sharded_p8(backend):
+    n, m, log = _dynamic_stream(seed=47, n=120, m=700)
+    kw = BACKEND_KW[backend]
+    res = {}
+    for impl in ("dict", "columnar"):
+        eng = repro.make_engine(num_vertices=n, edge_capacity=m + 64,
+                                source=5, partitions=8,
+                                relax_backend=backend, alloc_impl=impl, **kw)
+        assert eng.P == 8
+        res[impl] = eng.ingest_log(log) + [eng.query()]
+    _assert_results_equal(res["dict"], res["columnar"])
+
+
+def test_engine_checkpoint_restore_preserves_alloc_impl():
+    """restore() must rebuild the SAME control plane the config names —
+    and the restored columnar engine stays bit-identical to dict."""
+    n, m, log = _dynamic_stream(seed=53)
+    half = len(log) // 2
+    res = {}
+    for impl in ("dict", "columnar"):
+        eng = repro.make_engine(num_vertices=n, edge_capacity=m + 64,
+                                source=3, alloc_impl=impl)
+        eng.ingest_log(log[:half])
+        ckpt = eng.checkpoint()
+        eng2 = repro.make_engine(num_vertices=n, edge_capacity=m + 64,
+                                 source=3, alloc_impl=impl)
+        eng2.restore(ckpt)
+        assert type(eng2.alloc).__name__ == type(eng.alloc).__name__
+        res[impl] = eng2.ingest_log(log[half:]) + [eng2.query()]
+    _assert_results_equal(res["dict"], res["columnar"])
+
+
+# --------------------------------------------------- chunked trace + replay --
+def _small_trace(seed=11):
+    n, m, log = _dynamic_stream(seed=seed)
+    return n, m, ServingTrace.from_log(log, events_per_s=1e5)
+
+
+def test_chunked_save_load_equals_monolithic(tmp_path):
+    n, m, trace = _small_trace()
+    p1 = str(tmp_path / "v1.npz")
+    p2 = str(tmp_path / "v2.npz")
+    trace.save(p1)                      # version-1 monolithic
+    trace.save(p2, chunk_events=64)     # version-2 chunked
+    t1 = ServingTrace.load(p1)
+    t2 = ServingTrace.load(p2)
+    for col in ("kind", "src", "dst", "w", "t"):
+        np.testing.assert_array_equal(getattr(t1, col), getattr(t2, col))
+
+
+def test_trace_reader_chunks_are_bounded(tmp_path):
+    n, m, trace = _small_trace()
+    p = str(tmp_path / "t.npz")
+    trace.save(p, chunk_events=100)
+    with repro.open_trace(p) as r:
+        assert r.n_chunks == -(-len(trace.kind) // 100)
+        sizes = [len(c.kind) for c in r.chunks()]
+    assert all(s <= 100 for s in sizes)
+    assert sum(sizes) == len(trace.kind)
+
+
+def test_trace_reader_on_v1_yields_single_chunk(tmp_path):
+    n, m, trace = _small_trace()
+    p = str(tmp_path / "t.npz")
+    trace.save(p)
+    with repro.open_trace(p) as r:
+        assert r.n_chunks == 1
+        (chunk,) = list(r.chunks())
+    np.testing.assert_array_equal(chunk.kind, trace.kind)
+
+
+def test_chunked_replay_matches_monolithic(tmp_path):
+    """Streaming the trace chunk-by-chunk through replay_trace converges to
+    the same tree as one monolithic pass (final dist/parent bit-identical;
+    event counts equal)."""
+    n, m, trace = _small_trace(seed=23)
+    p = str(tmp_path / "t.npz")
+    trace.save(p, chunk_events=77)
+
+    def run(source_trace):
+        eng = repro.make_engine(num_vertices=n, edge_capacity=m + 64,
+                                source=3)
+        rep = replay_trace(eng, source_trace)
+        return eng.query(), rep
+
+    q_mono, rep_mono = run(trace)
+    with repro.open_trace(p) as r:
+        q_chunk, rep_chunk = run(r)
+    np.testing.assert_array_equal(q_mono.dist, q_chunk.dist)
+    np.testing.assert_array_equal(q_mono.parent, q_chunk.parent)
+    assert rep_mono.events == rep_chunk.events
+    assert rep_mono.topology_events == rep_chunk.topology_events
+
+
+def test_ingest_log_accepts_chunk_iterable():
+    n, m, log = _dynamic_stream(seed=29)
+    mono = repro.make_engine(num_vertices=n, edge_capacity=m + 64, source=3)
+    chunked = repro.make_engine(num_vertices=n, edge_capacity=m + 64,
+                                source=3)
+    res_mono = mono.ingest_log(log) + [mono.query()]
+
+    def gen():
+        step = 97
+        for i in range(0, len(log), step):
+            yield log[i:i + step]
+
+    res_chunk = chunked.ingest_log(gen()) + [chunked.query()]
+    _assert_results_equal(res_mono, res_chunk)
+
+
+def test_iter_chunks_validates_chunk_size():
+    _, _, trace = _small_trace()
+    with pytest.raises(ValueError):
+        list(trace.iter_chunks(0))
+
+
+def test_open_trace_rejects_garbage(tmp_path):
+    p = tmp_path / "bad.npz"
+    np.savez(p, foo=np.arange(3))
+    with pytest.raises(TraceFormatError):
+        repro.open_trace(str(p))
+
+
+# ------------------------------------------------------------ dataset loader --
+SNAP = """\
+# Directed graph (each unordered pair of nodes is saved once)
+# FromNodeId\tToNodeId
+0\t1
+0\t2
+17\t0
+2\t17
+"""
+
+KONECT = """\
+% sym positive
+% 4 3 3
+1 2 0.5
+2 3 1.25
+3 1 2.0
+"""
+
+
+def test_parse_snap_unweighted_synthesizes_weights(tmp_path):
+    p = tmp_path / "snap.txt"
+    p.write_text(SNAP)
+    src, dst, w = ds.parse_edge_list(str(p), weight_seed=7)
+    assert src.tolist() == [0, 0, 17, 2]
+    assert dst.tolist() == [1, 2, 0, 17]
+    assert (w >= 0.5).all() and (w < 1.5).all()
+    # deterministic synthesis: same seed, same weights
+    _, _, w2 = ds.parse_edge_list(str(p), weight_seed=7)
+    np.testing.assert_array_equal(w, w2)
+
+
+def test_parse_konect_weighted(tmp_path):
+    p = tmp_path / "konect.tsv"
+    p.write_text(KONECT)
+    src, dst, w = ds.parse_edge_list(str(p))
+    assert src.tolist() == [1, 2, 3]
+    np.testing.assert_allclose(w, [0.5, 1.25, 2.0])
+
+
+def test_compact_ids_is_dense_and_deterministic(tmp_path):
+    p = tmp_path / "snap.txt"
+    p.write_text(SNAP)
+    src, dst, _ = ds.parse_edge_list(str(p))
+    n, cs, cd = ds.compact_ids(src, dst)
+    assert n == 4
+    assert set(np.concatenate([cs, cd]).tolist()) == {0, 1, 2, 3}
+    # sorted-unique relabel: original order preserved
+    assert cs.tolist() == [0, 0, 3, 2]  # {0,1,2,17} -> {0,1,2,3} sorted
+
+
+def test_malformed_rows_raise_format_error(tmp_path):
+    p = tmp_path / "bad.txt"
+    p.write_text("0 1\njunk\n")
+    with pytest.raises(ds.DatasetFormatError):
+        ds.parse_edge_list(str(p))
+    p2 = tmp_path / "neg.txt"
+    p2.write_text("0 -4\n")
+    with pytest.raises(ds.DatasetFormatError):
+        ds.parse_edge_list(str(p2))
+
+
+def test_loader_cli_writes_chunked_trace(tmp_path, capsys):
+    src_p = tmp_path / "snap.txt"
+    src_p.write_text(SNAP)
+    out_p = tmp_path / "out.npz"
+    rc = ds.main([str(src_p), str(out_p), "--chunk-events", "2",
+                  "--query-every", "2"])
+    assert rc == 0
+    with repro.open_trace(str(out_p)) as r:
+        assert r.n_chunks >= 2
+        total = sum(len(c.kind) for c in r.chunks())
+    assert total > 0
+    assert "n=4" in capsys.readouterr().out
+
+
+def test_loader_exits_2_on_missing_and_malformed(tmp_path):
+    with pytest.raises(SystemExit) as e:
+        ds.load_dataset_or_exit(str(tmp_path / "nope.txt"))
+    assert e.value.code == 2
+    p = tmp_path / "bad.txt"
+    p.write_text("not numbers at all\n")
+    with pytest.raises(SystemExit) as e:
+        ds.load_dataset_or_exit(str(p))
+    assert e.value.code == 2
+
+
+def test_dataset_to_trace_replays_to_oracle(tmp_path):
+    p = tmp_path / "snap.txt"
+    p.write_text(SNAP)
+    n, trace = ds.dataset_to_trace(str(p), window_frac=1.0, delta=0.0,
+                                   query_every=2)
+    eng = repro.make_engine(num_vertices=n, edge_capacity=32, source=0)
+    replay_trace(eng, trace)
+    q = eng.query()
+    from repro.core.oracle import check_tree
+    s, d, w = eng.alloc.active_coo()
+    check_tree(n, s, d, w, 0, q.dist, q.parent)
+
+
+# ------------------------------------------------- factory + public surface --
+def test_make_engine_selects_single_vs_sharded():
+    single = repro.make_engine(num_vertices=8, edge_capacity=32, source=0)
+    assert type(single).__name__ == "SSSPDelEngine"
+    sharded = repro.make_engine(num_vertices=8, edge_capacity=32, source=0,
+                                partitions=1)
+    assert type(sharded).__name__ == "ShardedSSSPDelEngine"
+    assert sharded.cfg.edges_per_part == 32  # total budget / P
+
+
+def test_make_engine_splits_edge_budget_across_partitions():
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >=2 devices")
+    eng = repro.make_engine(num_vertices=8, edge_capacity=33, source=0,
+                            partitions=2)
+    assert eng.cfg.edges_per_part == 17  # ceil(33 / 2)
+
+
+def test_make_engine_unknown_knob_lists_valid_ones():
+    with pytest.raises(ValueError) as e:
+        repro.make_engine(num_vertices=8, edge_capacity=32, source=0,
+                          wave_schdule="buckets")  # typo on purpose
+    msg = str(e.value)
+    assert "wave_schdule" in msg and "wave_schedule" in msg
+
+
+def test_make_engine_sharded_knob_validation():
+    with pytest.raises(ValueError) as e:
+        repro.make_engine(num_vertices=8, edge_capacity=32, source=0,
+                          partitions=1, no_such_knob=1)
+    assert "no_such_knob" in str(e.value) and "exchange" in str(e.value)
+
+
+def test_make_engine_relabel_requires_sharding():
+    with pytest.raises(ValueError, match="relabel"):
+        repro.make_engine(num_vertices=8, edge_capacity=32, source=0,
+                          relabel=np.arange(8))
+
+
+def test_make_engine_rejects_too_many_partitions():
+    with pytest.raises(ValueError, match="partitions"):
+        repro.make_engine(num_vertices=8, edge_capacity=32, source=0,
+                          partitions=len(jax.devices()) + 1)
+
+
+def test_make_engine_mesh_partitions_must_agree():
+    mesh = _mk((1,), ("graph",))
+    with pytest.raises(ValueError):
+        repro.make_engine(num_vertices=8, edge_capacity=32, source=0,
+                          mesh=mesh, partitions=2)
+
+
+def test_public_surface_import_smoke():
+    """Every name in repro.__all__ resolves, and dir() advertises it.
+    (PEP 562: resolution is lazy, so this is the import-cycle canary.)"""
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None, name
+    assert set(repro.__all__) <= set(dir(repro))
+    with pytest.raises(AttributeError):
+        repro.no_such_symbol
+
+
+# ------------------------------------------------------------- slow RSS smoke --
+@pytest.mark.skipif(not os.environ.get("RUN_SLOW"),
+                    reason="1M-edge RSS smoke (~2 min); set RUN_SLOW=1")
+def test_scale_worker_1m_rss_budget():
+    """Marked-slow paper-scale smoke: 1M-vertex / 10M-event ingest in a
+    fresh process stays under the documented RSS budget
+    (benchmarks/scale_worker.py module docstring)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.scale_worker",
+         "--n", str(1 << 20), "--e", str(10 * (1 << 20))],
+        env=env, capture_output=True, text=True, timeout=900,
+        cwd=os.path.join(HERE, ".."))
+    assert out.returncode == 0, out.stderr[-3000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["rss_ok"], rec
+    assert rec["peak_rss_mb"] <= rec["rss_budget_mb"], rec
