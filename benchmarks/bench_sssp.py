@@ -853,7 +853,129 @@ def scale(sink: C.CsvSink, small: bool) -> None:
         sink.emit("scale", **rec)
 
 
+def sparse_frontier(sink: C.CsvSink, small: bool) -> None:
+    """Frontier-compacted sparse epochs (DESIGN.md §12): pay for the
+    affected region, not the graph.
+
+    Two legs, both asserting bit-identity in-run (dist, parent, rounds,
+    messages — the §12 contract) before emitting any timing:
+
+      * **localized** — an N-vertex / 4N-edge base graph ingested untimed,
+        then a timed phase of small ADD batches confined to a 1k-vertex
+        window each: the regime the sparse path targets (a handful of
+        affected vertices per epoch on a paper-scale graph).  Gate:
+        sparse >= 3x dense events/s at the largest N
+        (check_regression.gate_sparse_frontier).  Small mode runs
+        N=256k; the full run adds the N=1M acceptance point.  Set
+        ``REPRO_SCALE_DATASET=soc-livejournal1`` to source the base graph
+        from the checksum-cached SNAP download instead of synthetic RMAT
+        (graphs/datasets.fetch_dataset; CI stays synthetic).
+      * **auto-high-occupancy** — a delta=0.5 sliding-window ER stream
+        whose cascades blow past every ladder rung: ``frontier_mode=
+        "auto"`` must route these epochs dense from the host-side
+        occupancy bound and stay >= 0.95x the dense engine's throughput
+        (the routing-overhead gate)."""
+    import os
+
+    import jax
+    from repro.graphs import generators as gen
+
+    rng = np.random.default_rng(7)
+
+    def localized_base(n: int):
+        name = os.environ.get("REPRO_SCALE_DATASET")
+        if name:
+            from repro.graphs import datasets as ds_mod
+            path = ds_mod.fetch_dataset(name)
+            s, d, w = ds_mod.parse_edge_list(path)
+            _, s, d = ds_mod.compact_ids(s, d)
+            keep = (s < n) & (d < n)
+            return (s[keep].astype(np.int32), d[keep].astype(np.int32),
+                    w[keep])
+        _, s, d, w = gen.rmat(int(np.log2(n)), 4, seed=11)
+        return s, d, w
+
+    def run_localized(n: int, mode: str, batches: list) -> tuple:
+        bs, bd, bw = localized_base(n)
+        kw = {} if mode == "dense" else dict(frontier_mode=mode)
+        eng = SSSPDelEngine(EngineConfig(
+            num_vertices=n, edge_capacity=len(bs) + 8 * len(batches) + 64,
+            source=0, **kw))
+        eng.ingest_log(ev.adds(bs, bd, bw))          # untimed base build
+        eng.ingest_log(batches[0])                   # warm the batch shape
+        jax.block_until_ready(eng.state.sssp.dist)
+        t0 = time.perf_counter()
+        for b in batches[1:]:
+            eng.ingest_log(b)
+        jax.block_until_ready(eng.state.sssp.dist)
+        return eng, time.perf_counter() - t0
+
+    sizes = [1 << 18] + ([] if small else [1 << 20])
+    n_batches = 48
+    for n in sizes:
+        # localized update batches: 8 fresh edges inside a random 1k window
+        batches = []
+        for _ in range(n_batches):
+            ws = int(rng.integers(0, n - 1024))
+            u = ws + rng.integers(0, 1024, 8)
+            v = ws + rng.integers(0, 1024, 8)
+            batches.append(ev.adds(u.astype(np.int64), v.astype(np.int64),
+                                   rng.uniform(0.5, 1.5, 8)))
+        runs = {}
+        for mode in ("dense", "sparse"):
+            eng, took = run_localized(n, mode, batches)
+            runs[mode] = (eng, took)
+        qd, qs = runs["dense"][0].query(), runs["sparse"][0].query()
+        np.testing.assert_array_equal(qd.dist, qs.dist)
+        np.testing.assert_array_equal(qd.parent, qs.parent)
+        assert runs["dense"][0].n_rounds == runs["sparse"][0].n_rounds
+        assert runs["dense"][0].n_messages == runs["sparse"][0].n_messages
+        ev_count = 8 * (n_batches - 1)
+        for mode, (eng, took) in runs.items():
+            sink.emit("sparse_frontier", dataset="localized", n=n,
+                      mode=mode, batches=n_batches - 1, batch_events=8,
+                      ingest_s=round(took, 4),
+                      events_per_s=round(ev_count / max(took, 1e-9), 1),
+                      rounds=eng.n_rounds)
+        sink.emit("sparse_frontier_summary", dataset="localized", n=n,
+                  sparse_vs_dense=round(
+                      runs["dense"][1] / max(runs["sparse"][1], 1e-9), 3),
+                  identical=True)
+
+    # ---- auto routing overhead on a high-occupancy stream ----
+    n, m = 1 << 13, 1 << 15
+    nv, src, dst, w = gen.erdos_renyi(n, m, seed=17)
+    source = int(gen.top_in_degree_sources(nv, dst, 1)[0])
+    log = C.stream_for(
+        C.Dataset("er", nv, src, dst, w, gen.top_in_degree_sources(nv, dst)),
+        window_frac=1 / 3, delta=0.5, query_every=10**9)
+    times, engines = {}, {}
+    for mode in ("dense", "auto"):
+        kw = {} if mode == "dense" else dict(frontier_mode="auto")
+        for _timed in (False, True):   # first pass warms every jit shape
+            eng = SSSPDelEngine(EngineConfig(
+                num_vertices=nv, edge_capacity=m + 64, source=source, **kw))
+            t0 = time.perf_counter()
+            eng.ingest_log(log)
+            jax.block_until_ready(eng.state.sssp.dist)
+            times[mode] = time.perf_counter() - t0
+        engines[mode] = eng
+    qd, qa = engines["dense"].query(), engines["auto"].query()
+    np.testing.assert_array_equal(qd.dist, qa.dist)
+    np.testing.assert_array_equal(qd.parent, qa.parent)
+    assert engines["dense"].n_rounds == engines["auto"].n_rounds
+    for mode, eng in engines.items():
+        sink.emit("sparse_frontier", dataset="er-hot", n=nv, mode=mode,
+                  events=len(log), ingest_s=round(times[mode], 4),
+                  events_per_s=round(len(log) / max(times[mode], 1e-9), 1),
+                  rounds=eng.n_rounds)
+    sink.emit("sparse_frontier_summary", dataset="er-hot", n=nv,
+              auto_vs_dense=round(times["dense"] / max(times["auto"], 1e-9),
+                                  3),
+              identical=True)
+
+
 ALL = [table2_static_baseline, fig1_query_latency, fig2_latency_over_time,
        fig3_source_selection, fig4_stability, fig5_throughput,
        fig6_batch_bsp, backend_shootout, hub_shootout, bucket_shootout,
-       dist_engine, serving, obs_overhead, scale]
+       dist_engine, serving, obs_overhead, scale, sparse_frontier]

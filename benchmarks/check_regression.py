@@ -42,6 +42,12 @@ Gates (per delta value found in the section):
     existing Pallas sliced wave (>= 1.0x) and stay within dispatch-overhead
     parity of the jnp three-dispatch path (>= 0.8x) on the power-law hub
     layout.
+  * sparse_frontier — the frontier-compacted sparse path (DESIGN.md §12)
+    must hold >= 3.0x the dense engine's throughput on the localized-update
+    stream at the largest N present (the pay-for-the-affected-region win),
+    and ``frontier_mode="auto"`` must hold >= 0.95x dense on the
+    high-occupancy delta=0.5 ER stream (the routing-overhead bound); both
+    summaries must carry the in-run bit-identity record.
   * scale — every paper-scale ingest row (DESIGN.md §11) must hold the
     chunked-ingest events/s floor (absolute, deliberately loose for CI
     hosts) AND stay under its own documented RSS budget
@@ -56,7 +62,8 @@ import json
 import sys
 
 DEFAULT_SECTIONS = ("backend_shootout", "dist_engine", "hub_shootout",
-                    "bucket_shootout", "serving", "obs_overhead", "scale")
+                    "bucket_shootout", "serving", "obs_overhead", "scale",
+                    "sparse_frontier")
 
 # absolute floor for the scale section's chunked ingest (events/s): local
 # runs measure 150k-350k across N=64k..1M; CI's shared 2-core runners are
@@ -302,8 +309,45 @@ def gate_scale(records: list[dict]) -> list[str]:
     return errors
 
 
+def gate_sparse_frontier(records: list[dict]) -> list[str]:
+    errors: list[str] = []
+    summaries = _rows(records, "sparse_frontier_summary")
+    if not summaries:
+        return ["sparse_frontier: no records found"]
+    for s in summaries:
+        if str(s.get("identical")) != "True":
+            errors.append(f"sparse_frontier {s.get('dataset')}: bit-identity "
+                          f"record missing or false: "
+                          f"identical={s.get('identical')}")
+    loc = [s for s in summaries if s.get("dataset") == "localized"]
+    if not loc:
+        errors.append("sparse_frontier: no localized-stream summary found")
+    else:
+        # the acceptance point is the largest N the run produced (small mode
+        # runs 256k; the full run adds N=1M)
+        top = max(loc, key=lambda r: int(r["n"]))
+        ratio = float(top.get("sparse_vs_dense", 0.0))
+        if ratio < 3.0:
+            errors.append(f"sparse_frontier localized n={top['n']}: sparse "
+                          f"{ratio:.2f}x dense < required 3.0x")
+        print(f"sparse_frontier localized n={top['n']}: sparse/dense "
+              f"{ratio:.2f}x, identical={top.get('identical')}")
+    hot = [s for s in summaries if s.get("dataset") == "er-hot"]
+    if not hot:
+        errors.append("sparse_frontier: no high-occupancy auto summary found")
+    else:
+        ratio = float(hot[0].get("auto_vs_dense", 0.0))
+        if ratio < 0.95:
+            errors.append(f"sparse_frontier er-hot: auto {ratio:.3f}x dense "
+                          f"< required 0.95x (routing overhead)")
+        print(f"sparse_frontier er-hot: auto/dense {ratio:.2f}x, "
+              f"identical={hot[0].get('identical')}")
+    return errors
+
+
 GATES = {
     "backend_shootout": gate_backend_shootout,
+    "sparse_frontier": gate_sparse_frontier,
     "scale": gate_scale,
     "bucket_shootout": gate_bucket_shootout,
     "dist_engine": gate_dist_engine,

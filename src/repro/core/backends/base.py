@@ -73,6 +73,7 @@ AUTO_BACKEND = "auto"
 ELL_BLOWUP_RATIO = 16
 
 WAVE_SCHEDULES = ("rounds", "buckets")
+FRONTIER_MODES = ("dense", "sparse", "auto")
 
 
 def validate_backend_config(cfg: Any) -> None:
@@ -93,7 +94,15 @@ def validate_backend_config(cfg: Any) -> None:
             f"unknown wave_schedule {schedule!r}; valid schedules: "
             f"{list(WAVE_SCHEDULES)}")
     width = getattr(cfg, "bucket_width", 1.0)
-    if not width > 0:   # also rejects NaN
+    # "auto" = pick delta from the live weight distribution at drain time
+    # (DESIGN.md §9.5); any other string — and non-positive/NaN numbers —
+    # is a config bug.  The string check must precede the numeric compare
+    # (a str/float ``>`` would raise the wrong exception type).
+    if isinstance(width, str):
+        if width != "auto":
+            raise ValueError(
+                f"bucket_width must be > 0 or 'auto'; got {width!r}")
+    elif not width > 0:   # also rejects NaN
         raise ValueError(
             f"bucket_width must be > 0 (inf = one bucket); got {width!r}")
     if (schedule == "rounds" and "bucket_width" in defaults
@@ -101,6 +110,21 @@ def validate_backend_config(cfg: Any) -> None:
         raise ValueError(
             f"bucket_width={width!r} configures the buckets schedule; "
             f"remove it or select wave_schedule='buckets'")
+    mode = getattr(cfg, "frontier_mode", "dense")
+    if mode not in FRONTIER_MODES:
+        raise ValueError(
+            f"unknown frontier_mode {mode!r}; valid modes: "
+            f"{list(FRONTIER_MODES)}")
+    cap = getattr(cfg, "frontier_cap", 0)
+    if cap < 0:
+        raise ValueError(f"frontier_cap must be >= 0 (0 = derive); got {cap}")
+    if mode == "dense":
+        for k in ("frontier_cap", "frontier_kernel"):
+            if k in defaults and getattr(cfg, k) != defaults[k]:
+                raise ValueError(
+                    f"{k}={getattr(cfg, k)!r} configures the sparse "
+                    f"frontier path; remove it or select "
+                    f"frontier_mode='sparse'/'auto'")
     misapplied: list[tuple[tuple[str, ...], str]] = []
     if name not in ("sliced", AUTO_BACKEND):
         misapplied.append((_SLICED_KNOBS, "sliced"))

@@ -180,7 +180,8 @@ def lazy_delete_batched(sssp: SSSPState, edges: EdgePool, pend: PendingState,
 def run_drain(dist: jax.Array, parent: jax.Array, pend: PendingState,
               *, bucket_width: float,
               wave: Callable[[jax.Array, jax.Array, jax.Array], tuple],
-              pull_wave: Callable[[jax.Array, jax.Array, jax.Array], tuple]):
+              pull_wave: Callable[[jax.Array, jax.Array, jax.Array], tuple],
+              track_occupancy: bool = False):
     """Generic drain driver, shared by all backends' jitted entry points.
 
     ``wave(dist, parent, active) -> (dist', parent', improved)`` is one
@@ -197,6 +198,12 @@ def run_drain(dist: jax.Array, parent: jax.Array, pend: PendingState,
     fixpoint and advancing to the next is emergent — no inner loop, and the
     limit is one broadcast scalar (the sharded drain computes it from the
     already-allgathered offers: no new collectives).
+
+    ``track_occupancy=True`` (the frontier-compacted sparse drain,
+    DESIGN.md §12) additionally folds each wave's active-vertex count into a
+    fourth returned i32 device scalar — the ``frontier_occupancy`` obs
+    signal per §2.4; the extra carry slot rides at 0 otherwise and the
+    3-tuple return shape is preserved for existing callers.
     """
     any_pull = jnp.any(pend.pull)
 
@@ -215,20 +222,25 @@ def run_drain(dist: jax.Array, parent: jax.Array, pend: PendingState,
     msgs0 = jnp.sum(imp.astype(jnp.int32))
 
     def cond(carry):
-        _, _, push, _, _ = carry
+        _, _, push, _, _, _ = carry
         return jnp.any(push)
 
     def body(carry):
-        dist, parent, push, rounds, msgs = carry
+        dist, parent, push, rounds, msgs, occ = carry
         active = bucket_active(dist, push, bucket_width)
+        if track_occupancy:
+            occ = occ + jnp.sum(active.astype(jnp.int32))
         dist, parent, improved = wave(dist, parent, active)
         push = (push & ~active) | improved
         return (dist, parent, push, rounds + 1,
-                msgs + jnp.sum(improved.astype(jnp.int32)))
+                msgs + jnp.sum(improved.astype(jnp.int32)), occ)
 
-    dist, parent, _, rounds, msgs = jax.lax.while_loop(
-        cond, body, (dist, parent, push, rounds0, msgs0))
-    return dist, parent, RelaxStats(rounds=rounds, messages=msgs)
+    dist, parent, _, rounds, msgs, occ = jax.lax.while_loop(
+        cond, body, (dist, parent, push, rounds0, msgs0, jnp.int32(0)))
+    stats = RelaxStats(rounds=rounds, messages=msgs)
+    if track_occupancy:
+        return dist, parent, stats, occ
+    return dist, parent, stats
 
 
 @partial(jax.jit, static_argnames=("num_vertices", "bucket_width"))

@@ -76,6 +76,7 @@ from jax.sharding import Mesh
 
 from repro.core import backends as bk_mod
 from repro.core import events as ev
+from repro.core import frontier as frontier_mod
 from repro.core import ingest
 from repro.core.backends.base import SHARDED_BACKENDS
 from repro.core.distributed import (DistConfig, DistributedSSSP,
@@ -123,7 +124,16 @@ class ShardedEngineConfig:
     # query/checkpoint — the bucket threshold is a replicated scalar, so the
     # sharded drain reuses the existing allgather/delta exchanges unchanged
     wave_schedule: str = "rounds"
-    bucket_width: float = 1.0
+    # delta; inf = one bucket; "auto" = pow2-quantized live-weight median
+    # resolved host-side from the per-partition mirrors (DESIGN.md §9.5)
+    bucket_width: float | str = 1.0
+    # frontier-compacted sparse waves (DESIGN.md §12.4): "sparse" compacts
+    # each partition's live-offer edges into a bounded worklist inside the
+    # wave body (the backend's own dense wave is the in-cond fallback);
+    # "auto" routes dense here — per-partition occupancy is device-only
+    # knowledge, and the single-rung cond already bounds the regression
+    frontier_mode: str = "dense"
+    frontier_cap: int = 0    # per-partition edge-worklist cap; 0 = Epp/64
     # batched multi-source serving (DESIGN.md §8); None = single-source
     sources: tuple[int, ...] | None = None
     # observability (DESIGN.md §10) — same contract as EngineConfig; the
@@ -221,9 +231,21 @@ class ShardedSSSPDelEngine(StreamEngineBase):
             inactive_dst_layout(self.P, self.npp, self.epp),
             np.zeros(self.P * self.epp, np.float32),
             np.zeros(self.P * self.epp, np.bool_))
+        # frontier-compacted sparse waves (DESIGN.md §12.4): "sparse"
+        # compacts inside every wave body (single rung + in-cond dense
+        # fallback); "auto" routes dense — the occupancy signal is
+        # device-only here and must not be synced per epoch (§2.4)
+        self._fcap = 0
+        if cfg.frontier_mode == "sparse":
+            self._fcap = frontier_mod.capacity_ladder(
+                cfg.edges_per_part, cfg.frontier_cap)[-1]
+        # bucket_width="auto" resolution cache (same policy as the
+        # single-device engine: pow2-quantized live-weight median,
+        # re-resolved when the live-edge estimate doubles/halves)
+        self._bw_cache: tuple[float, int] | None = None
         self._base_key = (mesh, n_pad, cfg.edges_per_part, cfg.exchange,
                           cfg.delta_cap, cfg.use_doubling, self._source_pad,
-                          cfg.wave_schedule, cfg.bucket_width)
+                          cfg.wave_schedule, self._fcap)
         # bucketed schedule: sharded pending masks (bool per owned vertex,
         # [S, N] stacked in serving mode), reset to the cached zeros after
         # every drain
@@ -241,15 +263,38 @@ class ShardedSSSPDelEngine(StreamEngineBase):
         backend geometry — looked up per batch because a coupled rebuild may
         change the backend's static key (e.g. the sliced widths tuple).
         ``drain_epoch`` is None under the rounds schedule."""
-        key = self._base_key + self.bk.static_key()
+        bw = self._bucket_width()
+        key = self._base_key + (bw,) + self.bk.static_key()
         if key not in _EPOCH_CACHE:
             build = (_build_epochs if self.sources is None
                      else _build_epochs_ms)
             _EPOCH_CACHE[key] = build(
                 self.ds, self.epp, self.cfg.use_doubling, self._source_pad,
                 self.cfg.relax_backend, self.bk.static_key(),
-                self.cfg.wave_schedule, self.cfg.bucket_width)
+                self.cfg.wave_schedule, bw, self._fcap)
         return _EPOCH_CACHE[key]
+
+    def _bucket_width(self) -> float:
+        """Resolve ``bucket_width="auto"`` host-side from the concatenated
+        per-partition mirror weights — same quantize/re-resolve policy as
+        ``SSSPDelEngine._bucket_width`` so the two engines pick the same
+        width on the same stream (no device sync; mirrors are host state)."""
+        if self.cfg.bucket_width != "auto":
+            return self.cfg.bucket_width
+        live_est = max(1, self.n_adds - self.n_dels)
+        if self._bw_cache is not None:
+            width, at = self._bw_cache
+            if at / 2 <= live_est <= at * 2:
+                return width
+        w = np.concatenate([a.active_coo()[2] for a in self.allocs]) \
+            if self.allocs else np.empty(0, np.float32)
+        if len(w) == 0:
+            width = 1.0
+        else:
+            med = max(float(np.percentile(w, 50.0)), 1e-6)
+            width = float(2.0 ** np.round(np.log2(med)))
+        self._bw_cache = (width, live_est)
+        return width
 
     # ------------------------------------------------------------------ adds
     def _ingest_adds(self, batch: ev.EventBatch) -> None:
@@ -485,7 +530,8 @@ class ShardedSSSPDelEngine(StreamEngineBase):
 
 def _build_epochs(ds: DistributedSSSP, epp: int, use_doubling: bool,
                   source_pad: int, backend: str, backend_static: tuple,
-                  wave_schedule: str = "rounds", bucket_width: float = 1.0):
+                  wave_schedule: str = "rounds", bucket_width: float = 1.0,
+                  frontier_cap: int = 0):
     """Build the (add_epoch, del_epoch, drain_epoch) jitted shard_map triple
     for one backend geometry.  Under the rounds schedule the epochs settle
     in place and ``drain_epoch`` is None; under the bucketed schedule the
@@ -504,6 +550,12 @@ def _build_epochs(ds: DistributedSSSP, epp: int, use_doubling: bool,
     bk_cls = SHARDED_BACKENDS[backend]
     n_extra = bk_cls.n_extra
     make_wave = bk_cls.shard_wave_factory(backend_static, npp)
+    if frontier_cap:
+        # frontier-compacted sparse waves (DESIGN.md §12.4): compact this
+        # partition's live-offer edges inside the wave body; the backend's
+        # own dense wave is the in-cond fallback, so every epoch below is
+        # unchanged — delta exchange already ships sparse offers
+        make_wave = frontier_mod.wrap_shard_wave(make_wave, npp, frontier_cap)
     del_patch = bk_cls.shard_del_patch(backend_static, npp)
     del_mutated = bk_cls.del_mutated
     extra_specs = (v,) * n_extra
@@ -704,7 +756,8 @@ def _build_epochs(ds: DistributedSSSP, epp: int, use_doubling: bool,
 def _build_epochs_ms(ds: DistributedSSSP, epp: int, use_doubling: bool,
                      sources_pad: tuple[int, ...], backend: str,
                      backend_static: tuple,
-                     wave_schedule: str = "rounds", bucket_width: float = 1.0):
+                     wave_schedule: str = "rounds", bucket_width: float = 1.0,
+                     frontier_cap: int = 0):
     """Batched multi-source rendering of ``_build_epochs`` (DESIGN.md §8):
     the (add_epoch, del_epoch, drain_epoch) triple for S stacked trees over
     one shared sharded pool + layout.
@@ -726,6 +779,10 @@ def _build_epochs_ms(ds: DistributedSSSP, epp: int, use_doubling: bool,
     bk_cls = SHARDED_BACKENDS[backend]
     n_extra = bk_cls.n_extra
     make_wave = bk_cls.shard_wave_factory(backend_static, npp)
+    if frontier_cap:
+        # per-lane sparse waves under vmap lower the cond to select (both
+        # branches execute) — correctness-grade, same §12.3 batched caveat
+        make_wave = frontier_mod.wrap_shard_wave(make_wave, npp, frontier_cap)
     del_patch = bk_cls.shard_del_patch(backend_static, npp)
     del_mutated = bk_cls.del_mutated
     extra_specs = (v,) * n_extra

@@ -46,6 +46,7 @@ from repro.core import backends as bk_mod
 from repro.core import buckets
 from repro.core import delete as del_mod
 from repro.core import events as ev
+from repro.core import frontier as frontier_mod
 from repro.core import ingest, relax
 from repro.core.backends import RELAX_BACKENDS
 from repro.core.state import EdgePool, GraphState, SSSPState
@@ -76,7 +77,16 @@ class EngineConfig:
     # epoch to fixpoint; "buckets" defers convergence work into a pending
     # set and drains it bucket-by-bucket at query/checkpoint time
     wave_schedule: str = "rounds"
-    bucket_width: float = 1.0     # delta; inf = one bucket (plain converge)
+    # delta; inf = one bucket (plain converge); "auto" picks a pow2-quantized
+    # percentile of the live pool weights at drain time (DESIGN.md §9.5)
+    bucket_width: float | str = 1.0
+    # frontier-compacted sparse epochs (DESIGN.md §12): "sparse" routes every
+    # push epoch through the compacted worklist path (the capacity ladder's
+    # dense fallback bounds the regression when occupancy blows up); "auto"
+    # routes per epoch from host-known occupancy bounds
+    frontier_mode: str = "dense"
+    frontier_cap: int = 0           # top ladder rung; 0 = derive (~N/64)
+    frontier_kernel: bool = False   # Pallas gathered-rows wave kernel
     # batched multi-source serving (DESIGN.md §8); None = single-source
     sources: tuple[int, ...] | None = None
     # observability (DESIGN.md §10): device-side counter registry + span
@@ -142,6 +152,61 @@ class SSSPDelEngine(StreamEngineBase):
         self._pend = buckets.empty_pending(
             cfg.num_vertices,
             None if self.sources is None else len(self.sources))
+        # frontier-compacted sparse path (DESIGN.md §12): OUT-adjacency
+        # sidecar + capacity ladder; maintained whenever the mode can route
+        # sparse so the routing decision stays a pure host policy choice
+        self._sparse = cfg.frontier_mode != "dense"
+        if self._sparse:
+            self._out = frontier_mod.OutAdjacency(cfg.num_vertices)
+            self._caps = frontier_mod.capacity_ladder(cfg.num_vertices,
+                                                      cfg.frontier_cap)
+        # host-side upper bound on pending-push occupancy (the "auto" drain
+        # signal; reset per drain, pinned to N when a deletion's affected
+        # set is unknown host-side)
+        self._pend_bound = 0
+        # bucket_width="auto" resolution cache: (resolved width, live-edge
+        # estimate at resolution) — re-resolved when the pool doubles/halves
+        self._bw_cache: tuple[float, int] | None = None
+
+    # -------------------------------------------------- sparse/width policy
+    def _route_sparse(self, occupancy_bound: int) -> bool:
+        """Host-only routing: "sparse" always takes the compacted path (the
+        device-side ladder bounds blowup); "auto" takes it only when the
+        host-known occupancy upper bound fits the top rung — no device
+        readback either way (DESIGN.md §2.4/§12.3)."""
+        if not self._sparse:
+            return False
+        if self.cfg.frontier_mode == "sparse":
+            return True
+        return occupancy_bound <= self._caps[-1]
+
+    def _fold_occupancy(self, occ) -> None:
+        if self.obs.enabled:
+            self.obs.counters.add(
+                "frontier_occupancy",
+                occ if getattr(occ, "ndim", 0) == 0 else jnp.sum(occ))
+
+    def _bucket_width(self) -> float:
+        """Resolve ``bucket_width="auto"`` host-side: the pow2-quantized
+        median of the live pool weights (delta ~ typical edge weight groups
+        each improvement chain into a handful of buckets — the §9 follow-up).
+        Quantization plus a doubling/halving re-resolve policy bounds the
+        distinct static widths the jitted drains see."""
+        if self.cfg.bucket_width != "auto":
+            return self.cfg.bucket_width
+        live_est = max(1, self.n_adds - self.n_dels)
+        if self._bw_cache is not None:
+            width, at = self._bw_cache
+            if at / 2 <= live_est <= at * 2:
+                return width
+        w = self.alloc.active_coo()[2]
+        if len(w) == 0:
+            width = 1.0
+        else:
+            med = max(float(np.percentile(w, 50.0)), 1e-6)
+            width = float(2.0 ** np.round(np.log2(med)))
+        self._bw_cache = (width, live_est)
+        return width
 
     # ------------------------------------------------------------------ adds
     def _ingest_adds(self, batch: ev.EventBatch) -> None:
@@ -161,6 +226,10 @@ class SSSPDelEngine(StreamEngineBase):
             frontier = relax.frontier_from_vertices(
                 jnp.asarray(plan.src), self.cfg.num_vertices)
             self.backend.apply_adds(plan, self.alloc)
+            if self._sparse:
+                # OUT-adjacency sidecar rides along with every layout patch
+                # so the per-epoch routing stays a free policy choice
+                self._out.apply_adds(plan, self.alloc)
             if self._auto and getattr(self.backend, "blowup", False):
                 self._fallback_to_sliced()
             self.obs.note_layout(self.backend.layout_counters())
@@ -177,7 +246,21 @@ class SSSPDelEngine(StreamEngineBase):
                 # and return — the drain delivers the offers bucket-by-bucket
                 self._pend = buckets.enqueue_push(self._pend, frontier,
                                                   self.state.sssp.dist)
+                self._pend_bound += len(np.unique(plan.src))
                 self.state = dataclasses.replace(self.state, edges=edges)
+            elif self._route_sparse(len(np.unique(plan.src))):
+                sp_fn = (frontier_mod.sparse_relax_until_converged
+                         if self.sources is None
+                         else frontier_mod.sparse_relax_batched)
+                sssp, stats, occ = sp_fn(
+                    self.state.sssp, edges, self._out.state, frontier,
+                    num_vertices=self.cfg.num_vertices, caps=self._caps,
+                    use_kernel=self.cfg.frontier_kernel,
+                    interpret=self._interpret)
+                self.state = dataclasses.replace(self.state, edges=edges,
+                                                 sssp=sssp)
+                self._accumulate_relax(stats)
+                self._fold_occupancy(occ)
             else:
                 relax_fn = (self.backend.relax if self.sources is None
                             else self.backend.relax_batched)
@@ -212,11 +295,16 @@ class SSSPDelEngine(StreamEngineBase):
                    pdst: np.ndarray) -> None:
         """One dispatched deletion epoch (one span, one flight record)."""
         slots_p, psrc_p, pdst_p = ingest.pad_pow2(slots, psrc, pdst)
+        if self._sparse:
+            self._out.apply_dels(psrc_p, pdst_p)
         if self.bucketed:
             # ONE fused dispatch: deactivate + seed + mark + invalidate,
             # recomputation deferred to the drain (DESIGN.md §9).  The
             # layout tombstones still stage as their own patch op.
             self.backend.apply_dels(pdst_p, psrc_p)
+            # the affected subtree's size is device-only knowledge; pin the
+            # pending bound to N so the "auto" drain routes dense
+            self._pend_bound = self.cfg.num_vertices
             fn = (buckets.lazy_delete if self.sources is None
                   else buckets.lazy_delete_batched)
             sssp, edges, self._pend, dstats = fn(
@@ -249,7 +337,21 @@ class SSSPDelEngine(StreamEngineBase):
         self.backend.apply_dels(pdst_p, psrc_p)
         # Non-tree deletions (all-false seed) are a device no-op with
         # zeroed stats — cheaper than syncing on bool(jnp.any(seed)).
-        sssp, dstats = delete_fn(self.state.sssp, edges, seed)
+        # Sparse routing for DELs is mode="sparse" only: the affected
+        # region's size is device-only knowledge, so "auto" stays dense.
+        if self._sparse and self.cfg.frontier_mode == "sparse":
+            sp_fn = (frontier_mod.sparse_invalidate_and_recompute
+                     if self.sources is None
+                     else frontier_mod.sparse_delete_batched)
+            sssp, dstats, occ = sp_fn(
+                self.state.sssp, edges, self._out.state, seed,
+                num_vertices=self.cfg.num_vertices, caps=self._caps,
+                use_doubling=self.cfg.use_doubling,
+                use_kernel=self.cfg.frontier_kernel,
+                interpret=self._interpret)
+            self._fold_occupancy(occ)
+        else:
+            sssp, dstats = delete_fn(self.state.sssp, edges, seed)
         self.state = dataclasses.replace(self.state, edges=edges, sssp=sssp)
         self._accumulate_delete(dstats)
         self.n_dels += len(slots)
@@ -271,11 +373,24 @@ class SSSPDelEngine(StreamEngineBase):
             self.obs.counters.add("pending_push", occ_push)
             self.obs.counters.add("pending_pull", occ_pull)
         with self.obs.epoch("drain"):
-            drain_fn = (self.backend.drain if self.sources is None
-                        else self.backend.drain_batched)
-            sssp, self._pend, stats = drain_fn(
-                self.state.sssp, self.state.edges, self._pend,
-                bucket_width=self.cfg.bucket_width)
+            bw = self._bucket_width()
+            if self._route_sparse(self._pend_bound):
+                sp_fn = (frontier_mod.sparse_drain if self.sources is None
+                         else frontier_mod.sparse_drain_batched)
+                sssp, self._pend, stats, occ = sp_fn(
+                    self.state.sssp, self.state.edges, self._out.state,
+                    self._pend, num_vertices=self.cfg.num_vertices,
+                    caps=self._caps, bucket_width=bw,
+                    use_kernel=self.cfg.frontier_kernel,
+                    interpret=self._interpret)
+                self._fold_occupancy(occ)
+            else:
+                drain_fn = (self.backend.drain if self.sources is None
+                            else self.backend.drain_batched)
+                sssp, self._pend, stats = drain_fn(
+                    self.state.sssp, self.state.edges, self._pend,
+                    bucket_width=bw)
+            self._pend_bound = 0
             self.state = dataclasses.replace(self.state, sssp=sssp)
             self._accumulate_relax(stats)
             if self.obs.enabled:
@@ -322,9 +437,12 @@ class SSSPDelEngine(StreamEngineBase):
             self.cfg.edge_capacity, self.cfg.on_duplicate,
             ckpt["src"], ckpt["dst"], ckpt["w"], ckpt["active"])
         self.backend.restore(self.alloc)
+        if self._sparse:
+            self._out.restore(self.alloc)
         # the restore's layout rebuild is a real rebuild event (§10)
         self.obs.note_layout(self.backend.layout_counters())
         # checkpoints are taken post-drain, so nothing was pending
         self._pend = buckets.empty_pending(
             self.cfg.num_vertices,
             None if self.sources is None else len(self.sources))
+        self._pend_bound = 0

@@ -1,0 +1,484 @@
+"""Frontier-compacted sparse epochs — pay for the affected region, not the
+graph (DESIGN.md §12).
+
+Every dense wave in this repo dispatches over all N vertices and all E edge
+slots with a boolean [N] frontier mask gating the gather, so a 3-edge ADD on
+an N=1M graph pays cold-recompute cost per wave.  This module adds the
+sparse execution path selected by ``frontier_mode="sparse"|"auto"``:
+
+  * ``compact_mask`` — device-side cumsum-scan compaction of the [N]
+    frontier/pending mask into a bounded [F] ascending, -1-padded
+    active-vertex worklist (plus the exact occupancy count);
+  * a **capacity ladder** — the wave compacts once at the largest rung and
+    dispatches the smallest rung whose vertex count AND edge budgets fit
+    via nested ``lax.cond``; when occupancy exceeds every rung the final
+    branch IS the dense ``relax.relax_round`` computation over the edge
+    pool, so the path is jit-stable and correct at any occupancy;
+  * gather-style waves that touch only the OUT-adjacency rows of worklist
+    vertices.  All backend layouts are dst-keyed (in-adjacency), so the
+    sparse path maintains one backend-independent OUT-adjacency *sidecar*
+    (``OutAdjacency``): a ``SlicedEllPlanner`` with the src/dst roles
+    swapped — rows are edge *sources*, cells hold destinations, and
+    high-out-degree hubs spill to the overflow COO lane which the wave
+    filters by frontier membership (``frontier[odst]``);
+  * sparse renderings of all three epoch types (relax-to-fixpoint /
+    delete / bucketed drain) plus vmapped [S, N] batched variants, each
+    mirroring its dense twin's loop carry and stat gating exactly; and
+  * ``wrap_shard_wave`` for the sharded engines: per-partition *edge*
+    worklists compacted inside the wave body from
+    ``eact & isfinite(offers[esrc])`` (the delta exchange already ships
+    sparse offers, so only the wave body changes), with the exact dense
+    shard wave as the in-``cond`` fallback.
+
+Why this is bit-identical to the dense path (the repo's standard contract):
+a wave's result is determined by its candidate multiset ``{(dist[src]+w,
+src, dst)}`` plus the smallest-src-id tie rule.  The sparse wave's
+candidates are exactly the live out-edges of frontier vertices — the same
+set the dense wave's ``active & frontier[src]`` mask selects — and exact
+float min is evaluation-order-free, so (dist, parent) match bit-for-bit.
+The sparse loops keep the same [N] mask in their carry as the dense loops
+(only each wave's *execution* is compacted), so (rounds, messages) match
+trivially.  Correctness is therefore rung-independent: the ladder is purely
+a cost policy.
+
+Cost model: one sparse wave is O(N + C) cheap elementwise work for the
+compaction scans (C = hub overflow capacity) plus O(edge budget) for the
+gathers AND the scatter-min — the wave binary-searches its rung's edge
+budget over the worklist's degree cumsum, so no F x max-width padding is
+ever materialized and the scatter volume (the dominant cost: XLA:CPU
+scatters run ~100ns/element) tracks the edges actually touched.  The
+dense wave pays O(N + E) gathers/segment reductions — the gap is the win
+the paper's small-affected-region premise promises.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import buckets
+from repro.core import delete as del_mod
+from repro.core import relax
+from repro.core.backends.sliced import (SlicedEllPlanner, sliced_append,
+                                        sliced_delete, sliced_spill,
+                                        sliced_update_min)
+from repro.core.relax import RelaxStats
+from repro.core.state import INF, NO_PARENT, EdgePool, SSSPState
+from repro.graphs import csr as csr_mod
+from repro.kernels.relax.gather import (gathered_rows_relax,
+                                        gathered_rows_relax_ref)
+
+_INT_MAX = jnp.int32(2**31 - 1)
+
+FRONTIER_MODES = ("dense", "sparse", "auto")
+
+
+# ------------------------------------------------------ compaction primitive --
+@partial(jax.jit, static_argnames=("cap",))
+def compact_mask(mask: jax.Array, *, cap: int
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Compact a bool[N] mask into an ascending i32[cap] vertex worklist.
+
+    Cumsum-scan compaction, gather-flavoured: the i-th set vertex
+    (1-based) is the first index whose inclusive prefix count reaches i,
+    recovered by a vectorized binary search of ``cap`` slot numbers over
+    the [N] cumsum — O(N) elementwise work plus O(cap log N) searches, and
+    crucially NO [N]-element scatter (XLA:CPU scatters cost ~100ns/elem,
+    which would dwarf every other per-wave cost).  Returns (worklist,
+    count) where the worklist is -1-padded and ``count`` is the EXACT
+    occupancy ``sum(mask)`` — when ``count > cap`` the worklist is
+    truncated and the caller must fall back dense (the capacity ladder's
+    job)."""
+    cs = jnp.cumsum(mask.astype(jnp.int32))
+    count = cs[-1]
+    slots = jnp.arange(1, cap + 1, dtype=jnp.int32)
+    wl = jnp.searchsorted(cs, slots, side="left").astype(jnp.int32)
+    return jnp.where(slots <= count, wl, -1), count
+
+
+def worklist_to_mask(wl: jax.Array, num_vertices: int) -> jax.Array:
+    """Inverse of ``compact_mask`` for in-capacity masks: -1 padding is
+    ignored (the round-trip property the tests pin)."""
+    safe = jnp.clip(wl, 0, num_vertices - 1)
+    return jnp.zeros((num_vertices,), jnp.bool_).at[safe].max(wl >= 0)
+
+
+def capacity_ladder(num_vertices: int, cap: int = 0) -> tuple[int, ...]:
+    """Worklist capacity rungs (ascending).  ``cap=0`` derives the top rung
+    as N/64 (>= 256, pow2-rounded); a small first rung keeps the common
+    few-vertex waves cheap while the top rung absorbs moderate cascades
+    before the dense fallback."""
+    if cap <= 0:
+        cap = max(256, csr_mod.next_pow2(max(num_vertices, 1)) // 64)
+    cap = min(csr_mod.next_pow2(cap), csr_mod.next_pow2(max(num_vertices, 1)))
+    low = max(256, cap // 16)
+    return (low, cap) if low < cap else (cap,)
+
+
+def edge_budget(cap: int) -> int:
+    """Per-rung edge/overflow capacity: 8 out-edges per worklist slot.  A
+    rung is taken only when the frontier's vertex count, its total ELL
+    cells AND its live hub-overflow entries all fit (``ladder_wave``), so
+    the budget bounds the wave's scatter volume — the dominant cost on
+    XLA:CPU — while dense-degree frontiers simply escalate a rung."""
+    return 8 * cap
+
+
+# ------------------------------------------------------ OUT-adjacency sidecar --
+class OutAdjacency:
+    """Backend-independent OUT-adjacency sidecar for the sparse push waves.
+
+    A ``SlicedEllPlanner`` with the roles swapped: planner *rows* are edge
+    SOURCES and the cells hold destination ids, so gathering a worklist
+    vertex's row yields its out-neighbors.  High-out-degree hubs spill to
+    the overflow COO lane exactly as in the sliced backend — there
+    ``osrc`` holds the *destination* (the scatter target) and ``odst`` the
+    *source row* (the frontier-membership filter).  Maintenance mirrors
+    ``SlicedBackend.apply_adds``/``apply_dels`` with the arguments swapped;
+    the sidecar is a derived view and rebuilds from the allocator's host
+    mirror on capacity exhaustion or restore (never serialized)."""
+
+    # Per-row slices + a high hub threshold.  Two costs force this corner
+    # of the geometry space: (a) every wave pays O(overflow slots) cheap
+    # elementwise work for the COO lane regardless of frontier size, so
+    # spill must stay rare even on skewed out-degree graphs; (b) every
+    # ADD batch functionally rewrites the flat cell arrays (XLA:CPU can't
+    # donate buffers), so the flat footprint IS the per-batch maintenance
+    # cost — slice_rows=1 gives exact pow2 per-row widths, ~4x fewer
+    # cells than 256-row slices on RMAT where one hub inflates 255
+    # neighbours.
+    def __init__(self, num_vertices: int, *, slice_rows: int = 1,
+                 hub_k: int = 1024, init_k: int = 2):
+        self.n = num_vertices
+        self._knobs = dict(slice_rows=slice_rows, hub_k=hub_k, init_k=init_k)
+        self.planner = SlicedEllPlanner(num_vertices, **self._knobs)
+        self.state = self.planner.empty_state()
+
+    @property
+    def max_width(self) -> int:
+        return self.planner.max_width
+
+    def apply_adds(self, plan, alloc) -> None:
+        from repro.core import ingest
+        fresh = plan.fresh
+        sp = self.planner.plan_appends(
+            plan.src[fresh].astype(np.int64), plan.dst[fresh], plan.w[fresh])
+        if sp is None:
+            src, dst, w = alloc.active_coo()
+            self.state = self.planner.rebuild(dst, src, w)  # swapped roles
+            return
+        if len(sp.pos):
+            pos_p, rows_p, kpos_p, dst_p, w_p = ingest.pad_pow2(
+                sp.pos, sp.rows, sp.kpos, sp.src, sp.w)
+            self.state = sliced_append(
+                self.state, jnp.asarray(pos_p), jnp.asarray(rows_p),
+                jnp.asarray(kpos_p), jnp.asarray(dst_p), jnp.asarray(w_p))
+        if len(sp.opos):
+            opos_p, odst_p, orows_p, ow_p = ingest.pad_pow2(
+                sp.opos, sp.osrc, sp.orows, sp.ow)
+            self.state = sliced_spill(
+                self.state, jnp.asarray(opos_p), jnp.asarray(odst_p),
+                jnp.asarray(orows_p), jnp.asarray(ow_p))
+        if not fresh.all():
+            upd = ~fresh
+            rows_p, dst_p, w_p = ingest.pad_pow2(
+                plan.src[upd], plan.dst[upd], plan.w[upd])
+            self.state = sliced_update_min(
+                self.state, jnp.asarray(rows_p), jnp.asarray(dst_p),
+                jnp.asarray(w_p), width=self.planner.max_width)
+
+    def apply_dels(self, src: np.ndarray, dst: np.ndarray) -> None:
+        """Tombstone deleted (padded) edges; rows are the edge SOURCES."""
+        self.state = sliced_delete(
+            self.state, jnp.asarray(src), jnp.asarray(dst),
+            width=self.planner.max_width)
+
+    def restore(self, alloc) -> None:
+        self.planner = SlicedEllPlanner(self.n, **self._knobs)
+        src, dst, w = alloc.active_coo()
+        self.state = self.planner.rebuild(dst, src, w)
+
+
+# ------------------------------------------------------------- sparse waves --
+def sparse_push_wave(dist: jax.Array, parent: jax.Array, wl: jax.Array,
+                     ecs: jax.Array, ocs: jax.Array, st, *, ecap: int,
+                     ocap: int, num_vertices: int, use_kernel: bool = False,
+                     interpret: bool = True
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One gathered-edges relaxation wave over the worklist's OUT rows.
+
+    Edge-level compaction: each of the ``ecap`` edge slots binary-searches
+    the worklist's inclusive degree cumsum ``ecs`` for its (row, cell)
+    coordinate, so the candidate list covers exactly the worklist rows'
+    occupied ELL cells — no F x max-width padding.  The hub-overflow COO
+    entries whose source row is on the frontier are compacted the same way
+    through ``ocs`` (the inclusive cumsum of the live-overflow mask) into
+    ``ocap`` slots.  Both lanes concatenate into ONE compacted edge list
+    relaxed by the jnp reference or the Pallas gathered-edges kernel
+    (kernels/relax/gather.py) — a single scatter-min + key scatter whose
+    volume is O(edges touched), with the smallest-src-id rule falling out
+    of the shared min over the union multiset exactly as
+    ``combine_lanes`` resolves the dense sliced backend's lanes.  The
+    caller (``ladder_wave``) guarantees both budgets fit."""
+    n = num_vertices
+    c = wl.shape[0]
+    valid = wl >= 0
+    rows = jnp.clip(wl, 0, st.fill.shape[0] - 1)
+    rk = jnp.where(valid, st.fill[rows], 0)
+    excl = ecs - rk                               # exclusive degree prefix
+    j = jnp.arange(ecap, dtype=jnp.int32)
+    r = jnp.clip(jnp.searchsorted(ecs, j, side="right"),
+                 0, c - 1).astype(jnp.int32)
+    evalid = j < ecs[-1]
+    kk = j - excl[r]
+    src = rows[r]
+    pos = jnp.clip(st.base[src] + kk, 0, st.flat_w.shape[0] - 1)
+    e_src, e_nbr, e_w, e_val = src, st.flat_idx[pos], st.flat_w[pos], evalid
+    if ocap and st.ow.shape[0]:
+        # overflow lane (osrc = destination / scatter target, odst = source
+        # row under the sidecar's swapped roles); ocs already folds in the
+        # frontier filter, so the selected entries are live by construction
+        oslots = jnp.arange(1, ocap + 1, dtype=jnp.int32)
+        osel = jnp.clip(jnp.searchsorted(ocs, oslots, side="left"),
+                        0, st.ow.shape[0] - 1)
+        e_src = jnp.concatenate([e_src, st.odst[osel]])
+        e_nbr = jnp.concatenate([e_nbr, st.osrc[osel]])
+        e_w = jnp.concatenate([e_w, st.ow[osel]])
+        e_val = jnp.concatenate([e_val, oslots <= ocs[-1]])
+    fn = (partial(gathered_rows_relax, interpret=interpret) if use_kernel
+          else gathered_rows_relax_ref)
+    best, arg = fn(dist[e_src], e_src, e_nbr, e_w, e_val, num_rows=n)
+    improved = best < dist
+    return (jnp.where(improved, best, dist),
+            jnp.where(improved, arg, parent), improved)
+
+
+def ladder_wave(dist: jax.Array, parent: jax.Array, frontier: jax.Array,
+                st, edges: EdgePool, *, caps: tuple[int, ...],
+                num_vertices: int, use_kernel: bool = False,
+                interpret: bool = True
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One wave through the capacity ladder: compact once at the top rung,
+    dispatch the smallest rung whose vertex count, ELL cell total AND live
+    hub-overflow count all fit its budgets, else the exact dense
+    ``relax_round`` computation over the pool.  All branches are
+    bit-identical, so the rung choice is purely a cost decision."""
+    wl, count = compact_mask(frontier, cap=caps[-1])
+    valid = wl >= 0
+    rows = jnp.clip(wl, 0, st.fill.shape[0] - 1)
+    ecs = jnp.cumsum(jnp.where(valid, st.fill[rows], 0)
+                     .astype(jnp.int32))
+    if st.ow.shape[0]:
+        olive = frontier[st.odst] & (st.ow < INF)
+        ocs = jnp.cumsum(olive.astype(jnp.int32))
+    else:
+        ocs = jnp.zeros((1,), jnp.int32)
+    etotal, ocnt = ecs[-1], ocs[-1]
+
+    def dense_branch(_):
+        d, p, improved, _ = relax.relax_round(
+            dist, parent, edges, frontier, num_vertices=num_vertices)
+        return d, p, improved
+
+    def build(levels):
+        if not levels:
+            return dense_branch
+        c, rest = levels[0], levels[1:]
+        eb = edge_budget(c)
+
+        def rung(_):
+            return sparse_push_wave(
+                dist, parent, wl[:c], ecs[:c], ocs, st, ecap=eb, ocap=eb,
+                num_vertices=num_vertices, use_kernel=use_kernel,
+                interpret=interpret)
+
+        nxt = build(rest)
+        fits = (count <= c) & (etotal <= eb) & (ocnt <= eb)
+        return lambda op: jax.lax.cond(fits, rung, nxt, op)
+
+    return build(list(caps))(0)
+
+
+# ------------------------------------------------------------ sparse epochs --
+@partial(jax.jit, static_argnames=("num_vertices", "caps", "max_rounds",
+                                   "use_kernel", "interpret"))
+def sparse_relax_until_converged(
+    sssp: SSSPState, edges: EdgePool, st, frontier: jax.Array, *,
+    num_vertices: int, caps: tuple[int, ...],
+    max_rounds: int = 0, use_kernel: bool = False, interpret: bool = True,
+) -> tuple[SSSPState, RelaxStats, jax.Array]:
+    """Sparse rendering of ``relax.relax_until_converged``: the same
+    converged-loop driver and [N]-mask carry, each wave executed through
+    the capacity ladder.  Returns the epoch's summed per-wave occupancy as
+    a third device scalar (the ``frontier_occupancy`` obs counter)."""
+
+    def wave(dist, parent, frontier):
+        return ladder_wave(
+            dist, parent, frontier, st, edges, caps=caps,
+            num_vertices=num_vertices, use_kernel=use_kernel,
+            interpret=interpret)
+
+    dist, parent, rounds, msgs, occ = relax.converged_loop(
+        sssp.dist, sssp.parent, frontier, wave, max_rounds=max_rounds,
+        track_occupancy=True)
+    return (SSSPState(dist=dist, parent=parent, source=sssp.source),
+            RelaxStats(rounds=rounds, messages=msgs), occ)
+
+
+@partial(jax.jit, static_argnames=("num_vertices", "caps", "use_doubling",
+                                   "use_kernel", "interpret"))
+def sparse_invalidate_and_recompute(
+    sssp: SSSPState, edges: EdgePool, st, seed: jax.Array, *,
+    num_vertices: int, caps: tuple[int, ...],
+    use_doubling: bool = True, use_kernel: bool = False,
+    interpret: bool = True,
+) -> tuple[SSSPState, del_mod.DeleteStats, jax.Array]:
+    """Sparse deletion epoch — structurally identical to
+    ``delete.invalidate_and_recompute`` (same marking, same dense bulk-pull
+    over the pool's in-edges, same stat gating on ``any(seed)``); only the
+    push recompute waves run through the ladder.  The pull stays dense
+    because it is keyed by IN-edges of the affected set, which is exactly
+    what the pool / backend layouts already index — and it runs once per
+    epoch, not per wave."""
+    any_seed = jnp.any(seed)
+    mark = (del_mod.mark_subtree_doubling if use_doubling
+            else del_mod.mark_subtree_flood)
+    aff, inv_rounds = mark(sssp.parent, seed)
+    aff = aff.at[sssp.source].set(False)
+
+    dist = jnp.where(aff, INF, sssp.dist)
+    parent = jnp.where(aff, NO_PARENT, sssp.parent)
+    dist, parent, improved = del_mod.pull_once(dist, parent, edges, aff,
+                                               num_vertices)
+
+    state1 = SSSPState(dist=dist, parent=parent, source=sssp.source)
+    state2, stats, occ = sparse_relax_until_converged(
+        state1, edges, st, improved, num_vertices=num_vertices, caps=caps,
+        use_kernel=use_kernel, interpret=interpret)
+    zero = jnp.int32(0)
+    return state2, del_mod.DeleteStats(
+        invalidation_rounds=jnp.where(any_seed, inv_rounds, zero),
+        affected=jnp.sum(aff.astype(jnp.int32)),
+        recompute_rounds=jnp.where(any_seed, stats.rounds + 1, zero),
+        recompute_messages=jnp.where(
+            any_seed,
+            stats.messages + jnp.sum(improved.astype(jnp.int32)), zero),
+    ), occ
+
+
+@partial(jax.jit, static_argnames=("num_vertices", "caps", "bucket_width",
+                                   "use_kernel", "interpret"))
+def sparse_drain(sssp: SSSPState, edges: EdgePool, st,
+                 pend: buckets.PendingState, *, num_vertices: int,
+                 caps: tuple[int, ...], bucket_width: float,
+                 use_kernel: bool = False, interpret: bool = True
+                 ) -> tuple[SSSPState, buckets.PendingState, RelaxStats,
+                            jax.Array]:
+    """Sparse bucketed drain: ``buckets.run_drain`` with each per-bucket
+    active mask compacted through the ladder (pending-mask compaction per
+    bucket).  Pull wave and drain discipline are byte-identical to
+    ``segment_drain``, so the wave sequence and stats match by
+    construction."""
+
+    def wave(dist, parent, active):
+        return ladder_wave(
+            dist, parent, active, st, edges, caps=caps,
+            num_vertices=num_vertices, use_kernel=use_kernel,
+            interpret=interpret)
+
+    def pull_wave(dist, parent, aff):
+        return del_mod.pull_once(dist, parent, edges, aff, num_vertices)
+
+    dist, parent, stats, occ = buckets.run_drain(
+        sssp.dist, sssp.parent, pend, bucket_width=bucket_width,
+        wave=wave, pull_wave=pull_wave, track_occupancy=True)
+    return (SSSPState(dist=dist, parent=parent, source=sssp.source),
+            buckets.empty_pending(num_vertices), stats, occ)
+
+
+# ------------------------------------------------ batched [S, N] renderings --
+# jax's while_loop batching freezes converged lanes exactly as in the dense
+# batched epochs, so per-lane stats match unbatched runs.  Note that under
+# vmap ``lax.cond`` lowers to ``select`` (both ladder branches execute), so
+# batched sparse epochs are correctness-grade: bit-identical, but without
+# the sparse cost win — the auto policy routes batched engines dense.
+@partial(jax.jit, static_argnames=("num_vertices", "caps", "use_kernel",
+                                   "interpret"))
+def sparse_relax_batched(sssp, edges, st, frontier, *, num_vertices, caps,
+                         use_kernel=False, interpret=True):
+    return jax.vmap(
+        lambda s: sparse_relax_until_converged(
+            s, edges, st, frontier, num_vertices=num_vertices, caps=caps,
+            use_kernel=use_kernel, interpret=interpret))(sssp)
+
+
+@partial(jax.jit, static_argnames=("num_vertices", "caps", "use_doubling",
+                                   "use_kernel", "interpret"))
+def sparse_delete_batched(sssp, edges, st, seed, *, num_vertices, caps,
+                          use_doubling=True, use_kernel=False,
+                          interpret=True):
+    return jax.vmap(
+        lambda s, sd: sparse_invalidate_and_recompute(
+            s, edges, st, sd, num_vertices=num_vertices, caps=caps,
+            use_doubling=use_doubling, use_kernel=use_kernel,
+            interpret=interpret))(sssp, seed)
+
+
+@partial(jax.jit, static_argnames=("num_vertices", "caps", "bucket_width",
+                                   "use_kernel", "interpret"))
+def sparse_drain_batched(sssp, edges, st, pend, *, num_vertices, caps,
+                         bucket_width, use_kernel=False, interpret=True):
+    return jax.vmap(
+        lambda s, pd: sparse_drain(
+            s, edges, st, pd, num_vertices=num_vertices, caps=caps,
+            bucket_width=bucket_width, use_kernel=use_kernel,
+            interpret=interpret))(sssp, pend)
+
+
+# ------------------------------------------------------------- sharded wave --
+def wrap_shard_wave(make_wave, npp: int, cap: int):
+    """Wrap a sharded backend's ``make_wave`` factory with per-partition
+    edge-worklist compaction (DESIGN.md §12.4).
+
+    The shard epochs patch the partition's COO pool arrays for EVERY
+    backend, so the sparse branch can evaluate the segment-style wave over
+    the compacted live-offer edges regardless of which layout the dense
+    branch uses — identical candidate multiset + tie rule => bit-identical.
+    ``offers`` already carry the frontier masking (the exchanges ship
+    ``where(frontier, dist, INF)``), so membership is just
+    ``isfinite(offers[esrc])``; unmasked pull waves naturally overflow the
+    cap and take the dense branch."""
+
+    def make(esrc, edst, ew, eact, extras, my_p):
+        dense_wave = make_wave(esrc, edst, ew, eact, extras, my_p)
+        row0 = my_p * npp
+        n_edges = esrc.shape[0]
+
+        def wave(offers):
+            live = eact & jnp.isfinite(offers[esrc])
+            ecs = jnp.cumsum(live.astype(jnp.int32))
+            cnt = ecs[-1]
+
+            def sparse(_):
+                slots = jnp.arange(1, cap + 1, dtype=jnp.int32)
+                safe = jnp.clip(jnp.searchsorted(ecs, slots, side="left"),
+                                0, n_edges - 1)
+                valid = slots <= cnt
+                cs, cd, cw = esrc[safe], edst[safe], ew[safe]
+                cand = jnp.where(valid, offers[cs] + cw, INF)
+                dl = jnp.clip(cd - row0, 0, npp - 1)
+                best = jnp.minimum(
+                    jax.ops.segment_min(cand, dl, num_segments=npp), INF)
+                hit = (cand == best[dl]) & (cand < INF)
+                arg = jax.ops.segment_min(
+                    jnp.where(hit, cs, _INT_MAX), dl, num_segments=npp)
+                return best, arg
+
+            return jax.lax.cond(cnt <= cap, sparse,
+                                lambda _: dense_wave(offers), 0)
+
+        return wave
+
+    return make

@@ -73,6 +73,47 @@ def relax_round(
     return dist, parent, improved, jnp.sum(improved.astype(jnp.int32))
 
 
+def converged_loop(dist: jax.Array, parent: jax.Array, frontier: jax.Array,
+                   wave, *, max_rounds: int = 0,
+                   track_occupancy: bool = False
+                   ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                              jax.Array]:
+    """The shared wave-to-fixpoint driver: loop ``wave(dist, parent,
+    frontier) -> (dist, parent, improved)`` while the frontier is non-empty,
+    counting rounds and improvement messages exactly as the original dense
+    loop did.  Both the dense epochs here and the frontier-compacted sparse
+    epochs (core/frontier.py, DESIGN.md §12) run through this driver, so
+    their (rounds, messages) accounting matches by construction.
+
+    ``track_occupancy=True`` additionally folds ``sum(frontier)`` per wave
+    into the returned occupancy scalar (device-side, no host sync — the
+    ``frontier_occupancy`` obs counter per §2.4); otherwise the occupancy
+    slot rides along at 0.  Returns (dist, parent, rounds, messages, occ).
+    """
+
+    def cond(carry):
+        _, _, frontier, rounds, _, _ = carry
+        go = jnp.any(frontier)
+        if max_rounds:
+            go = go & (rounds < max_rounds)
+        return go
+
+    def body(carry):
+        dist, parent, frontier, rounds, msgs, occ = carry
+        if track_occupancy:
+            occ = occ + jnp.sum(frontier.astype(jnp.int32))
+        dist, parent, improved = wave(dist, parent, frontier)
+        return (dist, parent, improved, rounds + 1,
+                msgs + jnp.sum(improved.astype(jnp.int32)), occ)
+
+    dist, parent, _, rounds, msgs, occ = jax.lax.while_loop(
+        cond,
+        body,
+        (dist, parent, frontier, jnp.int32(0), jnp.int32(0), jnp.int32(0)),
+    )
+    return dist, parent, rounds, msgs, occ
+
+
 @partial(jax.jit, static_argnames=("num_vertices", "max_rounds"))
 def relax_until_converged(
     sssp: SSSPState,
@@ -90,26 +131,14 @@ def relax_until_converged(
     is used by the straggler-mitigation path of the distributed engine.
     """
 
-    def cond(carry):
-        _, _, frontier, rounds, _ = carry
-        go = jnp.any(frontier)
-        if max_rounds:
-            go = go & (rounds < max_rounds)
-        return go
-
-    def body(carry):
-        dist, parent, frontier, rounds, msgs = carry
-        dist, parent, frontier, n = relax_round(
+    def wave(dist, parent, frontier):
+        dist, parent, improved, _ = relax_round(
             dist, parent, edges, frontier, num_vertices=num_vertices,
-            tie_perm=tie_perm
-        )
-        return dist, parent, frontier, rounds + 1, msgs + n
+            tie_perm=tie_perm)
+        return dist, parent, improved
 
-    dist, parent, _, rounds, msgs = jax.lax.while_loop(
-        cond,
-        body,
-        (sssp.dist, sssp.parent, frontier, jnp.int32(0), jnp.int32(0)),
-    )
+    dist, parent, rounds, msgs, _ = converged_loop(
+        sssp.dist, sssp.parent, frontier, wave, max_rounds=max_rounds)
     return (
         SSSPState(dist=dist, parent=parent, source=sssp.source),
         RelaxStats(rounds=rounds, messages=msgs),

@@ -29,7 +29,11 @@ CLI (bad paths exit 2, matching the examples' convention):
 from __future__ import annotations
 
 import gzip
+import hashlib
+import os
 import sys
+import urllib.error
+import urllib.request
 
 import numpy as np
 
@@ -39,9 +43,86 @@ from repro.serving.trace import ServingTrace
 _COMMENT = ("#", "%")
 _PARSE_BLOCK = 1 << 20  # lines per parse block (bounds Python-object churn)
 
+# Known dataset registry: name -> (url, sha256-or-None).  A None digest is
+# trust-on-first-use: the first fetch records the digest in a ``.sha256``
+# sidecar next to the cached file and every later use verifies against it
+# (the paper-scale bench runs repeatedly against the same cache, so a
+# silent mid-flight corruption or upstream content swap fails loudly).
+DATASETS: dict[str, tuple[str, str | None]] = {
+    # paper-scale instance for the sparse-frontier bench (DESIGN.md §12.5);
+    # CI stays on synthetic RMAT — fetching is opt-in via REPRO_SCALE_DATASET
+    "soc-livejournal1": (
+        "https://snap.stanford.edu/data/soc-LiveJournal1.txt.gz", None),
+    "roadnet-ca": (
+        "https://snap.stanford.edu/data/roadNet-CA.txt.gz", None),
+}
+
+_CHUNK = 1 << 20
+
 
 class DatasetFormatError(ValueError):
     """The file exists but is not a parseable edge list."""
+
+
+class ChecksumError(ValueError):
+    """A cached or downloaded dataset failed sha256 verification."""
+
+
+def dataset_cache_dir() -> str:
+    """The on-disk download cache root; ``REPRO_DATASET_CACHE`` overrides
+    the default ``~/.cache/repro/datasets`` (CI points it at a tmpdir)."""
+    return os.environ.get(
+        "REPRO_DATASET_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "datasets"))
+
+
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(_CHUNK), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def fetch_dataset(name_or_url: str, *, sha256: str | None = None,
+                  cache_dir: str | None = None) -> str:
+    """Return a local path to the (cached) dataset, downloading on miss.
+
+    ``name_or_url`` is either a ``DATASETS`` registry key (its url + pinned
+    digest are used) or a raw url (``file://`` works — the tests exercise
+    the full cache path without network).  Verification order: an explicit
+    ``sha256`` argument beats the registry pin beats the sidecar digest
+    recorded at first fetch.  A mismatch raises ``ChecksumError`` and
+    leaves the offending file in place for inspection; downloads land via
+    a temp file + atomic rename so a crashed fetch never poisons the
+    cache."""
+    url, expected = name_or_url, sha256
+    if name_or_url in DATASETS:
+        url, pinned = DATASETS[name_or_url]
+        expected = sha256 if sha256 is not None else pinned
+    cache = cache_dir or dataset_cache_dir()
+    os.makedirs(cache, exist_ok=True)
+    fname = os.path.basename(url.rstrip("/")) or "dataset"
+    path = os.path.join(cache, fname)
+    sidecar = path + ".sha256"
+    if not os.path.exists(path):
+        tmp = path + ".part"
+        with urllib.request.urlopen(url) as r, open(tmp, "wb") as out:
+            for block in iter(lambda: r.read(_CHUNK), b""):
+                out.write(block)
+        os.replace(tmp, path)
+    digest = _sha256_file(path)
+    if expected is None and os.path.exists(sidecar):
+        with open(sidecar) as f:
+            expected = f.read().strip() or None
+    if expected is not None and digest != expected:
+        raise ChecksumError(
+            f"{path}: sha256 mismatch — expected {expected}, got {digest} "
+            f"(delete the cached file to re-fetch)")
+    if not os.path.exists(sidecar):
+        with open(sidecar, "w") as f:
+            f.write(digest + "\n")
+    return path
 
 
 def _open_text(path: str):
@@ -140,12 +221,25 @@ def dataset_to_trace(path: str, *, window_frac: float = 0.25,
     return n, ServingTrace.from_log(log, events_per_s=events_per_s)
 
 
+def load_named_dataset(name_or_url: str, *, sha256: str | None = None,
+                       cache_dir: str | None = None, **kw
+                       ) -> tuple[int, ServingTrace]:
+    """``fetch_dataset`` + ``dataset_to_trace`` in one call — the entry the
+    paper-scale bench uses (``REPRO_SCALE_DATASET=soc-livejournal1``)."""
+    path = fetch_dataset(name_or_url, sha256=sha256, cache_dir=cache_dir)
+    return dataset_to_trace(path, **kw)
+
+
 def load_dataset_or_exit(path: str, **kw) -> tuple[int, ServingTrace]:
     """CLI wrapper: exit code 2 on missing or malformed dataset paths —
-    the same contract as serving.trace.load_trace_or_exit."""
+    the same contract as serving.trace.load_trace_or_exit.  Registry names
+    and raw urls fetch through the verified cache first."""
     try:
+        if path in DATASETS or "://" in path:
+            return load_named_dataset(path, **kw)
         return dataset_to_trace(path, **kw)
-    except (FileNotFoundError, DatasetFormatError) as e:
+    except (FileNotFoundError, DatasetFormatError, ChecksumError,
+            urllib.error.URLError) as e:
         print(f"error: {e}", file=sys.stderr)
         sys.exit(2)
 

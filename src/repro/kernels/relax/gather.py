@@ -1,0 +1,109 @@
+"""Gathered-edges relaxation wave for the frontier-compacted sparse path
+(DESIGN.md §12).
+
+The sparse epochs compact the frontier twice on device — vertices into a
+bounded [F] worklist, then that worklist's OUT-adjacency cells (plus the
+frontier-live hub-overflow entries) into a bounded 1-D edge list — so the
+scatter volume of a wave is proportional to the edges actually touched,
+never to F x max-slice-width padding.  This module evaluates the relax
+min/tie-break over such a compacted edge list: candidates
+``src_dist + w`` scattered-min into the [N] row space plus the
+smallest-source-id parent keys — the same computation as every dense
+wave, restricted to the affected region.
+
+Two renderings, bit-identical by construction:
+
+* ``gathered_rows_relax_ref`` — plain jnp scatter-min composition (the
+  default execution path everywhere; scatters via ``.at[].min``);
+* ``gathered_rows_relax`` — a single-block Pallas kernel fusing the
+  candidate generation, scatter-min and key scatter in one dispatch
+  (``frontier_kernel=True``); interpret-mode is resolved by
+  ``kernels.relax.config`` (interpret everywhere except TPU), and masked
+  slots are remapped to the out-of-range row ``num_rows`` before the
+  scatter because Pallas scatters *wrap* rather than drop negative
+  indices (same trick as the fused kernel's overflow lane).
+
+Contract (shared with the jnp reference): all inputs are 1-D edge-aligned
+arrays; ``mask`` selects real slots; masked-out slots never contribute
+(their candidate is +inf and their scatter target is dropped).
+Tombstoned cells arrive with ``w=+inf`` and lose every min on their own.
+Returns per-row ``(best f32[num_rows], arg i32[num_rows])`` where ``arg``
+is the smallest source vertex id achieving ``best`` (INT_MAX where no
+finite candidate hit).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.relax.config import resolve_interpret
+
+_INT_MAX = jnp.int32(2**31 - 1)
+_INF = jnp.float32(jnp.inf)
+
+
+def gathered_rows_relax_ref(src_dist: jax.Array, src_ids: jax.Array,
+                            nbr: jax.Array, w: jax.Array, mask: jax.Array,
+                            *, num_rows: int
+                            ) -> tuple[jax.Array, jax.Array]:
+    """jnp reference: candidates ``src_dist + w`` scattered-min into
+    ``nbr`` rows, parent key = smallest ``src_ids`` among slots achieving
+    the row min (the repo-wide tie rule)."""
+    cand = jnp.where(mask, src_dist + w, _INF)
+    tgt = jnp.where(mask, nbr, num_rows)          # masked slots -> dropped
+    best = jnp.full((num_rows,), _INF, jnp.float32).at[tgt].min(
+        cand, mode="drop")
+    row_min = best[jnp.clip(tgt, 0, num_rows - 1)]
+    hit = (cand == row_min) & (cand < _INF)
+    key = jnp.where(hit, src_ids, _INT_MAX)
+    arg = jnp.full((num_rows,), _INT_MAX, jnp.int32).at[tgt].min(
+        key, mode="drop")
+    return best, arg
+
+
+def _gather_kernel(num_rows: int, wd_ref, src_ref, nbr_ref, w_ref, mask_ref,
+                   best_ref, arg_ref):
+    wd = wd_ref[...]
+    src = src_ref[...]
+    nbr = nbr_ref[...]
+    w = w_ref[...]
+    mask = mask_ref[...]
+    # literals (not module globals) so the kernel body closes over nothing
+    inf = jnp.float32(jnp.inf)
+    int_max = jnp.int32(2**31 - 1)
+    cand = jnp.where(mask, wd + w, inf)
+    # Pallas scatters WRAP out-of-range/negative indices; route masked
+    # slots to the explicit out-of-range row and drop it.
+    tgt = jnp.where(mask, nbr, num_rows)
+    best = jnp.full((num_rows,), inf, jnp.float32).at[tgt].min(
+        cand, mode="drop")
+    row_min = jnp.take(best, tgt, mode="clip")
+    hit = (cand == row_min) & (cand < inf)
+    key = jnp.where(hit, src, int_max)
+    arg = jnp.full((num_rows,), int_max, jnp.int32).at[tgt].min(
+        key, mode="drop")
+    best_ref[...] = best
+    arg_ref[...] = arg
+
+
+def gathered_rows_relax(src_dist: jax.Array, src_ids: jax.Array,
+                        nbr: jax.Array, w: jax.Array, mask: jax.Array,
+                        *, num_rows: int, interpret: bool | None = None
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Single-block Pallas rendering of ``gathered_rows_relax_ref`` — one
+    dispatch for the whole compacted edge list (its length is already
+    bounded by the capacity ladder's edge budget, so no tiling is
+    needed)."""
+    kernel = functools.partial(_gather_kernel, num_rows)
+    best, arg = pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((num_rows,), jnp.float32),
+            jax.ShapeDtypeStruct((num_rows,), jnp.int32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(src_dist, src_ids, nbr, w, mask)
+    return best, arg

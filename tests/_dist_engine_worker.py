@@ -18,8 +18,13 @@ schedule (wave_schedule="buckets", DESIGN.md §9) against the single-device
 ROUNDS reference — queries drain implicitly, so the per-query results must
 still be bit-identical (stats differ by design: lazy epochs defer waves).
 
+``--sparse`` runs the sharded engine with frontier_mode="sparse" and a
+deliberately small frontier_cap, so each partition's in-wave edge
+compaction AND its in-cond dense fallback both fire under P=8
+(DESIGN.md §12.4) — results must stay on the dense trajectory exactly.
+
 Usage: _dist_engine_worker.py <exchange> [batch_deletions] [use_doubling]
-                              [backend] [--ckpt] [--buckets]
+                              [backend] [--ckpt] [--buckets] [--sparse]
 Prints "OK <queries> <rounds>" on success.
 """
 import os
@@ -49,7 +54,7 @@ BACKEND_KW = {
 
 def main(exchange: str, batch_deletions: bool, use_doubling: bool,
          backend: str = "segment", ckpt: bool = False,
-         buckets: bool = False) -> None:
+         buckets: bool = False, sparse: bool = False) -> None:
     assert len(jax.devices()) == 8, f"expected 8 devices, got {len(jax.devices())}"
     mesh = _mk((2, 2, 2), ("pod", "data", "model"))
     n, src, dst, w = generators.erdos_renyi(120, 700, seed=23)
@@ -65,6 +70,10 @@ def main(exchange: str, batch_deletions: bool, use_doubling: bool,
 
     sched = (dict(wave_schedule="buckets", bucket_width=1.0)
              if buckets else {})
+    if sparse:
+        # cap=32 over ~87 edge slots/partition: small batches compact,
+        # recompute pulls overflow into the in-cond dense branch
+        sched = dict(sched, frontier_mode="sparse", frontier_cap=32)
 
     def mk_sharded():
         # tiny delta_cap so the delta exchange exercises its overflow fallback
@@ -104,10 +113,12 @@ def main(exchange: str, batch_deletions: bool, use_doubling: bool,
 
 
 if __name__ == "__main__":
-    args = [a for a in sys.argv[1:] if a not in ("--ckpt", "--buckets")]
+    args = [a for a in sys.argv[1:]
+            if a not in ("--ckpt", "--buckets", "--sparse")]
     exchange = args[0] if len(args) > 0 else "allgather"
     bd = bool(int(args[1])) if len(args) > 1 else False
     ud = bool(int(args[2])) if len(args) > 2 else True
     backend = args[3] if len(args) > 3 else "segment"
     main(exchange, bd, ud, backend, ckpt="--ckpt" in sys.argv[1:],
-         buckets="--buckets" in sys.argv[1:])
+         buckets="--buckets" in sys.argv[1:],
+         sparse="--sparse" in sys.argv[1:])

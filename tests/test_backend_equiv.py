@@ -118,6 +118,33 @@ def test_sharded_engine_joins_the_equivalence_contract(backend):
     assert seg.n_messages == shd.n_messages
 
 
+@pytest.mark.parametrize("backend", ["segment", "ellpack", "sliced"])
+@pytest.mark.parametrize("mode", ["sparse", "auto"])
+@pytest.mark.parametrize("schedule", ["rounds", "buckets"])
+def test_frontier_modes_join_the_equivalence_contract(backend, mode,
+                                                      schedule):
+    """Frontier axis (DESIGN.md §12): the compacted sparse path is one
+    shared backend-independent implementation, so it must keep every
+    backend inside the bit-identity contract — same (dist, parent) and
+    wave stats as that backend's dense run, under both wave schedules.
+    ``frontier_cap=16`` keeps both ladder rungs AND the in-cond dense
+    fallback exercised on these streams."""
+    n, m, log = _dynamic_stream(seed=41)
+    source = 3
+    kw = dict(BACKEND_KW[backend], wave_schedule=schedule)
+    dense = _run(backend, n, m, log, source, use_doubling=True,
+                 batch_deletions=False, **kw)
+    sparse = _run(backend, n, m, log, source, use_doubling=True,
+                  batch_deletions=False, frontier_mode=mode,
+                  frontier_cap=16, **kw)
+    q_d = _oracle_check(dense, n, source)
+    q_s = _oracle_check(sparse, n, source)
+    np.testing.assert_array_equal(q_d.dist, q_s.dist)
+    np.testing.assert_array_equal(q_d.parent, q_s.parent)
+    assert dense.n_rounds == sparse.n_rounds
+    assert dense.n_messages == sparse.n_messages
+
+
 def test_backends_identical_parents_under_pervasive_ties():
     """Unit weights make equal-cost predecessors pervasive (paper §5.4); the
     smallest-src-id rule must make all backends pick the same parent."""

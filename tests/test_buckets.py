@@ -85,6 +85,30 @@ def test_bucketed_bit_identical_to_rounds(backend, width):
             f"rounds-schedule {int(ref.n_rounds)}")
 
 
+def test_bucket_width_auto_bit_identical():
+    """``bucket_width="auto"`` (DESIGN.md §9.5) resolves a pow2-quantized
+    live-weight median host-side at drain time.  Whatever width it picks,
+    the fixpoint contract is unchanged: every drain point must match the
+    rounds schedule's exact bits, single-device and sharded (P=1), and the
+    two engines must resolve the SAME width on the same stream."""
+    n, m, log = _stream(seed=53, delta=0.6)
+    ref, ref_outs = _run(EngineConfig(n, m + 64, 3), log)
+    eng, outs = _run(EngineConfig(
+        n, m + 64, 3, wave_schedule="buckets", bucket_width="auto"), log)
+    _assert_equal(ref_outs + [ref.query()], outs + [eng.query()],
+                  tag="bw-auto")
+    # the resolved width is a positive pow2 multiple (quantization bounds
+    # the distinct static widths the jitted drains ever see)
+    w = eng._bucket_width()
+    assert w > 0 and float(np.log2(w)) == int(np.log2(w))
+    shd = ShardedSSSPDelEngine(ShardedEngineConfig(
+        n, m + 64, 3, wave_schedule="buckets", bucket_width="auto"))
+    shd_outs = shd.ingest_log(log)
+    _assert_equal(ref_outs + [ref.query()], shd_outs + [shd.query()],
+                  tag="bw-auto-sharded")
+    assert shd._bucket_width() == w   # same policy, same stream, same width
+
+
 def test_bucketed_rounds_identical_across_backends():
     """The drained wave SEQUENCE (not just the fixpoint) is backend-
     independent: per-width round/message counters agree across all three."""

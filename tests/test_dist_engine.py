@@ -253,6 +253,8 @@ def test_sharded_p8_inprocess(exchange, backend):
     ("allgather", 0, 1, "sliced", ["--ckpt"]),
     ("allgather", 0, 1, "segment", ["--buckets"]),
     ("delta", 0, 1, "sliced", ["--buckets"]),
+    ("allgather", 0, 1, "segment", ["--sparse"]),
+    ("delta", 0, 1, "sliced", ["--sparse"]),
 ])
 def test_sharded_p8_subprocess(exchange, batched, doubling, backend, extra):
     """Full equivalence contract at P=8 forced host devices (subprocess —

@@ -1,0 +1,152 @@
+"""Frontier-compacted sparse epochs (DESIGN.md §12): the compaction
+primitive's properties (round-trip, exact count, -1 padding, cap
+truncation), the gathered-rows kernel's bit-parity with its jnp reference,
+and the engine-level contract — ``frontier_mode="sparse"/"auto"`` must be
+bit-identical in (dist, parent) AND equal in (rounds, messages) to the
+dense path on any dynamic stream, at any ladder capacity (a tiny
+``frontier_cap`` forces the in-``cond`` dense fallback every wave, so the
+fallback branch is exercised under the same assertion).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import frontier as frontier_mod
+from repro.core.engine import EngineConfig, SSSPDelEngine
+from repro.graphs import generators, window
+from repro.kernels.relax.gather import (gathered_rows_relax,
+                                        gathered_rows_relax_ref)
+
+
+# ----------------------------------------------------- compaction primitive
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("n,cap", [(64, 64), (257, 32), (1000, 256)])
+def test_compact_mask_roundtrip(seed, n, cap):
+    rng = np.random.default_rng(seed)
+    mask = rng.random(n) < rng.uniform(0.0, 0.5)
+    wl, count = frontier_mod.compact_mask(jnp.asarray(mask), cap=cap)
+    wl = np.asarray(wl)
+    assert int(count) == int(mask.sum())          # exact occupancy, always
+    assert wl.shape == (cap,)
+    k = min(int(mask.sum()), cap)
+    # kept slots are the first k set vertices in ascending order ...
+    np.testing.assert_array_equal(wl[:k], np.flatnonzero(mask)[:k])
+    # ... and everything past them is -1 padding
+    assert (wl[k:] == -1).all()
+    if int(mask.sum()) <= cap:
+        back = np.asarray(frontier_mod.worklist_to_mask(jnp.asarray(wl), n))
+        np.testing.assert_array_equal(back, mask)  # lossless round-trip
+
+
+def test_compact_mask_overflow_truncates_and_reports():
+    n = 100
+    mask = jnp.ones((n,), jnp.bool_)
+    wl, count = frontier_mod.compact_mask(mask, cap=16)
+    assert int(count) == n      # the ladder's dense-fallback signal
+    np.testing.assert_array_equal(np.asarray(wl), np.arange(16))
+
+
+def test_capacity_ladder_shape():
+    for n in (10, 300, 1 << 20):
+        caps = frontier_mod.capacity_ladder(n)
+        assert caps == tuple(sorted(caps)) and caps[0] >= 1
+    assert frontier_mod.capacity_ladder(1 << 20, cap=512) == (256, 512)
+    # explicit cap is pow2-rounded and clamped to next_pow2(n)
+    assert frontier_mod.capacity_ladder(100, cap=4096)[-1] == 128
+
+
+# ------------------------------------------------------ gathered-rows kernel
+@pytest.mark.parametrize("seed", [0, 3])
+def test_gather_kernel_matches_reference(seed):
+    rng = np.random.default_rng(seed)
+    m, n = 85, 40                   # 1-D compacted edge list
+    src = rng.integers(0, n, m).astype(np.int32)
+    wd = np.where(rng.random(m) < 0.9,
+                  rng.uniform(0, 3, m), np.inf).astype(np.float32)
+    nbr = rng.integers(0, n, m).astype(np.int32)
+    w = rng.uniform(0.1, 1.0, m).astype(np.float32)
+    mask = rng.random(m) < 0.7
+    args = (jnp.asarray(wd), jnp.asarray(src), jnp.asarray(nbr),
+            jnp.asarray(w), jnp.asarray(mask))
+    b_ref, a_ref = gathered_rows_relax_ref(*args, num_rows=n)
+    b_krn, a_krn = gathered_rows_relax(*args, num_rows=n, interpret=True)
+    np.testing.assert_array_equal(np.asarray(b_ref), np.asarray(b_krn))
+    np.testing.assert_array_equal(np.asarray(a_ref), np.asarray(a_krn))
+
+
+# ----------------------------------------------------- engine-level parity
+def _stream(seed, *, n=90, m=520, delta=0.6):
+    n, src, dst, w = generators.erdos_renyi(n, m, seed=seed)
+    log = window.sliding_window_stream(src, dst, w, window=m // 3,
+                                       delta=delta, seed=seed,
+                                       query_every=m // 2)
+    return n, len(src), log
+
+
+def _run(n, cap, log, source, **kw):
+    eng = SSSPDelEngine(EngineConfig(n, cap + 64, source, **kw))
+    eng.ingest_log(log)
+    return eng
+
+
+def _assert_same(ref, eng):
+    qr, qe = ref.query(), eng.query()
+    np.testing.assert_array_equal(np.asarray(qr.dist), np.asarray(qe.dist))
+    np.testing.assert_array_equal(np.asarray(qr.parent),
+                                  np.asarray(qe.parent))
+    np.testing.assert_array_equal(np.asarray(ref.n_rounds),
+                                  np.asarray(eng.n_rounds))
+    np.testing.assert_array_equal(np.asarray(ref.n_messages),
+                                  np.asarray(eng.n_messages))
+
+
+@pytest.mark.parametrize("mode", ["sparse", "auto"])
+@pytest.mark.parametrize("schedule", ["rounds", "buckets"])
+def test_sparse_engine_bit_identical(mode, schedule):
+    n, m, log = _stream(seed=31)
+    ref = _run(n, m, log, 3, wave_schedule=schedule)
+    eng = _run(n, m, log, 3, wave_schedule=schedule, frontier_mode=mode)
+    _assert_same(ref, eng)
+
+
+def test_sparse_tiny_cap_forces_dense_fallback():
+    """frontier_cap small enough that real cascades overflow every rung:
+    the ladder's final (dense relax_round) branch must carry the epoch and
+    stay bit-identical."""
+    n, m, log = _stream(seed=32)
+    ref = _run(n, m, log, 3)
+    eng = _run(n, m, log, 3, frontier_mode="sparse", frontier_cap=8)
+    _assert_same(ref, eng)
+
+
+def test_sparse_pallas_kernel_path():
+    n, m, log = _stream(seed=33)
+    ref = _run(n, m, log, 3)
+    eng = _run(n, m, log, 3, frontier_mode="sparse", frontier_kernel=True)
+    _assert_same(ref, eng)
+
+
+def test_sparse_batched_sources():
+    n, m, log = _stream(seed=34)
+    srcs = (3, 17, 40)
+    ref = _run(n, m, log, 0, sources=srcs)
+    eng = _run(n, m, log, 0, sources=srcs, frontier_mode="sparse",
+               frontier_cap=16)
+    _assert_same(ref, eng)
+
+
+def test_frontier_occupancy_counter_surfaces():
+    n, m, log = _stream(seed=35)
+    eng = _run(n, m, log, 3, frontier_mode="sparse", observability=True)
+    occ = eng.metrics_snapshot()["counters"].get("frontier_occupancy", 0)
+    assert occ > 0   # sparse epochs fold per-wave active counts (§2.4)
+    dense = _run(n, m, log, 3, observability=True)
+    assert "frontier_occupancy" not in dense.metrics_snapshot()["counters"]
+
+
+def test_frontier_knob_discipline():
+    with pytest.raises(ValueError, match="frontier_mode"):
+        EngineConfig(10, 16, 0, frontier_mode="bogus")
+    with pytest.raises(ValueError, match="frontier_cap"):
+        EngineConfig(10, 16, 0, frontier_cap=64)   # knob without the mode
