@@ -268,19 +268,36 @@ def gate_obs_overhead(records: list[dict]) -> list[str]:
     summaries = _rows(records, "obs_overhead_summary")
     if not rows or not summaries:
         return ["obs_overhead: no records found"]
-    by = _by(rows, "observability")
+    # two legs since the sharded P=8 worker landed: the single-device
+    # engine and the sharded engine each carry their own interleaved
+    # on/off pair and must each hold the 0.95x floor (DESIGN.md §10.4)
+    engines = sorted({str(r.get("engine", "single")) for r in rows})
+    for leg in ("single", "sharded"):
+        if leg not in engines:
+            errors.append(f"obs_overhead: missing {leg}-engine leg")
+    for leg in engines:
+        by = _by([r for r in rows
+                  if str(r.get("engine", "single")) == leg],
+                 "observability")
+        if (True,) not in by or (False,) not in by:
+            errors.append(f"obs_overhead[{leg}]: missing on/off pair")
+            continue
+        # instrumented ingest must stay within 5% of uninstrumented; the
+        # rounds/messages bit-identity itself is asserted in-run
+        ratio = _ratio_gate(errors, f"obs_overhead[{leg}] on/off ingest",
+                            float(by[(True,)]["events_per_s"]),
+                            float(by[(False,)]["events_per_s"]),
+                            floor=0.95)
+        print(f"obs_overhead[{leg}]: instrumented/uninstrumented ingest "
+              f"{ratio:.2f}x")
     for s in summaries:
         if str(s.get("identical")) != "True":
             errors.append(f"obs_overhead: bit-identity record missing or "
                           f"false: identical={s.get('identical')}")
-    # instrumented ingest must stay within 5% of uninstrumented (DESIGN.md
-    # §10.4); the rounds/messages bit-identity itself is asserted in-run
-    ratio = _ratio_gate(errors, "obs_overhead on/off ingest",
-                        float(by[(True,)]["events_per_s"]),
-                        float(by[(False,)]["events_per_s"]),
-                        floor=0.95)
-    print(f"obs_overhead: instrumented/uninstrumented ingest {ratio:.2f}x, "
-          f"identical={[str(s.get('identical')) for s in summaries]}")
+    sum_engines = {str(s.get("engine", "single")) for s in summaries}
+    for leg in ("single", "sharded"):
+        if leg not in sum_engines:
+            errors.append(f"obs_overhead: missing {leg} summary record")
     return errors
 
 

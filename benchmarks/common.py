@@ -24,6 +24,24 @@ from repro.graphs import window as win
 from repro.serving.metrics import pctile, percentiles  # noqa: F401
 
 
+def hist_fields(snapshot: dict) -> dict:
+    """Flatten an instrumented engine's distribution data (DESIGN.md
+    §10.6) into bench-record fields, so BENCH_sssp.json carries the
+    waves-per-epoch and frontier-occupancy histograms — raw bucket counts
+    (log2 buckets, ``repro.obs.hist.edges()``) plus p50/p99 estimates —
+    not just means.  ``snapshot`` is a ``metrics_snapshot()`` dict; an
+    uninstrumented snapshot contributes nothing."""
+    out: dict = {}
+    for name in ("waves_per_epoch", "frontier_occupancy"):
+        h = (snapshot.get("histograms") or {}).get(name)
+        if not h:
+            continue
+        out[f"hist_{name}"] = h["counts"]
+        out[f"{name}_p50"] = round(h["p50"], 3)
+        out[f"{name}_p99"] = round(h["p99"], 3)
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class Dataset:
     name: str

@@ -57,7 +57,7 @@ from repro.graphs import window as win
 from repro.obs import out_path_or_exit
 from repro.serving import TraceRecorder, load_trace_or_exit, replay_trace
 
-from streaming_sssp import add_obs_flags, dump_obs
+from streaming_sssp import add_obs_flags, dump_obs, obs_paths
 
 
 def main():
@@ -92,10 +92,10 @@ def main():
     add_obs_flags(p)
     args = p.parse_args()
     # fail fast on unwritable observability destinations (exit 2)
-    for path in (args.trace_out, args.log_json):
+    for path in obs_paths(args):
         if path:
             out_path_or_exit(path)
-    obs_on = bool(args.trace_out or args.log_json)
+    obs_on = any(obs_paths(args))
     schedule = "buckets" if args.buckets else "rounds"
 
     if args.dataset:

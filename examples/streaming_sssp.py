@@ -22,15 +22,18 @@ Serving-layer trace flags (DESIGN.md §8):
     # (a missing/incompatible trace path exits with code 2)
     ... streaming_sssp.py --replay-trace /tmp/stream.trace
 
-Observability flags (DESIGN.md §10) — either enables the engine's span
-tracer / counter registry / flight recorder:
+Observability flags (DESIGN.md §10) — any one enables the engine's span
+tracer / counter registry / histograms / flight recorder:
 
     # Chrome trace-event JSON of every epoch/drain/query span (Perfetto)
     ... streaming_sssp.py --trace-out /tmp/stream.trace.json
     # JSONL spans + a final metrics_snapshot line
     ... streaming_sssp.py --log-json /tmp/stream.jsonl
+    # Prometheus exposition text (counters, attribution labels,
+    # histogram buckets — §10.7)
+    ... streaming_sssp.py --metrics-out /tmp/stream.prom
 
-(a nonexistent parent directory for either path exits with code 2)
+(a nonexistent parent directory for any path exits with code 2)
 """
 import argparse
 import time
@@ -48,7 +51,8 @@ from repro.serving import (ServingTrace, TraceRecorder, load_trace_or_exit,
 
 
 def add_obs_flags(p: argparse.ArgumentParser) -> None:
-    """The shared --trace-out/--log-json flags (both examples)."""
+    """The shared --trace-out/--log-json/--metrics-out flags (both
+    examples)."""
     p.add_argument("--trace-out", metavar="PATH",
                    help="write the engine span trace as Chrome trace-event "
                         "JSON (loads in Perfetto; a missing parent "
@@ -56,6 +60,16 @@ def add_obs_flags(p: argparse.ArgumentParser) -> None:
     p.add_argument("--log-json", metavar="PATH",
                    help="write spans + the final metrics_snapshot as JSONL "
                         "(a missing parent directory exits 2)")
+    p.add_argument("--metrics-out", metavar="PATH",
+                   help="write the final metrics_snapshot as Prometheus "
+                        "exposition text — counters, per-partition/lane "
+                        "attribution labels, native histogram buckets "
+                        "(a missing parent directory exits 2)")
+
+
+def obs_paths(args) -> tuple:
+    """Every observability destination an example must validate up front."""
+    return (args.trace_out, args.log_json, args.metrics_out)
 
 
 def dump_obs(eng, args) -> None:
@@ -67,6 +81,10 @@ def dump_obs(eng, args) -> None:
     if args.log_json:
         write_log_jsonl(eng, args.log_json)
         print(f"wrote span/metrics JSONL: {args.log_json}")
+    if args.metrics_out:
+        from repro.obs.export import write_prometheus
+        write_prometheus(args.metrics_out, eng.metrics_snapshot())
+        print(f"wrote prometheus metrics: {args.metrics_out}")
 
 
 def trace_bounds(trace: ServingTrace) -> tuple[int, int]:
@@ -103,10 +121,10 @@ def main():
     add_obs_flags(p)
     args = p.parse_args()
     # fail fast on unwritable observability destinations (exit 2)
-    for path in (args.trace_out, args.log_json):
+    for path in obs_paths(args):
         if path:
             out_path_or_exit(path)
-    obs_on = bool(args.trace_out or args.log_json)
+    obs_on = any(obs_paths(args))
 
     if args.dataset:
         n, trace = repro.load_dataset_or_exit(

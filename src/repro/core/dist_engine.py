@@ -86,6 +86,7 @@ from repro.core.distributed import (DistConfig, DistributedSSSP,
 from repro.core.state import INF, NO_PARENT
 from repro.core.stream import StreamEngineBase
 from repro.launch import mesh as mesh_mod
+from repro.obs import WatchdogConfig
 
 
 EXCHANGES = ("allgather", "delta")
@@ -140,6 +141,8 @@ class ShardedEngineConfig:
     # sharded registry folds per-partition [P] vectors, no new collectives
     observability: bool = False
     obs_flight_capacity: int = 128
+    # stall/divergence watchdog (§10.8); None = off
+    obs_watchdog: "WatchdogConfig | None" = None
     # control-plane implementation (DESIGN.md §11); same knob as
     # EngineConfig.alloc_impl, applied to every per-partition planner
     alloc_impl: str = "columnar"
@@ -175,7 +178,8 @@ class ShardedSSSPDelEngine(StreamEngineBase):
                  relabel: tuple[np.ndarray, np.ndarray, int] | None = None):
         super().__init__(sources=cfg.sources,
                          observability=cfg.observability,
-                         flight_capacity=cfg.obs_flight_capacity)
+                         flight_capacity=cfg.obs_flight_capacity,
+                         watchdog=cfg.obs_watchdog)
         self.cfg = cfg
         if mesh is None:
             mesh = mesh_mod._mk((len(jax.devices()),), ("graph",))
@@ -257,6 +261,9 @@ class ShardedSSSPDelEngine(StreamEngineBase):
                   else self.ds.vertex_sharding_ms())
             self._zero_pend = jax.device_put(np.zeros(shape, np.bool_), sh)
             self._push = self._pull = self._zero_pend
+        # touched-vertex attribution baseline (§10.5): dist as of the last
+        # metrics readout; compared once per snapshot, never per epoch
+        self._obs_dist_mark = self.dist if self.obs.enabled else None
 
     def _epoch_pair(self):
         """The (add_epoch, del_epoch, drain_epoch) triple for the CURRENT
@@ -296,6 +303,34 @@ class ShardedSSSPDelEngine(StreamEngineBase):
         self._bw_cache = (width, live_est)
         return width
 
+    # ------------------------------------------------------- per-epoch obs
+    def _fold_epoch_obs(self) -> None:
+        """Post-epoch §10.6 recording, ZERO device dispatches: the epochs
+        return updated CUMULATIVE round/message counters, so appending the
+        returned array references is enough — consecutive diffs (the same
+        deltas ``drain_waves`` uses) become the per-epoch histogram
+        samples in one stacked fold at snapshot flush."""
+        self.obs.hist_cumulative("hist_waves_per_epoch", self._dev_rounds)
+        self.obs.hist_cumulative("hist_messages_per_epoch",
+                                 self._dev_messages)
+
+    def _obs_pre_snapshot(self) -> None:
+        """Per-partition touched-vertex attribution (§10.5): vertices whose
+        dist changed since the LAST metrics readout, reduced shard-locally
+        to a [P] vector ([S] per-lane batched).  One compare per READOUT —
+        per-epoch diffing would dominate the tiny sharded epochs and break
+        the §10.4 overhead contract."""
+        mark = self._obs_dist_mark
+        if mark is not None and mark.shape == self.dist.shape:
+            upd = per_partition_occupancy(self.dist != mark, self.P,
+                                          self.npp)
+            if self.sources is None:
+                self.obs.counters.add("updates_per_part", upd,
+                                      dim="partition")
+            else:
+                self.obs.counters.add("updates_per_lane", upd, dim="lane")
+        self._obs_dist_mark = self.dist
+
     # ------------------------------------------------------------------ adds
     def _ingest_adds(self, batch: ev.EventBatch) -> None:
         src, dst, w = batch.src, batch.dst, batch.w
@@ -320,17 +355,35 @@ class ShardedSSSPDelEngine(StreamEngineBase):
             if self.obs.enabled:
                 # host-planned figures (§10.1): frontier = distinct inserted
                 # tails; adds_per_part = a [P] numpy tally — no device work
-                self.obs.counters.inc("frontier", len(np.unique(bsrc)))
+                tails = np.unique(bsrc)
+                nf = len(tails)
+                self.obs.counters.inc("frontier", nf)
+                # occupancy histogram sample + per-partition frontier
+                # attribution (owners of the tail vertices) — §10.5/§10.6;
+                # owners partition the tails, so sum(frontier_per_part)
+                # stays == the flat "frontier" counter
+                self.obs.hist_host("hist_frontier_occupancy", nf)
+                self.obs.counters.inc(
+                    "frontier_per_part",
+                    np.bincount(tails.astype(np.int64) // self.npp,
+                                minlength=self.P).astype(np.int64),
+                    dim="partition")
                 per_part = np.zeros(self.P, np.int64)
                 for p, plan in plans:
                     per_part[p] = len(plan.slots)
-                self.obs.counters.inc("adds_per_part", per_part)
+                self.obs.counters.inc("adds_per_part", per_part,
+                                      dim="partition")
+                if self.obs.watchdog is not None:
+                    self.obs.watchdog.observe(
+                        "add_epoch", 0.0, {"frontier": nf})
             gslot, bsrc, bdst, bw = ingest.pad_pow2(
                 gslot.astype(np.int32), bsrc, bdst, bw)
             add_epoch, _, _ = self._epoch_pair()
             if self.bucketed:
                 # deferred settle (DESIGN.md §9): patch the pools, enqueue
-                # the inserted tails as push obligations, no relaxation
+                # the inserted tails as push obligations, no relaxation —
+                # and so no waves/messages histogram sample (the drain's
+                # delta carries those figures)
                 (self.esrc, self.edst, self.ew, self.eact,
                  self._push) = add_epoch(
                     self.dist, self.esrc, self.edst, self.ew, self.eact,
@@ -343,6 +396,8 @@ class ShardedSSSPDelEngine(StreamEngineBase):
                     self.eact, *self.bk.arrays(),
                     jnp.asarray(gslot), jnp.asarray(bsrc), jnp.asarray(bdst),
                     jnp.asarray(bw), self._dev_rounds, self._dev_messages)
+                if self.obs.enabled:
+                    self._fold_epoch_obs()
             self.n_adds += n_acc
             self.n_epochs += 1
 
@@ -369,7 +424,8 @@ class ShardedSSSPDelEngine(StreamEngineBase):
                     per_part = np.zeros(self.P, np.int64)
                     for g, _, _ in parts:
                         per_part[int(g[0] // self.epp)] = len(g)
-                    self.obs.counters.inc("dels_per_part", per_part)
+                    self.obs.counters.inc("dels_per_part", per_part,
+                                          dim="partition")
                 gslot, psrc, pdst = ingest.pad_pow2(
                     gslot.astype(np.int32), psrc, pdst)
                 _, del_epoch, _ = self._epoch_pair()
@@ -404,6 +460,8 @@ class ShardedSSSPDelEngine(StreamEngineBase):
                     if n_mut:
                         self.bk.update_del_arrays(out[3:3 + n_mut])
                     self._dev_rounds, self._dev_messages = out[3 + n_mut:]
+                if self.obs.enabled:
+                    self._fold_epoch_obs()
                 self.n_dels += n_del
                 self.n_epochs += 1
 
@@ -419,10 +477,11 @@ class ShardedSSSPDelEngine(StreamEngineBase):
             # bucket occupancy at drain entry (lazy shard-local sums, §10.1):
             # [P] per-partition row counts, or [S] per-lane totals batched —
             # accumulated on device, drained with the registry snapshot
+            occ_dim = "partition" if self.sources is None else "lane"
             self.obs.counters.add("pending_push", per_partition_occupancy(
-                self._push, self.P, self.npp))
+                self._push, self.P, self.npp), dim=occ_dim)
             self.obs.counters.add("pending_pull", per_partition_occupancy(
-                self._pull, self.P, self.npp))
+                self._pull, self.P, self.npp), dim=occ_dim)
         with self.obs.epoch("drain"):
             _, _, drain_epoch = self._epoch_pair()
             r0 = self._dev_rounds
@@ -436,6 +495,7 @@ class ShardedSSSPDelEngine(StreamEngineBase):
                 # waves this drain spent — a lazy device delta of the same
                 # counter n_rounds reads (bit-consistent by construction)
                 self.obs.counters.add("drain_waves", self._dev_rounds - r0)
+                self._fold_epoch_obs()
 
     def _snapshot(self, lane: int | None) -> tuple[np.ndarray, np.ndarray]:
         """Sharded device->host readback plus the inverse relabeling, if

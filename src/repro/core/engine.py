@@ -51,6 +51,7 @@ from repro.core import ingest, relax
 from repro.core.backends import RELAX_BACKENDS
 from repro.core.state import EdgePool, GraphState, SSSPState
 from repro.core.stream import QueryResult, StreamEngineBase
+from repro.obs import WatchdogConfig
 
 __all__ = ["EngineConfig", "QueryResult", "SSSPDelEngine", "RELAX_BACKENDS"]
 
@@ -94,6 +95,9 @@ class EngineConfig:
     # check_regression gate hold instrumented ingest >= 0.95x uninstrumented
     observability: bool = False
     obs_flight_capacity: int = 128
+    # stall/divergence watchdog (§10.8): a WatchdogConfig arms it (only
+    # meaningful with observability=True); None = off
+    obs_watchdog: "WatchdogConfig | None" = None
     # control-plane implementation (DESIGN.md §11): "columnar" (numpy
     # open-addressing index; the paper-scale default) or "dict" (the Python
     # reference).  Bit-identical outputs either way.
@@ -128,7 +132,8 @@ class SSSPDelEngine(StreamEngineBase):
     def __init__(self, cfg: EngineConfig):
         super().__init__(sources=cfg.sources,
                          observability=cfg.observability,
-                         flight_capacity=cfg.obs_flight_capacity)
+                         flight_capacity=cfg.obs_flight_capacity,
+                         watchdog=cfg.obs_watchdog)
         self.cfg = cfg
         self.alloc = ingest.make_allocator(cfg.edge_capacity,
                                            cfg.on_duplicate, cfg.alloc_impl)
@@ -239,8 +244,14 @@ class SSSPDelEngine(StreamEngineBase):
                 # costs no device dispatch in the hot ingest path (§10.4);
                 # the device-counter path carries the drain-side figures
                 # (drain_waves, pending occupancy) the epochs computed anyway
-                self.obs.counters.inc("frontier",
-                                      len(np.unique(plan.src)))
+                nf = len(np.unique(plan.src))
+                self.obs.counters.inc("frontier", nf)
+                # one occupancy-histogram sample per ADD epoch (§10.6):
+                # sum(hist_frontier_occupancy) == add_epochs
+                self.obs.hist_host("hist_frontier_occupancy", nf)
+                if self.obs.watchdog is not None:
+                    self.obs.watchdog.observe(
+                        "add_epoch", 0.0, {"frontier": nf})
             if self.bucketed:
                 # deferred settle (DESIGN.md §9): record the push obligation
                 # and return — the drain delivers the offers bucket-by-bucket
@@ -370,8 +381,9 @@ class SSSPDelEngine(StreamEngineBase):
             # bucket occupancy at drain entry (lazy device sums, §10.1);
             # [S] per-lane vectors on a batched engine
             occ_push, occ_pull = buckets.pending_occupancy(self._pend)
-            self.obs.counters.add("pending_push", occ_push)
-            self.obs.counters.add("pending_pull", occ_pull)
+            occ_dim = None if self.sources is None else "lane"
+            self.obs.counters.add("pending_push", occ_push, dim=occ_dim)
+            self.obs.counters.add("pending_pull", occ_pull, dim=occ_dim)
         with self.obs.epoch("drain"):
             bw = self._bucket_width()
             if self._route_sparse(self._pend_bound):

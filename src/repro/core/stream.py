@@ -41,7 +41,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import events as ev
-from repro.obs import EngineObs
+from repro.obs import EngineObs, WatchdogConfig
+from repro.obs import hist as hist_mod
 
 
 @dataclasses.dataclass
@@ -58,11 +59,14 @@ class StreamEngineBase:
 
     def __init__(self, sources: tuple[int, ...] | None = None, *,
                  observability: bool = False,
-                 flight_capacity: int = 128) -> None:
+                 flight_capacity: int = 128,
+                 watchdog: "WatchdogConfig | None" = None) -> None:
         # observability layer (DESIGN.md §10): counter registry + span
-        # tracer + flight recorder; every hook no-ops when disabled
+        # tracer + flight recorder + optional stall watchdog; every hook
+        # no-ops when disabled
         self.obs = EngineObs(enabled=observability,
-                             flight_capacity=flight_capacity)
+                             flight_capacity=flight_capacity,
+                             watchdog=watchdog)
         # Batched multi-source serving mode (DESIGN.md §8): ``sources`` is
         # the static tuple of maintained sources; None = classic
         # single-source engine.  ``_lane_of`` routes query sources to rows
@@ -116,18 +120,28 @@ class StreamEngineBase:
     def _accumulate_relax(self, stats) -> None:
         """Fold one relaxation epoch's ``RelaxStats`` into the device
         scalars (lazy add — no host sync).  Batched epochs carry ``[S]``
-        stat vectors; the add broadcasts the initial scalar up."""
+        stat vectors; the add broadcasts the initial scalar up.  With obs
+        on, the same stats also record one sample each for the
+        waves/messages-per-epoch histograms (§10.6) — a host list append,
+        materialized at snapshot flush; still no host sync and no extra
+        dispatch on the hot path."""
         self._dev_rounds = self._dev_rounds + stats.rounds
         self._dev_messages = self._dev_messages + stats.messages
+        if self.obs.enabled:
+            self.obs.hist_device("hist_waves_per_epoch", stats.rounds)
+            self.obs.hist_device("hist_messages_per_epoch", stats.messages)
 
     def _accumulate_delete(self, dstats) -> None:
         """Fold one deletion epoch's ``DeleteStats`` into the device
         scalars; ``affected`` counts as messages (the SetToInfinity
         deliveries), matching the sharded epochs' accounting."""
-        self._dev_rounds = (self._dev_rounds + dstats.invalidation_rounds
-                            + dstats.recompute_rounds)
-        self._dev_messages = (self._dev_messages + dstats.recompute_messages
-                              + dstats.affected)
+        rounds = dstats.invalidation_rounds + dstats.recompute_rounds
+        messages = dstats.recompute_messages + dstats.affected
+        self._dev_rounds = self._dev_rounds + rounds
+        self._dev_messages = self._dev_messages + messages
+        if self.obs.enabled:
+            self.obs.hist_device("hist_waves_per_epoch", rounds)
+            self.obs.hist_device("hist_messages_per_epoch", messages)
 
     # ------------------------------------------------------------- interface
     def _deletion_groups(self, batch: ev.EventBatch
@@ -151,6 +165,12 @@ class StreamEngineBase:
         """Device->host readback of (dist, parent) — one lane of the
         stacked state when ``lane`` is given, everything otherwise."""
         raise NotImplementedError
+
+    def _obs_pre_snapshot(self) -> None:
+        """Engine-specific lazy folds right before the registry snapshot
+        (metrics_snapshot only) — e.g. the sharded engine's per-partition
+        touched-vertex attribution: per-READOUT device work, never
+        per-epoch (§10.4)."""
 
     # ----------------------------------------------------------------- query
     def serves(self, source: int) -> bool:
@@ -204,6 +224,22 @@ class StreamEngineBase:
         with self.obs.epoch("query", lane=lane):
             dist, parent = self._snapshot(lane)
         dt = time.perf_counter() - t0
+        if self.obs.enabled:
+            # result-latency histogram in microseconds (§10.6): total
+            # sample count == the ``queries`` counter by construction
+            us = dt * 1e6
+            self.obs.hist_host("hist_latency_us", us)
+            if lane is not None:
+                # per-lane attribution (§10.5): routed queries tally the
+                # lane and fold the sample into an [S, B] per-lane row
+                S = len(self.sources)
+                one = np.zeros(S, np.int64)
+                one[lane] = 1
+                self.obs.counters.inc("queries_per_lane", one, dim="lane")
+                row = np.zeros((S, hist_mod.NUM_BUCKETS), np.int64)
+                row[lane, hist_mod.bucket_index_np(us)] = 1
+                self.obs.counters.inc("hist_latency_us_per_lane", row,
+                                      dim="lane")
         return QueryResult(dist=dist, parent=parent, latency_s=dt,
                            epoch_stats=self._stream_stats(),
                            source=None if source is None else int(source))
@@ -246,17 +282,30 @@ class StreamEngineBase:
         rounds/messages drained from the SAME ``_dev_rounds`` /
         ``_dev_messages`` device scalars as ``n_rounds`` / ``n_messages``
         (bit-identical by construction), the counter registry's snapshot
-        (its only device_get), span counts, and flight-recorder occupancy.
-        Consumed by ``ServingReport``, both examples, and the benches."""
-        return {
+        (its only device_get), histogram summaries + dimension attribution
+        derived from that SAME snapshot (§10.5/§10.6 — no second
+        device_get), span counts, and flight-recorder occupancy.  Consumed
+        by ``ServingReport``, both examples, the exporters (§10.7) and the
+        benches.  An armed watchdog reviews the snapshot for divergence;
+        its findings land in the *next* snapshot's counters (§10.8)."""
+        if self.obs.enabled:
+            self._obs_pre_snapshot()
+            self.obs.flush_histograms()
+        counters = self.obs.counters.snapshot()
+        snap = {
             "epochs": self.n_epochs, "adds": self.n_adds,
             "dels": self.n_dels, "rounds": self.n_rounds,
             "messages": self.n_messages,
-            "counters": self.obs.counters.snapshot(),
+            "counters": counters,
+            "histograms": hist_mod.summarize(counters),
+            "attribution": self.obs.counters.attribution(counters),
             "spans": self.obs.tracer.span_counts(),
             "flight": {"records": self.obs.recorder.total,
                        "capacity": self.obs.recorder.capacity},
         }
+        if self.obs.watchdog is not None:
+            self.obs.watchdog.review(counters)
+        return snap
 
     def dump_flight_recorder(self, file=None) -> str:
         """Postmortem: write the flight-recorder ring (most recent epoch

@@ -19,6 +19,20 @@ drive:
     swaps layouts; negative deltas clamp to zero.
   * ``obs.counters`` / ``obs.tracer`` / ``obs.recorder`` for direct use
     (device-value accumulation, instants, extra records).
+  * ``obs.hist_device(name, value)`` / ``obs.hist_cumulative(name, value)``
+    / ``obs.hist_host(name, value)`` record histogram samples (§10.6).
+    The device variants are ZERO-dispatch on the hot path: they append
+    the device value (a per-epoch sample, or the engine's cumulative
+    counter whose consecutive diffs are the samples) to a host-side
+    list; ``flush_histograms()`` — called by ``metrics_snapshot()`` —
+    materializes each list in a few stacked one-hot folds that ride the
+    registry's lazy ``+`` and its single ``snapshot()`` device_get.
+    Host samples (query latency) fold as numpy vectors immediately;
+    device and host counts merge under the same ``hist_*`` name.
+  * an optional :class:`~repro.obs.watchdog.Watchdog` (§10.8) armed
+    around every ``epoch()`` region: stalls fire a structured warning +
+    the one-shot dump from a sampler thread, slow-epoch/frontier
+    thresholds are checked synchronously after each epoch.
 
 Disabled (the default) every hook no-ops; the ``obs_overhead`` bench +
 ``check_regression`` gate hold instrumented ingest >= 0.95x
@@ -32,15 +46,17 @@ import time
 from contextlib import contextmanager
 from typing import Any, Iterator
 
+from repro.obs import hist as hist_mod
 from repro.obs.counters import CounterRegistry
 from repro.obs.recorder import FlightRecorder
 from repro.obs.spans import (Span, SpanTracer, load_chrome_trace,
                              span_counts_of)
+from repro.obs.watchdog import Watchdog, WatchdogConfig
 
 __all__ = [
     "CounterRegistry", "EngineObs", "FlightRecorder", "Span", "SpanTracer",
-    "load_chrome_trace", "out_path_or_exit", "span_counts_of",
-    "write_log_jsonl",
+    "Watchdog", "WatchdogConfig", "load_chrome_trace", "out_path_or_exit",
+    "span_counts_of", "write_log_jsonl",
 ]
 
 # span kind -> counter name: every epoch span bumps its counter from the
@@ -55,12 +71,21 @@ _PLURAL = {
 
 
 class EngineObs:
-    def __init__(self, enabled: bool = False, flight_capacity: int = 128):
+    def __init__(self, enabled: bool = False, flight_capacity: int = 128,
+                 watchdog: WatchdogConfig | None = None):
         self.enabled = bool(enabled)
         self.counters = CounterRegistry(self.enabled)
         self.tracer = SpanTracer(self.enabled)
         self.recorder = FlightRecorder(flight_capacity)
+        self.watchdog = (Watchdog(watchdog, self)
+                         if (self.enabled and watchdog is not None) else None)
         self._layout_last: dict[str, int] = {}
+        # pending device histogram samples (§10.6): plain host lists of
+        # device values — appending costs no device dispatch; materialized
+        # by flush_histograms() at snapshot time
+        self._hist_samples: dict[str, list] = {}
+        self._hist_cum: dict[str, list] = {}
+        self._hist_base: dict[str, Any] = {}
         self._dumped = False
 
     @contextmanager
@@ -68,7 +93,10 @@ class EngineObs:
         if not self.enabled:
             yield
             return
+        wd = self.watchdog
         t0 = time.perf_counter()
+        if wd is not None:
+            wd.arm(kind)
         try:
             with self.tracer.span(kind, **attrs):
                 yield
@@ -76,9 +104,71 @@ class EngineObs:
             self.recorder.record(kind, error=repr(exc), **attrs)
             self.dump_on_error(exc)
             raise
+        finally:
+            if wd is not None:
+                wd.disarm()
+        wall = time.perf_counter() - t0
         self.counters.inc(_PLURAL.get(kind, kind + "s"))
-        self.recorder.record(
-            kind, wall_ms=round((time.perf_counter() - t0) * 1e3, 3), **attrs)
+        self.recorder.record(kind, wall_ms=round(wall * 1e3, 3), **attrs)
+        # per-kind dispatch wall-time histogram (§10.6): sample count per
+        # kind equals the kind's counter by construction
+        self.hist_host(f"hist_{kind}_wall_us", wall * 1e6)
+        if wd is not None:
+            wd.observe(kind, wall, attrs)
+
+    # ------------------------------------------------------------- histograms
+    def hist_device(self, name: str, value) -> None:
+        """Record one device histogram sample (scalar, or [S] vector -> S
+        samples) for counter ``name`` — a host-side list append, zero
+        device dispatches on the hot path (§10.6/§10.4); the one-hot folds
+        happen in flush_histograms()."""
+        if self.enabled:
+            self._hist_samples.setdefault(name, []).append(value)
+
+    def hist_cumulative(self, name: str, value) -> None:
+        """Record the engine's CUMULATIVE device counter after an epoch;
+        consecutive diffs of the recorded series are the per-epoch samples
+        (materialized at flush).  For engines whose epochs return updated
+        cumulative counters rather than per-epoch stats — appending the
+        returned array reference costs nothing."""
+        if self.enabled:
+            self._hist_cum.setdefault(name, []).append(value)
+
+    def flush_histograms(self) -> None:
+        """Materialize the pending sample lists into ``hist_*`` counters:
+        a few stacked one-hot scatters per histogram (chunked so a long
+        uninspected run cannot build an unboundedly wide stack op), folded
+        through the registry's lazy ``+`` — no device_get here; the
+        read-back stays ``snapshot()``'s single one."""
+        if not self.enabled or not (self._hist_samples or self._hist_cum):
+            return
+        import jax.numpy as jnp
+        CHUNK = 512
+        for name, samples in self._hist_samples.items():
+            for i in range(0, len(samples), CHUNK):
+                vals = jnp.stack(
+                    [jnp.asarray(s) for s in samples[i:i + CHUNK]])
+                self.counters.add(name, hist_mod.one_hot(vals))
+        self._hist_samples.clear()
+        for name, series in self._hist_cum.items():
+            if not series:
+                continue
+            base = self._hist_base.get(name)
+            if base is None:
+                base = jnp.zeros_like(jnp.asarray(series[0]))
+            full = [base] + series
+            for i in range(0, len(series), CHUNK):
+                seg = jnp.stack(
+                    [jnp.asarray(s) for s in full[i:i + CHUNK + 1]])
+                self.counters.add(name, hist_mod.one_hot(seg[1:] - seg[:-1]))
+            self._hist_base[name] = series[-1]
+            series.clear()
+
+    def hist_host(self, name: str, value: float) -> None:
+        """Fold one host-born histogram sample (e.g. wall-clock latency in
+        microseconds) into counter ``name`` as a numpy one-hot vector."""
+        if self.enabled:
+            self.counters.inc(name, hist_mod.one_hot_np(value))
 
     def note_layout(self, totals: dict[str, int]) -> None:
         """Fold the backend's monotone layout totals (rebuilds,

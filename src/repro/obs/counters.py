@@ -1,4 +1,4 @@
-"""Device-side counter registry (DESIGN.md §10.1).
+"""Device-side counter registry (DESIGN.md §10.1, §10.5).
 
 Extends the §2.4 lazy-stats discipline from two hardwired scalars
 (rounds, messages) to an open set of named counters.  Two kinds live in
@@ -14,6 +14,13 @@ one registry:
     host (planned batch sizes, planner rebuild totals, per-partition numpy
     tallies); ``n`` may be an int or a numpy array and accumulates by
     ``+`` as well.
+
+Vector counters carry an optional **dimension** tag (§10.5): passing
+``dim="partition"`` / ``dim="lane"`` on a write names the axis the vector
+indexes, and ``attribution()`` groups the snapshot's tagged counters by
+dimension — the per-partition / per-lane attribution surface of
+``metrics_snapshot()``.  The tag is pure metadata (a host-side dict
+entry); the fold itself is unchanged.
 
 ``snapshot()`` is the ONLY read-back point: one ``jax.device_get`` over
 the whole device dict (query/checkpoint/report time), mirroring how
@@ -36,35 +43,46 @@ class CounterRegistry:
         self.enabled = enabled
         self._dev: dict[str, jax.Array] = {}
         self._host: dict[str, Any] = {}
+        self._dims: dict[str, str] = {}
 
     # ------------------------------------------------------- device counters
-    def add(self, name: str, value) -> None:
+    def add(self, name: str, value, dim: str | None = None) -> None:
         """Lazily accumulate a device value — shape-agnostic (scalar, [S]
         per-lane, [P] per-partition); never blocks on the device."""
         if not self.enabled:
             return
+        if dim is not None:
+            self._dims[name] = dim
         cur = self._dev.get(name)
         self._dev[name] = value if cur is None else cur + value
 
-    def peak(self, name: str, value) -> None:
+    def peak(self, name: str, value, dim: str | None = None) -> None:
         """High-water-mark fold of a device value (elementwise maximum)."""
         if not self.enabled:
             return
+        if dim is not None:
+            self._dims[name] = dim
         cur = self._dev.get(name)
         self._dev[name] = value if cur is None else np.maximum(cur, value) \
             if isinstance(cur, np.ndarray) else jax.numpy.maximum(cur, value)
 
     # --------------------------------------------------------- host counters
-    def inc(self, name: str, n=1) -> None:
+    def inc(self, name: str, n=1, dim: str | None = None) -> None:
         """Host-side accumulate; ``n`` may be an int or a numpy array (e.g.
         a [P] per-partition tally) — both fold with ``+``."""
         if not self.enabled:
             return
+        if dim is not None:
+            self._dims[name] = dim
         self._host[name] = self._host.get(name, 0) + n
 
     # --------------------------------------------------------------- readout
     def names(self) -> list[str]:
         return sorted(set(self._host) | set(self._dev))
+
+    def dims(self) -> dict[str, str]:
+        """Copy of the name -> dimension tag map (§10.5)."""
+        return dict(self._dims)
 
     def snapshot(self) -> dict[str, Any]:
         """Drain every counter to host values — ONE ``device_get`` over the
@@ -77,4 +95,21 @@ class CounterRegistry:
             for k, v in jax.device_get(self._dev).items():
                 got = int(v) if np.ndim(v) == 0 else np.asarray(v)
                 out[k] = out[k] + got if k in out else got
+        return out
+
+    def attribution(self, snap: dict[str, Any] | None = None
+                    ) -> dict[str, dict[str, Any]]:
+        """Group a snapshot's dimension-tagged counters by dimension:
+        ``{"partition": {"adds_per_part": [P] array, ...},
+           "lane": {"queries_per_lane": [S] array, ...}}``.
+        Pass the snapshot already taken for this readout to avoid a second
+        device_get; with ``snap=None`` one is taken here."""
+        if not self._dims:
+            return {}
+        if snap is None:
+            snap = self.snapshot()
+        out: dict[str, dict[str, Any]] = {}
+        for name, dim in self._dims.items():
+            if name in snap:
+                out.setdefault(dim, {})[name] = snap[name]
         return out

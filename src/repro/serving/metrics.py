@@ -18,7 +18,11 @@ Definitions (matching the paper's evaluation; see DESIGN.md §8.3):
 
 The percentile helpers here are THE shared implementation: benchmarks/
 common.py re-exports ``pctile``/``percentiles`` so the bench sections and
-this harness can never disagree on how a percentile is computed.
+this harness can never disagree on how a percentile is computed.  The
+histogram merge/estimate helpers (``hist_merge``/``hist_percentile``) are
+likewise re-exported from the telemetry layer's ``obs/hist.py``
+(DESIGN.md §10.6) — the replayer's per-tenant and cold/warm figures are
+computed from the same log2 buckets the engines accumulate on device.
 """
 from __future__ import annotations
 
@@ -26,6 +30,9 @@ import dataclasses
 from typing import Any
 
 import numpy as np
+
+from repro.obs.hist import merge as hist_merge
+from repro.obs.hist import percentile as hist_percentile
 
 
 def pctile(xs, q) -> float:
@@ -86,6 +93,16 @@ class ServingReport:
     # epochs/rounds/messages plus the obs counter registry and span counts
     engine_metrics: dict[str, Any] | None = dataclasses.field(default=None,
                                                               repr=False)
+    # per-source (per-tenant) latency: {source_key: {"queries", "cold_ms",
+    # "p50_ms", "p95_ms", "p99_ms"}} — percentile estimates from the §10.6
+    # log2 histogram each tenant's queries fold into during replay; the
+    # key "*" covers unrouted full-state queries
+    per_source: dict[Any, dict[str, float]] | None = dataclasses.field(
+        default=None, repr=False)
+    # cold-vs-warm admission split: each scope's FIRST query is cold (the
+    # tree has never been read back for that tenant), the rest are warm —
+    # the ROADMAP's cold-vs-warm admission latency figure
+    cold_warm: dict[str, float] | None = None
 
     @property
     def stability_parent(self) -> float:
@@ -105,7 +122,12 @@ class ServingReport:
             f"{self.latency_s['p99'] * 1e3:.3f} ms",
             f"stability (1 - parent churn): {self.stability_parent:.4f}",
             f"throughput: {self.events_per_s:.0f} events/s",
-        ])
+        ] + ([
+            f"cold/warm queries: {int(self.cold_warm['cold_queries'])}/"
+            f"{int(self.cold_warm['warm_queries'])}, warm p50/p99 ~ "
+            f"{self.cold_warm['warm_p50_ms']:.3f}/"
+            f"{self.cold_warm['warm_p99_ms']:.3f} ms"
+        ] if self.cold_warm else []))
 
     def to_record(self) -> dict[str, Any]:
         rec = {
@@ -129,4 +151,13 @@ class ServingReport:
             # [S] per-lane vectors stringify via the sink's default=str
             rec["rounds"] = self.engine_metrics.get("rounds")
             rec["messages"] = self.engine_metrics.get("messages")
+        if self.cold_warm is not None:
+            rec["cold_queries"] = int(self.cold_warm["cold_queries"])
+            rec["warm_queries"] = int(self.cold_warm["warm_queries"])
+            rec["latency_cold_p50_ms"] = round(
+                self.cold_warm["cold_p50_ms"], 4)
+            rec["latency_warm_p50_ms"] = round(
+                self.cold_warm["warm_p50_ms"], 4)
+            rec["latency_warm_p99_ms"] = round(
+                self.cold_warm["warm_p99_ms"], 4)
         return rec

@@ -23,7 +23,9 @@ from typing import Callable
 
 from repro.core import events as ev
 from repro.core.stream import QueryResult, StreamEngineBase
-from repro.serving.metrics import ServingReport, churn, percentiles
+from repro.obs import hist as hist_mod
+from repro.serving.metrics import (ServingReport, churn, hist_merge,
+                                   hist_percentile, percentiles)
 from repro.serving.trace import ServingTrace, TraceReader
 
 
@@ -61,6 +63,10 @@ def replay_trace(engine: StreamEngineBase,
     latencies: list[float] = []
     churns: list[dict[str, float]] = []
     prev: dict[object, tuple] = {}
+    # per-tenant latency histograms (§10.6 log2 buckets, microseconds) +
+    # each scope's exact first-query (cold) latency — the cold/warm split
+    lat_hists: dict[object, "hist_mod.np.ndarray"] = {}
+    cold_s: dict[object, float] = {}
     n_queries = 0
     n_events = 0
     n_topo = 0
@@ -94,6 +100,10 @@ def replay_trace(engine: StreamEngineBase,
                 cursor += 1
                 latencies.append(res.latency_s)
                 key = res.source if res.source is not None else "*"
+                if key not in lat_hists:
+                    lat_hists[key] = hist_mod.zeros_np()
+                    cold_s[key] = res.latency_s
+                hist_mod.fold_np(lat_hists[key], res.latency_s * 1e6)
                 if key in prev:
                     pd, pp = prev[key]
                     churns.append(churn(pd, pp, res.dist, res.parent))
@@ -103,6 +113,36 @@ def replay_trace(engine: StreamEngineBase,
     wall = time.perf_counter() - t0
     mean = (lambda k: (sum(c[k] for c in churns) / len(churns))
             if churns else 0.0)
+    # per-tenant p50/p95/p99 from the per-source histograms (estimates in
+    # ms), plus each tenant's exact cold (first-query) latency
+    per_source = {
+        key: {
+            "queries": int(h.sum()),
+            "cold_ms": cold_s[key] * 1e3,
+            "p50_ms": hist_percentile(h, 50) / 1e3,
+            "p95_ms": hist_percentile(h, 95) / 1e3,
+            "p99_ms": hist_percentile(h, 99) / 1e3,
+        }
+        for key, h in lat_hists.items()}
+    # cold/warm split: the warm histogram is the merged per-tenant pool
+    # minus each tenant's cold sample (histograms are additive, so the
+    # subtraction is exact at bucket granularity); cold percentiles come
+    # from the exact first-query latencies
+    cold_warm = None
+    if lat_hists:
+        pooled = hist_merge(*lat_hists.values())
+        cold_hist = hist_merge(*(hist_mod.one_hot_np(v * 1e6)
+                                 for v in cold_s.values()))
+        warm_hist = pooled - cold_hist
+        cold_vals = list(cold_s.values())
+        cold_warm = {
+            "cold_queries": float(cold_hist.sum()),
+            "warm_queries": float(warm_hist.sum()),
+            "cold_p50_ms": percentiles(cold_vals)["p50"] * 1e3,
+            "cold_p99_ms": percentiles(cold_vals)["p99"] * 1e3,
+            "warm_p50_ms": hist_percentile(warm_hist, 50) / 1e3,
+            "warm_p99_ms": hist_percentile(warm_hist, 99) / 1e3,
+        }
     return ServingReport(
         engine=_engine_label(engine),
         n_sources=len(engine.sources) if engine.sources else 1,
@@ -119,4 +159,6 @@ def replay_trace(engine: StreamEngineBase,
         # the engine's own telemetry (DESIGN.md §10) — rounds/messages plus
         # the obs counter/span snapshot when observability is enabled
         engine_metrics=engine.metrics_snapshot(),
+        per_source=per_source or None,
+        cold_warm=cold_warm,
     )

@@ -1,0 +1,76 @@
+"""Subprocess worker: flight-recorder postmortem on the SHARDED path.
+
+Forces an 8-device host mesh, ingests a few healthy epochs through an
+instrumented ``ShardedSSSPDelEngine``, then injects a failure into the
+backend's add staging so the NEXT ``obs.epoch("add_epoch")`` region sees
+an escaping exception.  Asserts the §10.3 contract from inside the dying
+process:
+
+  * the exception propagates (telemetry never swallows engine errors);
+  * ``dump_on_error`` ran exactly once (``obs._dumped``);
+  * the stderr dump carries the injected error AND the healthy epochs
+    recorded before it (the parent test re-asserts this on captured
+    stderr).
+
+Prints "OK <epochs>" on success.
+"""
+import os
+import sys
+
+# must precede any jax import in this process
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import events as ev  # noqa: E402
+from repro.core.dist_engine import (ShardedEngineConfig,  # noqa: E402
+                                    ShardedSSSPDelEngine)
+from repro.graphs import generators, window  # noqa: E402
+
+
+def main() -> None:
+    assert len(jax.devices()) == 8, \
+        f"expected 8 devices, got {len(jax.devices())}"
+    n, src, dst, w = generators.erdos_renyi(64, 256, seed=11)
+    log = window.sliding_window_stream(src, dst, w, window=len(src) // 2,
+                                       delta=0.5, seed=11)
+    eng = ShardedSSSPDelEngine(
+        ShardedEngineConfig(n, len(src) + 64, 0, observability=True))
+
+    batches = list(log.runs())
+    healthy = 0
+    for b in batches:
+        if b.kind == ev.ADD:
+            eng._ingest_adds(b)
+            healthy += 1
+        elif b.kind == ev.DEL:
+            eng._ingest_dels(b)
+        if healthy >= 2 and b.kind == ev.ADD:
+            break
+    assert healthy >= 2, "stream produced too few add batches"
+
+    def boom(*a, **kw):
+        raise RuntimeError("injected epoch failure")
+
+    eng.bk.stage_adds = boom
+    nxt = next(b for b in batches if b.kind == ev.ADD)
+    try:
+        eng._ingest_adds(nxt)
+    except RuntimeError as exc:
+        assert "injected epoch failure" in str(exc), exc
+    else:
+        raise AssertionError("injected failure did not propagate")
+
+    assert eng.obs._dumped, "dump_on_error did not run"
+    # a second failure must not dump again (one-shot)
+    try:
+        eng._ingest_adds(nxt)
+    except RuntimeError:
+        pass
+    print(f"OK {healthy}")
+
+
+if __name__ == "__main__":
+    main()

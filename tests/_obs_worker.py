@@ -85,6 +85,28 @@ def main(trace_out: str) -> None:
     assert int(snap["rounds"]) == int(eng.n_rounds)
     assert int(snap["messages"]) == int(eng.n_messages)
 
+    # §10.6 histogram totals == the flat counters they shadow (bucketed
+    # schedule: waves/messages sample at dels + drains, adds defer)
+    h = snap["histograms"]
+    assert h["latency_us"]["count"] == ct["queries"], (h, ct)
+    assert h["frontier_occupancy"]["count"] == ct["add_epochs"], (h, ct)
+    exp = ct["del_epochs"] + ct["drains"]
+    assert h["waves_per_epoch"]["count"] == exp, (h, ct)
+    assert h["messages_per_epoch"]["count"] == exp, (h, ct)
+
+    # §10.5 per-partition attribution sums == engine totals
+    import numpy as np
+    att = snap["attribution"]["partition"]
+    assert int(np.sum(att["adds_per_part"])) == eng.n_adds, att
+    assert int(np.sum(att["dels_per_part"])) == eng.n_dels, att
+    assert "updates_per_part" in att and "frontier_per_part" in att, att
+
+    # serving report per-source split (§10.6): one source here, so the
+    # cold/warm split must account for every query
+    cw = report.cold_warm
+    assert cw is not None and cw["cold_queries"] >= 1, cw
+    assert cw["cold_queries"] + cw["warm_queries"] == report.queries, cw
+
     print(f"OK {len(events)} {sum(sp.values())} {eng.n_rounds}")
 
 

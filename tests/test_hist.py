@@ -1,0 +1,205 @@
+"""Device-side log2 histograms (DESIGN.md §10.6).
+
+Contracts under test:
+
+  * bucket geometry — bucket 0 catches everything below 1 (and NaN on
+    the host path), bucket ``i`` spans ``[2^(i-1), 2^i)``, the last
+    bucket is open-ended;
+  * the device ``one_hot`` and host ``one_hot_np`` bucket every value
+    identically (the host/device twins must merge under one name);
+  * percentile estimation — exact inside a bucket under linear
+    interpolation, NaN on empty, lower bound for the open last bucket;
+  * end-to-end totals — every histogram an instrumented engine exports
+    counts exactly as many samples as the flat counter it shadows,
+    across the backend x engine x schedule grid;
+  * a batched (multi-source) engine reports per-lane [S, B] latency
+    rows whose pooled total equals the flat query counter.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.dist_engine import ShardedEngineConfig, ShardedSSSPDelEngine
+from repro.core.engine import EngineConfig, SSSPDelEngine
+from repro.graphs import generators, window
+from repro.obs import hist
+
+BACKEND_KW = {
+    "segment": {},
+    "ellpack": dict(ell_init_k=2),
+    "sliced": dict(sliced_slice_rows=32, sliced_hub_k=4, sliced_init_k=1),
+}
+
+
+# ----------------------------------------------------------- bucket geometry
+def test_bucket_edges_are_log2():
+    assert hist.bucket_lo(0) == 0.0 and hist.bucket_hi(0) == 1.0
+    assert hist.bucket_lo(1) == 1.0 and hist.bucket_hi(1) == 2.0
+    assert hist.bucket_lo(5) == 16.0 and hist.bucket_hi(5) == 32.0
+    assert math.isinf(hist.bucket_hi(hist.NUM_BUCKETS - 1))
+    es = hist.edges()
+    assert len(es) == hist.NUM_BUCKETS and es[-1] == math.inf
+    assert es[:-1] == sorted(es[:-1])
+
+
+@pytest.mark.parametrize("value,idx", [
+    (0.0, 0), (0.5, 0), (0.999, 0),
+    (1.0, 1), (1.5, 1), (2.0, 2), (3.99, 2), (4.0, 3),
+    (2.0 ** 21, 22), (2.0 ** 22, 23), (1e30, hist.NUM_BUCKETS - 1),
+])
+def test_host_bucket_index(value, idx):
+    assert hist.bucket_index_np(value) == idx
+
+
+def test_host_bucket_index_nan_and_negative_go_to_bucket_zero():
+    assert hist.bucket_index_np(float("nan")) == 0
+    assert hist.bucket_index_np(-7.0) == 0
+
+
+def test_device_and_host_bucketing_agree():
+    import jax.numpy as jnp
+    vals = [0.0, 0.3, 1.0, 1.9, 2.0, 7.0, 8.0, 1000.0, 2.0 ** 23, 1e30]
+    dev = np.asarray(hist.bucket_index(jnp.asarray(vals, jnp.float32)))
+    host = np.array([hist.bucket_index_np(v) for v in vals])
+    np.testing.assert_array_equal(dev, host)
+
+
+def test_one_hot_scalar_and_vector():
+    oh = np.asarray(hist.one_hot(5.0))
+    assert oh.sum() == 1 and oh[hist.bucket_index_np(5.0)] == 1
+    # an [S] vector folds S samples into one count vector
+    ohv = np.asarray(hist.one_hot(np.array([1.0, 1.5, 900.0])))
+    assert ohv.sum() == 3
+    assert ohv[1] == 2 and ohv[hist.bucket_index_np(900.0)] == 1
+
+
+def test_fold_np_matches_one_hot_np():
+    counts = hist.zeros_np()
+    for v in (0.2, 1.0, 6.0, 6.5, 1e9):
+        hist.fold_np(counts, v)
+    ref = sum((hist.one_hot_np(v) for v in (0.2, 1.0, 6.0, 6.5, 1e9)),
+              hist.zeros_np())
+    np.testing.assert_array_equal(counts, ref)
+    assert hist.total(counts) == 5
+
+
+# ------------------------------------------------------------- percentiles --
+def test_percentile_empty_is_nan():
+    assert math.isnan(hist.percentile(hist.zeros_np(), 50.0))
+
+
+def test_percentile_interpolates_within_bucket():
+    counts = hist.zeros_np()
+    counts[3] = 10                       # bucket [4, 8)
+    assert hist.percentile(counts, 50.0) == pytest.approx(6.0)
+    assert hist.percentile(counts, 100.0) == pytest.approx(8.0)
+
+
+def test_percentile_open_last_bucket_reports_lower_bound():
+    counts = hist.zeros_np()
+    counts[-1] = 4
+    assert hist.percentile(counts, 99.0) == hist.bucket_lo(
+        hist.NUM_BUCKETS - 1)
+
+
+def test_percentile_ranks_across_buckets():
+    counts = hist.zeros_np()
+    counts[1] = 90                       # [1, 2)
+    counts[10] = 10                      # [512, 1024)
+    assert hist.percentile(counts, 50.0) < 2.0
+    assert hist.percentile(counts, 95.0) >= 512.0
+
+
+def test_merge_and_summary():
+    a, b = hist.one_hot_np(1.5), hist.one_hot_np(600.0)
+    m = hist.merge(a, b)
+    assert hist.total(m) == 2
+    s = hist.summary(np.stack([a, b]))   # [S, B] per-lane
+    assert s["count"] == 2
+    assert len(s["per_row_p50"]) == 2
+    assert s["per_row_p50"][0] < 2.0 <= s["per_row_p50"][1]
+
+
+def test_summarize_extracts_hist_prefixed_counters():
+    snap = {"hist_latency_us": hist.one_hot_np(3.0), "queries": 1,
+            "hist_scalar_is_ignored": np.int64(7)}
+    out = hist.summarize(snap)
+    assert set(out) == {"latency_us"}
+    assert out["latency_us"]["count"] == 1
+
+
+# ------------------------------------------- engine totals == flat counters --
+def _stream(seed=3, n=72, m=320):
+    n, src, dst, w = generators.erdos_renyi(n, m, seed=seed)
+    return n, m, window.sliding_window_stream(
+        src, dst, w, window=m // 3, delta=0.5, seed=seed, query_every=m // 2)
+
+
+def _check_totals(eng):
+    eng.query()
+    snap = eng.metrics_snapshot()
+    ct, h = snap["counters"], snap["histograms"]
+    assert h["latency_us"]["count"] == ct["queries"]
+    assert h["frontier_occupancy"]["count"] == ct["add_epochs"]
+    # rounds schedule samples waves/messages at every add+del epoch;
+    # bucketed adds defer relaxation, so the drain's sample stands in
+    expected = (ct["del_epochs"] + ct["drains"] if "drains" in ct
+                else ct["add_epochs"] + ct["del_epochs"])
+    assert h["waves_per_epoch"]["count"] == expected, (h, ct)
+    assert h["messages_per_epoch"]["count"] == expected, (h, ct)
+    for kind, plural in (("add_epoch", "add_epochs"),
+                         ("del_epoch", "del_epochs"), ("query", "queries")):
+        key = f"{kind}_wall_us"
+        if key in h:
+            assert h[key]["count"] == ct[plural], (key, h[key], ct)
+    # a second snapshot re-reads the same cumulative counts — the lazy
+    # flush must not double-fold pending samples
+    again = eng.metrics_snapshot()["histograms"]
+    assert again["waves_per_epoch"]["count"] == expected
+    return snap
+
+
+@pytest.mark.parametrize("backend", sorted(BACKEND_KW))
+@pytest.mark.parametrize("schedule", ["rounds", "buckets"])
+def test_single_engine_histogram_totals(backend, schedule):
+    n, m, log = _stream()
+    eng = SSSPDelEngine(EngineConfig(
+        n, 2 * m, 0, relax_backend=backend, wave_schedule=schedule,
+        observability=True, **BACKEND_KW[backend]))
+    eng.ingest_log(log)
+    _check_totals(eng)
+
+
+@pytest.mark.parametrize("backend", sorted(BACKEND_KW))
+def test_sharded_engine_histogram_totals_and_attribution(backend):
+    n, m, log = _stream()
+    eng = ShardedSSSPDelEngine(ShardedEngineConfig(
+        n, 2 * m, 0, relax_backend=backend, observability=True,
+        **BACKEND_KW[backend]))
+    eng.ingest_log(log)
+    snap = _check_totals(eng)
+    att = snap["attribution"]["partition"]
+    assert int(np.sum(att["adds_per_part"])) == eng.n_adds
+    assert int(np.sum(att["dels_per_part"])) == eng.n_dels
+    assert int(np.sum(att["frontier_per_part"])) == \
+        int(snap["counters"]["frontier"])
+    assert "updates_per_part" in att
+
+
+def test_batched_engine_reports_per_lane_latency_rows():
+    n, m, log = _stream()
+    eng = ShardedSSSPDelEngine(ShardedEngineConfig(
+        n, 2 * m, 0, sources=(0, 1, 2), observability=True))
+    eng.ingest_log(log)
+    for lane in (0, 2, 2):
+        eng.query(source=lane)
+    snap = eng.metrics_snapshot()
+    rows = np.asarray(
+        snap["counters"]["hist_latency_us_per_lane"])
+    assert rows.shape == (3, hist.NUM_BUCKETS)
+    lane_counts = rows.sum(axis=1)
+    assert lane_counts[0] >= 1 and lane_counts[2] >= 2
+    att = snap["attribution"]["lane"]
+    assert int(np.sum(att["queries_per_lane"])) == int(rows.sum())
+    assert "updates_per_lane" in att

@@ -188,7 +188,13 @@ def test_engine_obs_epoch_dumps_flight_recorder_once(capsys):
             raise RuntimeError("boom")
     err = capsys.readouterr().err
     assert "flight recorder" in err and "boom" in err
-    assert obs.counters.snapshot() == {"add_epochs": 1}  # failure not counted
+    snap = obs.counters.snapshot()
+    assert snap["add_epochs"] == 1                       # failure not counted
+    # the successful epoch also folded one wall-time histogram sample;
+    # the failed one folded none
+    assert int(np.sum(snap["hist_add_epoch_wall_us"])) == 1
+    assert "hist_del_epoch_wall_us" not in snap
+    assert set(snap) == {"add_epochs", "hist_add_epoch_wall_us"}
     assert obs.tracer.span_counts() == {"add_epoch": 1, "del_epoch": 1}
     assert [r["kind"] for r in obs.recorder.records()] == \
         ["add_epoch", "del_epoch"]
@@ -375,13 +381,14 @@ def test_out_path_or_exit_contract(tmp_path, capsys):
     assert "error:" in capsys.readouterr().err
 
 
+@pytest.mark.parametrize("flag", ["--trace-out", "--metrics-out"])
 @pytest.mark.parametrize("example", ["streaming_sssp.py",
                                      "sharded_streaming_sssp.py"])
-def test_examples_exit_2_on_bad_trace_out_dir(example, tmp_path):
+def test_examples_exit_2_on_bad_obs_out_dir(example, flag, tmp_path):
     root, env = _example_env()
     proc = subprocess.run(
         [sys.executable, str(root / "examples" / example),
-         "--trace-out", str(tmp_path / "missing_dir" / "out.json")],
+         flag, str(tmp_path / "missing_dir" / "out.json")],
         capture_output=True, text=True, env=env, timeout=120)
     assert proc.returncode == 2, proc.stderr
     assert "error:" in proc.stderr
@@ -399,11 +406,12 @@ def test_example_replay_writes_trace_and_jsonl(tmp_path):
     rec.trace().save(trace_path)
     out_json = str(tmp_path / "spans.chrome.json")
     out_jsonl = str(tmp_path / "spans.jsonl")
+    out_prom = str(tmp_path / "metrics.prom")
     root, env = _example_env()
     proc = subprocess.run(
         [sys.executable, str(root / "examples" / "streaming_sssp.py"),
          "--replay-trace", trace_path, "--trace-out", out_json,
-         "--log-json", out_jsonl],
+         "--log-json", out_jsonl, "--metrics-out", out_prom],
         capture_output=True, text=True, env=env, timeout=300)
     assert proc.returncode == 0, proc.stderr[-3000:]
     events = load_chrome_trace(out_json)
@@ -414,6 +422,12 @@ def test_example_replay_writes_trace_and_jsonl(tmp_path):
     assert final["kind"] == "metrics_snapshot"
     assert final["spans"] == counts
     assert final["counters"]["add_epochs"] == counts["add_epoch"]
+    # the Prometheus artifact agrees with both other views (§10.7)
+    from repro.obs.export import parse_prometheus_text
+    parsed = parse_prometheus_text(Path(out_prom).read_text())
+    assert parsed["repro_add_epochs"][()] == counts["add_epoch"]
+    assert parsed["repro_hist_latency_us_count"][()] == \
+        final["counters"]["queries"]
 
 
 # ------------------------------------------------------- P=8 acceptance run --
@@ -435,3 +449,25 @@ def test_obs_p8_acceptance_subprocess(tmp_path):
     counts = span_counts_of(events)
     assert counts.get("add_epoch", 0) > 0 and counts.get("drain", 0) > 0
     assert counts.get("rebuild", 0) > 0
+
+
+def test_obs_p8_crash_dumps_flight_recorder_subprocess():
+    """Satellite scenario: a failing epoch on the SHARDED (P=8) path must
+    dump the flight recorder postmortem to stderr exactly once, carrying
+    the injected error and the healthy epochs recorded before it."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_obs_crash_worker.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-3000:]}"
+    assert proc.stdout.strip().startswith("OK"), proc.stdout
+    err = proc.stderr
+    assert err.count("flight recorder postmortem") == 1, err[-2000:]
+    assert "RuntimeError('injected epoch failure')" in err, err[-2000:]
+    # the dump carries the healthy epochs recorded BEFORE the failure
+    lines = [ln for ln in err.splitlines() if ln.startswith("{")]
+    assert any('"error"' in ln for ln in lines), err[-2000:]
+    assert any('"wall_ms"' in ln and "add_epoch" in ln
+               for ln in lines), err[-2000:]

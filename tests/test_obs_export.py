@@ -1,0 +1,130 @@
+"""Metrics export surface (DESIGN.md §10.7): Prometheus text, JSONL,
+and the stdlib HTTP endpoint.
+
+The round-trip contract: everything the renderer emits parses back
+bit-equal through ``parse_prometheus_text`` — scalar counters, the
+dimension-labeled attribution vectors, native histogram ``_bucket``
+series (cumulative, ending in ``+Inf``) whose final count equals the
+engine's flat counter, and the p50/p95/p99 gauges.  The HTTP server is
+exercised over a real socket with stdlib urllib only.
+"""
+import json
+import math
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, SSSPDelEngine
+from repro.core.dist_engine import ShardedEngineConfig, ShardedSSSPDelEngine
+from repro.graphs import generators, window
+from repro.obs import hist
+from repro.obs.export import (JsonlMetricsWriter, MetricsServer,
+                              parse_prometheus_text, prometheus_text,
+                              write_prometheus)
+
+
+def _engine(sharded=False):
+    n, src, dst, w = generators.erdos_renyi(64, 256, seed=9)
+    log = window.sliding_window_stream(src, dst, w, window=128, delta=0.5,
+                                       seed=9, query_every=128)
+    cls, cfg = ((ShardedSSSPDelEngine, ShardedEngineConfig) if sharded
+                else (SSSPDelEngine, EngineConfig))
+    eng = cls(cfg(n, len(src) + 64, 0, observability=True))
+    eng.ingest_log(log)
+    eng.query()
+    return eng
+
+
+# ----------------------------------------------------------- text renderer --
+def test_prometheus_text_round_trips_scalars_and_histograms():
+    eng = _engine()
+    snap = eng.metrics_snapshot()
+    parsed = parse_prometheus_text(prometheus_text(snap))
+
+    for key in ("epochs", "rounds", "messages"):
+        assert parsed[f"repro_{key}"][()] == float(snap[key])
+    for name, value in snap["counters"].items():
+        if np.ndim(value) == 0:
+            assert parsed[f"repro_{name}"][()] == float(value)
+
+    # histogram: cumulative buckets end at +Inf and _count == the total
+    ct = snap["counters"]
+    buckets = parsed["repro_hist_latency_us_bucket"]
+    les = sorted(float(k[0][1]) if k[0][1] != "+Inf" else math.inf
+                 for k in buckets)
+    assert len(les) == hist.NUM_BUCKETS and les[-1] == math.inf
+    cums = [v for _, v in sorted(
+        buckets.items(),
+        key=lambda kv: float(kv[0][0][1]) if kv[0][0][1] != "+Inf"
+        else math.inf)]
+    assert cums == sorted(cums)          # cumulative: monotone
+    assert parsed["repro_hist_latency_us_count"][()] == float(ct["queries"])
+
+    # percentile gauges ride along
+    assert "repro_latency_us_p50" in parsed
+
+
+def test_prometheus_labels_carry_attribution_dims():
+    eng = _engine(sharded=True)
+    snap = eng.metrics_snapshot()
+    parsed = parse_prometheus_text(prometheus_text(snap))
+    series = parsed["repro_adds_per_part"]
+    P = len(snap["attribution"]["partition"]["adds_per_part"])
+    assert set(series) == {(("partition", str(i)),) for i in range(P)}
+    assert sum(series.values()) == float(eng.n_adds)
+
+
+def test_prometheus_inf_nan_formatting():
+    from repro.obs.export import _fmt
+    assert _fmt(math.inf) == "+Inf" and _fmt(-math.inf) == "-Inf"
+    assert _fmt(float("nan")) == "NaN"
+    assert _fmt(3.0) == "3" and _fmt(2.5) == "2.5"
+    t = parse_prometheus_text('m_bucket{le="+Inf"} 4\nm2 NaN\n')
+    assert t["m_bucket"][(("le", "+Inf"),)] == 4.0
+    assert math.isnan(t["m2"][()])
+
+
+def test_write_prometheus_file(tmp_path):
+    eng = _engine()
+    path = str(tmp_path / "metrics.prom")
+    write_prometheus(path, eng.metrics_snapshot())
+    parsed = parse_prometheus_text(open(path).read())
+    assert parsed["repro_epochs"][()] == float(eng.n_epochs)
+
+
+# ------------------------------------------------------------------- JSONL --
+def test_jsonl_writer_appends_sequenced_snapshots(tmp_path):
+    eng = _engine()
+    path = str(tmp_path / "metrics.jsonl")
+    wr = JsonlMetricsWriter(path, eng.metrics_snapshot)
+    wr.dump()
+    eng.query()
+    wr.dump()
+    lines = [json.loads(ln) for ln in open(path)]
+    assert [ln["seq"] for ln in lines] == [0, 1]
+    q0 = lines[0]["metrics"]["counters"]["queries"]
+    q1 = lines[1]["metrics"]["counters"]["queries"]
+    assert q1 == q0 + 1
+    # everything is plain JSON — histograms included
+    assert lines[1]["metrics"]["histograms"]["latency_us"]["count"] == q1
+
+
+# -------------------------------------------------------------------- HTTP --
+def test_metrics_server_serves_text_and_json():
+    eng = _engine()
+    srv = MetricsServer(eng.metrics_snapshot, port=0)
+    try:
+        body = urllib.request.urlopen(srv.url, timeout=10).read().decode()
+        parsed = parse_prometheus_text(body)
+        assert parsed["repro_epochs"][()] == float(eng.n_epochs)
+        jurl = srv.url.rsplit("/", 1)[0] + "/metrics.json"
+        js = json.loads(
+            urllib.request.urlopen(jurl, timeout=10).read().decode())
+        assert js["counters"]["queries"] == \
+            parsed["repro_queries"][()]
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(
+                srv.url.rsplit("/", 1)[0] + "/nope", timeout=10)
+    finally:
+        srv.close()

@@ -255,6 +255,40 @@ def test_trace_record_replay_roundtrip_determinism(tmp_path):
         assert key in rec
 
 
+def test_report_per_source_latency_and_cold_warm_split():
+    """§10.6 serving attribution: the report breaks latency down per query
+    source (log2-histogram p50/p95/p99 estimates + each tenant's exact
+    cold first-query latency) and splits cold vs warm exactly — every
+    query lands in one side, one cold per distinct scope."""
+    n, m, log = _dynamic_stream(seed=19)
+    trace = _multi_source_trace(log, SOURCES)
+    eng = SSSPDelEngine(EngineConfig(n, m + 64, SOURCES[0],
+                                     sources=SOURCES))
+    rep = replay_trace(eng, trace)
+
+    ps = rep.per_source
+    assert ps is not None
+    # the trace carries routed queries for every source (plus the
+    # stream's own -1 markers answered as the full-stack "*" scope)
+    assert set(SOURCES) <= set(k for k in ps if k != "*")
+    assert sum(e["queries"] for e in ps.values()) == rep.queries
+    for entry in ps.values():
+        assert entry["queries"] >= 1 and entry["cold_ms"] > 0
+        assert entry["p50_ms"] <= entry["p95_ms"] <= entry["p99_ms"]
+
+    cw = rep.cold_warm
+    assert cw is not None
+    assert cw["cold_queries"] == len(ps)          # one cold per scope
+    assert cw["cold_queries"] + cw["warm_queries"] == rep.queries
+    assert cw["cold_p50_ms"] > 0 and cw["warm_p50_ms"] > 0
+
+    rec = rep.to_record()
+    for key in ("cold_queries", "warm_queries", "latency_cold_p50_ms",
+                "latency_warm_p50_ms", "latency_warm_p99_ms"):
+        assert key in rec
+    assert "cold" in rep.summary() and "warm" in rep.summary()
+
+
 def test_trace_replay_drives_sharded_engine(tmp_path):
     """The replayer is engine-agnostic: the same trace through the sharded
     batched engine matches the single-device batched engine."""
